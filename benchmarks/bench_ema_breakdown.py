@@ -1,0 +1,47 @@
+"""Paper Fig. 1(b) / §I — EMA + compute breakdown of one UNet iteration.
+
+Baseline (INT12 act / INT8 weight, no compression), full BK-SDM-Tiny
+geometry.  Paper numbers: 1.9 GB EMA/iter; transformer stage 87.0 % of EMA;
+self-attention 78.2 % of transformer EMA; SAS alone 61.8 % of total EMA;
+FFN 42.5 % of transformer-stage computation.
+"""
+from __future__ import annotations
+
+from repro.diffusion import ledger as L
+from repro.diffusion.unet import BK_SDM_TINY
+
+
+def run() -> dict:
+    rep = L.iteration_report(BK_SDM_TINY, L.LedgerOptions())
+    led = L.unet_ledger(BK_SDM_TINY, L.LedgerOptions())
+    tx_stages = ("self_attn", "cross_attn", "ffn")
+    tx_ema = sum(rep.ema_bytes_by_stage.get(s, 0.0) for s in tx_stages)
+    sa_ema = rep.ema_bytes_by_stage.get("self_attn", 0.0)
+
+    tx_macs = sum(l.macs_high + l.macs_low for l in led
+                  if l.stage in tx_stages)
+    ffn_macs = sum(l.macs_high + l.macs_low for l in led
+                   if l.stage == "ffn")
+    cnn_macs = sum(l.macs_high + l.macs_low for l in led
+                   if l.stage == "cnn")
+
+    return {
+        "ema_gb_per_iter": rep.ema_bytes_total / 1e9,
+        "transformer_ema_fraction": tx_ema / rep.ema_bytes_total,
+        "self_attn_fraction_of_transformer_ema": sa_ema / tx_ema,
+        "sas_fraction_of_total_ema": rep.sas_fraction,
+        "ffn_fraction_of_transformer_macs": ffn_macs / tx_macs,
+        "cnn_fraction_of_total_macs": cnn_macs / (tx_macs + cnn_macs),
+        "total_gmacs_per_iter": (tx_macs + cnn_macs) / 1e9,
+        "ema_by_stage_gb": {k: v / 1e9
+                            for k, v in rep.ema_bytes_by_stage.items()},
+        "paper": {"ema_gb_per_iter": 1.9, "transformer_ema_fraction": 0.870,
+                  "self_attn_fraction_of_transformer_ema": 0.782,
+                  "sas_fraction_of_total_ema": 0.618,
+                  "ffn_fraction_of_transformer_macs": 0.425},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

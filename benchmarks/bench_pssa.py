@@ -1,0 +1,104 @@
+"""Paper Fig. 5 — PSSA compression vs baseline / RLE / global CSR.
+
+Measures, at the TRUE BK-SDM self-attention resolutions (64/32/16 -> patch
+sizes 64/32/16), the SAS EMA bytes under four schemes:
+
+  baseline   — dense SAS, INT12
+  RLE        — pruned values + zero-run-length index stream
+  CSR        — pruned values + one global CSR index
+  PSSA       — pruned values + patch-XOR'd, per-patch local CSR index
+
+Every scheme gets the dense-bypass a real DMA engine would use (one mode bit:
+store dense when "compression" expands — which happens at the small
+resolutions where the fixed threshold prunes nothing).
+
+Calibration: the smoke UNet is untrained, so attention-score statistics come
+from ``synthetic_sas`` (spatially-local, peaked rows).  One scalar —
+sharpness — is bisected so the T=4096 pruned density sits at the paper's
+operating point (the density where its 61.2 % SAS EMA cut is arithmetically
+reachable, ~1/3); everything downstream (XOR win, index sizes, per-scheme
+deltas, total-EMA cut) is *measured*, not assumed.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.synthetic_sas import synthetic_sas
+from repro.core import pssa
+from repro.diffusion import ledger as L
+from repro.diffusion.unet import BK_SDM_TINY
+
+POINTS = [(64, 8), (32, 8), (16, 8)]       # (resolution, heads)
+TARGET_DENSITY_64 = 1.0 / 3.0
+
+
+def calibrate_sharpness(key, target=TARGET_DENSITY_64, lo=0.2, hi=3.0,
+                        iters=8) -> float:
+    """Bisect sharpness so pruned density at res 64 hits ``target``."""
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        sas = synthetic_sas(key, 64, heads=2, sharpness=mid)
+        st = pssa.compress_stats(sas, patch=64)
+        d = float(st.nnz / st.total)
+        if d > target:
+            lo = mid          # too dense -> sharpen
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def measure(sharpness: float, seed: int = 0):
+    """-> (per-res stats, aggregate bytes per scheme with dense-bypass)."""
+    rows = {}
+    agg = {"baseline": 0.0, "rle": 0.0, "csr": 0.0, "pssa": 0.0,
+           "idx_rle": 0.0, "idx_csr": 0.0, "idx_pssa": 0.0}
+    for res, heads in POINTS:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), res)
+        sas = synthetic_sas(key, res, heads=heads, sharpness=sharpness)
+        patch = BK_SDM_TINY.patch_size(res)
+        st = pssa.compress_stats(sas, patch=patch)
+        rows[res] = st
+        dense = float(st.bytes_baseline)
+        agg["baseline"] += dense
+        agg["rle"] += min(dense, float(st.bytes_values + st.bytes_index_rle))
+        agg["csr"] += min(dense,
+                          float(st.bytes_values + st.bytes_index_csr_global))
+        agg["pssa"] += min(dense, float(st.bytes_pssa_total))
+        agg["idx_rle"] += float(st.bytes_index_rle)
+        agg["idx_csr"] += float(st.bytes_index_csr_global)
+        agg["idx_pssa"] += float(st.bytes_index_pssa)
+    return rows, agg
+
+
+def run() -> dict:
+    sharp = calibrate_sharpness(jax.random.PRNGKey(42))
+    rows, agg = measure(sharp)
+    sas_ratio = {res: min(1.0, float(st.bytes_pssa_total
+                                     / st.bytes_baseline))
+                 for res, st in rows.items()}
+
+    base_rep = L.iteration_report(BK_SDM_TINY, L.LedgerOptions())
+    opt_rep = L.iteration_report(
+        BK_SDM_TINY, L.LedgerOptions(pssa=True, sas_ratio=sas_ratio))
+
+    return {
+        "calibrated_sharpness": sharp,
+        "density_by_res": {res: float(st.nnz / st.total)
+                           for res, st in rows.items()},
+        "sas_ratio_by_res": sas_ratio,
+        "sas_ema_reduction_vs_baseline": 1 - agg["pssa"] / agg["baseline"],
+        "sas_ema_reduction_vs_rle": 1 - agg["pssa"] / agg["rle"],
+        "sas_ema_reduction_vs_csr": 1 - agg["pssa"] / agg["csr"],
+        "index_reduction_vs_rle": 1 - agg["idx_pssa"] / agg["idx_rle"],
+        "index_reduction_vs_csr": 1 - agg["idx_pssa"] / agg["idx_csr"],
+        "total_ema_reduction": 1 - (opt_rep.ema_bytes_total
+                                    / base_rep.ema_bytes_total),
+        "paper": {"sas_vs_baseline": 0.612, "sas_vs_rle": 0.467,
+                  "sas_vs_csr": 0.385, "idx_vs_rle": 0.836,
+                  "idx_vs_csr": 0.795, "total_ema": 0.378},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

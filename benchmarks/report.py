@@ -1,0 +1,74 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from records."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import load_records, roofline_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | FLOPs/dev | bytes/dev | coll(w)/dev | "
+        "args GB/dev | temp GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(load_records(mesh).items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped (full-attn @524k) "
+                         "| — | — | — | — | — | — |")
+            continue
+        e = r["extrapolated"]
+        m = r["memory_analysis"]
+        lines.append(
+            f"| {arch} | {shape} | ok | {e['flops']:.2e} | "
+            f"{e['bytes_accessed']:.2e} | "
+            f"{e['collective_bytes']['weighted']:.2e} | "
+            f"{m['argument_size_in_bytes'] / 1e9:.2f} | "
+            f"{m['temp_size_in_bytes'] / 1e9:.2f} | {r['compile_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | kind | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for (arch, shape), rec in sorted(load_records(mesh).items()):
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_kind']} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def variant_rows():
+    """All __variant perf records + their baselines, as dicts."""
+    out = []
+    for name in sorted(os.listdir(RESULTS)):
+        if name.startswith("dryrun_") and "__" in name:
+            out.append(json.load(open(os.path.join(RESULTS, name))))
+        if name.startswith("baseline_dryrun_"):
+            r = json.load(open(os.path.join(RESULTS, name)))
+            r["variant"] = "BASELINE"
+            out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    print("## Dry-run 16x16\n")
+    print(dryrun_table("16x16"))
+    print("\n## Dry-run 2x16x16\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Roofline (16x16)\n")
+    print(roofline_table())

@@ -1,0 +1,131 @@
+"""Roofline analysis from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh, three terms in seconds:
+
+  compute term    = exec_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = per-device weighted collective bytes / link_bw
+
+Sources.  ``bytes_accessed`` / collective bytes come from the dry-run's
+compiled artifact (scan-linearized: XLA counts a while-loop body once; the
+layer stack is uniform so terms are affine in L).  For *executed FLOPs* the
+CPU backend's ``cost_analysis()`` is unreliable (it loses remat recompute
+and some fused dots), so the roofline uses the exact loop-aware jaxpr walk
+(``launch.flops``) as the primary source and the HLO number as a
+cross-check — both are recorded.
+
+MODEL_FLOPS is the standard MFU numerator (6*N*D train / 2*N*D prefill,
+active params for MoE).  The reported roofline fraction is kind-aware:
+
+  train/prefill:  (model_flops/dev / peak) / max(term)   — FLOP roofline
+  decode:         (min_bytes/dev / HBM_bw) / max(term)   — bandwidth roofline
+                  (decode is bandwidth-bound; FLOP-MFU is meaningless there)
+
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.model_flops import (model_bytes_decode, model_flops,
+                                      param_count)
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_records(mesh: str = "16x16"):
+    out = {}
+    for name in sorted(os.listdir(RESULTS)):
+        if not name.startswith("dryrun_") or "__" in name:
+            continue                     # skip __variant perf experiments
+        r = json.load(open(os.path.join(RESULTS, name)))
+        if r["mesh"] != mesh:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    dev = rec["devices"]
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+
+    e = rec.get("extrapolated") or rec
+    hlo_flops_dev = max(e["flops"], rec["flops"])
+    bytes_dev = max(e["bytes_accessed"], rec["bytes_accessed"])
+    coll_dev = max(e["collective_bytes"]["weighted"],
+                   rec["collective_bytes"]["weighted"])
+    exec_flops_dev = max(hlo_flops_dev,
+                         rec.get("jaxpr_flops_global", 0.0) / dev)
+
+    t_compute = exec_flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = terms[dominant]
+
+    mf_dev = model_flops(cfg, shape) / dev
+    useful = mf_dev / exec_flops_dev if exec_flops_dev else 0.0
+    if shape.kind == "decode":
+        mb_dev = model_bytes_decode(cfg, shape) / dev
+        frac = (mb_dev / HBM_BW) / t_bound if t_bound else 0.0
+        kind = "bandwidth"
+    else:
+        frac = (mf_dev / PEAK_FLOPS) / t_bound if t_bound else 0.0
+        kind = "flops"
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "exec_flops_per_device": exec_flops_dev,
+        "hlo_flops_per_device": hlo_flops_dev,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": useful,
+        "roofline_kind": kind,
+        "roofline_fraction": frac,
+        "params_b": param_count(cfg) / 1e9,
+    }
+
+
+def run(mesh: str = "16x16") -> list:
+    rows = []
+    for (arch, shape), rec in load_records(mesh).items():
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    return rows
+
+
+def format_table(rows: list) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'dom':>10s} {'useful':>7s} {'kind':>10s} "
+           f"{'roofline':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+            f"{r['t_collective_s']:9.4f} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['roofline_kind']:>10s} "
+            f"{r['roofline_fraction']:8.3f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(format_table(rows))
+    print("\nworst cells (hillclimb candidates):")
+    for r in rows[:6]:
+        print(f"  {r['arch']} x {r['shape']}: dom={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f}")

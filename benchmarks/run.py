@@ -1,0 +1,64 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+  bench_ema_breakdown — Fig. 1(b): 1.9 GB/iter EMA + stage breakdown
+  bench_pssa          — Fig. 5:   PSSA vs baseline/RLE/CSR + index overhead
+  bench_tips          — Fig. 9(b): TIPS low-precision ratio per iteration
+  bench_dbsc          — Fig. 9(c): DBSC FFN energy efficiency + exactness
+  bench_energy_iter   — Table I:  28.6 / 213.3 mJ per iteration
+  roofline            — §Roofline table from the dry-run records
+
+Each section prints measured vs paper numbers; exit code 1 if any section
+errors.  Results also land in benchmarks/results/bench_<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _section(name, fn):
+    t0 = time.perf_counter()
+    print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
+    try:
+        out = fn()
+        dt = time.perf_counter() - t0
+        print(json.dumps(out, indent=2, default=str)[:4000])
+        print(f"[{name} ok in {dt:.1f}s]")
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, f"bench_{name}.json"), "w") as f:
+            json.dump(out, f, indent=1, default=str)
+        return True
+    except Exception:
+        traceback.print_exc()
+        print(f"[{name} FAILED]")
+        return False
+
+
+def main() -> None:
+    from benchmarks import (bench_dbsc, bench_ema_breakdown,
+                            bench_energy_iter, bench_pssa, bench_tips,
+                            roofline)
+
+    ok = True
+    ok &= _section("ema_breakdown", bench_ema_breakdown.run)
+    ok &= _section("pssa", bench_pssa.run)
+    ok &= _section("tips", bench_tips.run)
+    ok &= _section("dbsc", bench_dbsc.run)
+    ok &= _section("energy_iter", bench_energy_iter.run)
+
+    def _roof():
+        rows = roofline.run()
+        print(roofline.format_table(rows))
+        return {"cells": len(rows),
+                "worst": rows[:3], "best": rows[-3:]}
+    ok &= _section("roofline", _roof)
+
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

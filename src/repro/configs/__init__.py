@@ -1,0 +1,23 @@
+"""Config registry: 10 assigned architectures + the paper's own BK-SDM."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, shape_applicable  # noqa: F401
+
+
+def get_arch(name: str) -> ArchConfig:
+    import importlib
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+ARCH_NAMES = [
+    "mamba2-130m",
+    "qwen2-moe-a2.7b",
+    "llama4-scout-17b-a16e",
+    "yi-34b",
+    "chatglm3-6b",
+    "llama3-8b",
+    "yi-9b",
+    "internvl2-26b",
+    "musicgen-large",
+    "hymba-1.5b",
+]

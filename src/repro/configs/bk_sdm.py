@@ -1,0 +1,21 @@
+"""The paper's own workload: BK-SDM-Tiny text-to-image pipeline.
+
+Not one of the 10 assigned LM architectures — this is the diffusion config
+the processor was evaluated on (MS-COCO, 25 DDIM iterations).  Exposed here
+so ``--arch bk-sdm`` selects the paper-faithful pipeline in examples and
+benchmarks.  See ``repro.diffusion`` for the model itself.
+"""
+from repro.diffusion.pipeline import PipelineConfig
+from repro.diffusion.sampler import DDIMConfig
+from repro.diffusion.text_encoder import TextEncoderConfig
+from repro.diffusion.unet import UNetConfig
+from repro.diffusion.vae import VAEConfig
+
+CONFIG = PipelineConfig(
+    unet=UNetConfig(),            # BK-SDM-Tiny geometry (full)
+    text=TextEncoderConfig(),     # CLIP ViT-L/14 text tower geometry
+    vae=VAEConfig(),
+    ddim=DDIMConfig(num_inference_steps=25),
+)
+
+SMOKE = PipelineConfig.smoke()

@@ -1,0 +1,24 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+24L d_model=768, attention-free, d_ff=0, vocab=50280, ssm_state=128.
+PSSA/TIPS inapplicable (no attention scores) — see DESIGN.md §6.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    head_dim=1,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    subquadratic=True,
+    pssa=False,
+    tips=False,
+)

@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — PSSA, TIPS, DBSC quant, energy model."""
+from repro.core import attention, energy, pssa, quant, tips  # noqa: F401

@@ -1,0 +1,61 @@
+"""Attention modules with the paper's features folded in (pure JAX).
+
+``self_attention_pssa``  — pixel-wise self-attention whose post-softmax score
+matrix is threshold-pruned (PSSA step 1) before the value matmul, and whose
+compression statistics are returned for the EMA ledger.
+
+``cross_attention_tips`` — cross-attention that additionally emits the CLS
+attention score per query (CAS) for the IPSU (TIPS spotting).
+
+Both are deliberately materializing the score matrix — that is the paper's
+dataflow (SAS spills to DRAM) and the thing PSSA compresses.  The Pallas
+kernels in ``repro.kernels.pssa_attention`` implement the blocked/fused
+TPU-native version used by the performance path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pssa, tips
+
+
+class SelfAttnOut(NamedTuple):
+    out: jax.Array
+    stats: pssa.PSSAStats
+
+
+def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
+                        patch: int,
+                        threshold: float = pssa.DEFAULT_THRESHOLD,
+                        prune_scores: bool = True) -> SelfAttnOut:
+    """(B, H, T, d) q/k/v -> (B, H, T, d); scores pruned at `threshold`."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    if prune_scores:
+        probs_used = pssa.prune(probs, threshold)
+    else:
+        probs_used = probs
+    stats = pssa.compress_stats(probs, patch, threshold)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs_used, v)
+    return SelfAttnOut(out=out, stats=stats)
+
+
+class CrossAttnOut(NamedTuple):
+    out: jax.Array
+    tips_result: tips.TIPSResult
+
+
+def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
+                         threshold: float,
+                         cls_index: int = 0) -> CrossAttnOut:
+    """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_text) / jnp.sqrt(float(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    spotted = tips.spot(probs, threshold, cls_index)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_text)
+    return CrossAttnOut(out=out, tips_result=spotted)

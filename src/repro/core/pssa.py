@@ -1,0 +1,162 @@
+"""PSSA — Patch Similarity-based Sparsity Augmentation (paper §III).
+
+Compresses the self-attention score (SAS) matrix before it is written to
+external memory:
+
+  1. *Prune*: zero all post-softmax scores below a fixed threshold.
+  2. *Patch-XOR*: the SAS of a pixel-wise self-attention layer over an HxW
+     feature map decomposes into (H*H) patches of shape (W, W) — query-row x
+     key-row.  Adjacent patches along the key-row (horizontal) direction are
+     similar, so XOR-ing adjacent *bitmap* patches yields a much sparser
+     delta bitmap.  The first patch of each group is kept verbatim.
+  3. *Local CSR*: each (possibly delta-) patch bitmap is CSR-encoded
+     independently; small patches need small col indices (log2 W bits) and
+     small row pointers, which beats one global CSR.
+
+Everything here computes *exact* compressed byte counts so the energy model
+is bytes-accurate.  The compression itself is lossless given the pruned SAS.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Fixed prune threshold on softmax scores (2^-13 — hardware-friendly).  The
+# paper only says "predefined fixed threshold"; the value pins the operating
+# point: a threshold t caps post-softmax density at 1/(t*T), and 2^-13 puts
+# the T=4096 self-attention layers (the EMA-dominant ones) at the density
+# where the paper's measured 61.2 % SAS EMA reduction is reachable.
+DEFAULT_THRESHOLD = 1.0 / 8192.0
+
+
+class PSSAStats(NamedTuple):
+    """Byte-exact accounting of one SAS compression (all float scalars)."""
+    nnz: jax.Array                # surviving scores after pruning
+    total: jax.Array              # Tq * Tk elements
+    bitmap_ones_raw: jax.Array    # ones in the pruned bitmap
+    bitmap_ones_xor: jax.Array    # ones after patch-XOR (what CSR encodes)
+    bytes_baseline: jax.Array     # dense SAS, no compression
+    bytes_values: jax.Array       # payload of surviving values
+    bytes_index_csr_global: jax.Array   # plain CSR over whole SAS (no XOR)
+    bytes_index_rle: jax.Array          # run-length encoding of the bitmap
+    bytes_index_pssa: jax.Array         # local per-patch CSR over XOR bitmap
+    bytes_pssa_total: jax.Array         # values + PSSA index
+
+
+def prune(sas: jax.Array, threshold: float = DEFAULT_THRESHOLD) -> jax.Array:
+    """Unstructured threshold pruning of post-softmax scores."""
+    return jnp.where(sas >= threshold, sas, 0.0)
+
+
+def bitmap(sas_pruned: jax.Array) -> jax.Array:
+    return (sas_pruned != 0.0)
+
+
+def patch_xor(bm: jax.Array, patch: int) -> jax.Array:
+    """XOR adjacent bitmap patches along the key (last) axis.
+
+    ``bm``: (..., Tq, Tk) boolean.  Patches are (patch, patch) tiles; the
+    XOR acts between horizontally-adjacent tiles, which for a bitmap reduces
+    to a column-block delta: out[..., :, j] = bm[..., :, j] ^ bm[..., :, j-patch]
+    for j >= patch within each row, with the first patch-column kept.
+    """
+    tk = bm.shape[-1]
+    assert tk % patch == 0, (tk, patch)
+    n = tk // patch
+    r = bm.reshape(*bm.shape[:-1], n, patch)
+    first = r[..., :1, :]
+    delta = jnp.logical_xor(r[..., 1:, :], r[..., :-1, :])
+    out = jnp.concatenate([first, delta], axis=-2)
+    return out.reshape(bm.shape)
+
+
+def patch_unxor(delta_bm: jax.Array, patch: int) -> jax.Array:
+    """Inverse of :func:`patch_xor` (cumulative XOR over patch columns)."""
+    tk = delta_bm.shape[-1]
+    n = tk // patch
+    r = delta_bm.reshape(*delta_bm.shape[:-1], n, patch)
+
+    def step(carry, x):
+        cur = jnp.logical_xor(carry, x)
+        return cur, cur
+
+    # scan over the patch-column axis
+    r_t = jnp.moveaxis(r, -2, 0)
+    _, out = jax.lax.scan(step, jnp.zeros_like(r_t[0]), r_t)
+    out = jnp.moveaxis(out, 0, -2)
+    return out.reshape(delta_bm.shape)
+
+
+def compress_stats(sas: jax.Array, patch: int,
+                   threshold: float = DEFAULT_THRESHOLD,
+                   value_bits: int = 12) -> PSSAStats:
+    """Exact compressed sizes (in bytes) for one SAS of shape (..., Tq, Tk).
+
+    Leading axes (heads, batch) are folded into the totals.
+    """
+    pruned = prune(sas, threshold)
+    bm = bitmap(pruned)
+    xbm = patch_xor(bm, patch)
+
+    tq, tk = sas.shape[-2], sas.shape[-1]
+    lead = 1
+    for s in sas.shape[:-2]:
+        lead *= s
+
+    total = jnp.asarray(lead * tq * tk, jnp.float64 if jax.config.read(
+        "jax_enable_x64") else jnp.float32)
+    nnz = jnp.sum(bm).astype(jnp.float32)
+    ones_xor = jnp.sum(xbm).astype(jnp.float32)
+
+    bytes_baseline = total * value_bits / 8.0
+    bytes_values = nnz * value_bits / 8.0
+
+    # --- plain global CSR over the pruned bitmap (per head-slice) ---
+    col_bits_g = max(1, math.ceil(math.log2(tk)))
+    ptr_bits_g = max(1, math.ceil(math.log2(tq * tk + 1)))
+    bytes_csr = (nnz * col_bits_g + lead * (tq + 1) * ptr_bits_g) / 8.0
+
+    # --- RLE: classic zero-run stream (the hardware format the paper
+    # compares against): one run-length field per surviving value, wide
+    # enough for the worst-case in-row zero run (log2 Tk bits). ---
+    run_bits = max(1, math.ceil(math.log2(tk)))
+    bytes_rle = nnz * run_bits / 8.0
+
+    # --- PSSA: local CSR per (patch x patch) tile of the XOR bitmap ---
+    col_bits_l = max(1, math.ceil(math.log2(patch)))
+    ptr_bits_l = max(1, math.ceil(math.log2(patch * patch + 1)))
+    n_tiles = lead * (tq // patch) * (tk // patch)
+    bytes_pssa_idx = (ones_xor * col_bits_l
+                      + n_tiles * (patch + 1) * ptr_bits_l) / 8.0
+
+    return PSSAStats(
+        nnz=nnz, total=total,
+        bitmap_ones_raw=nnz, bitmap_ones_xor=ones_xor,
+        bytes_baseline=bytes_baseline,
+        bytes_values=bytes_values,
+        bytes_index_csr_global=bytes_csr,
+        bytes_index_rle=bytes_rle,
+        bytes_index_pssa=bytes_pssa_idx,
+        bytes_pssa_total=bytes_values + bytes_pssa_idx,
+    )
+
+
+def compress_decompress(sas: jax.Array, patch: int,
+                        threshold: float = DEFAULT_THRESHOLD) -> jax.Array:
+    """Losslessness check: prune -> bitmap -> XOR -> un-XOR -> re-mask.
+
+    Returns the reconstructed pruned SAS; must equal ``prune(sas)`` exactly.
+    """
+    pruned = prune(sas, threshold)
+    bm = bitmap(pruned)
+    xbm = patch_xor(bm, patch)
+    bm2 = patch_unxor(xbm, patch)
+    return jnp.where(bm2, pruned, 0.0)
+
+
+def ema_reduction(stats: PSSAStats) -> jax.Array:
+    """Fractional EMA reduction of the SAS vs the uncompressed baseline."""
+    return 1.0 - stats.bytes_pssa_total / stats.bytes_baseline

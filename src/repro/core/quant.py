@@ -1,0 +1,130 @@
+"""Quantization primitives for the SD-processor reproduction.
+
+The paper's datapath is A:INT12(unsigned) / W:INT8(signed), with TIPS
+dropping selected activations to INT6.  The DBSC splits the 12-bit unsigned
+activation into two *signed 7-bit* slices (6 magnitude bits + sign each):
+
+    x (uint12)  =  x_hi * 2**6 + x_lo,   x_hi, x_lo in [0, 63]  -> int7 ok
+
+On TPU we *simulate* integer arithmetic: values are held in int32 (exact for
+these widths) and fake-quant round-trips are used where the surrounding model
+runs in floating point.  The energy model charges the *intended* precision.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Bit widths from the paper.
+ACT_BITS_HIGH = 12   # INT12 unsigned activations
+ACT_BITS_LOW = 6     # INT6 unsigned activations (TIPS unimportant tokens)
+WEIGHT_BITS = 8      # INT8 signed weights
+SLICE_BITS = 7       # DBSC bit-slice PEs multiply int7 x int8
+
+ACT_HIGH_MAX = (1 << ACT_BITS_HIGH) - 1   # 4095
+ACT_LOW_MAX = (1 << ACT_BITS_LOW) - 1     # 63
+WEIGHT_MAX = (1 << (WEIGHT_BITS - 1)) - 1  # 127
+SLICE_MASK = (1 << 6) - 1                  # low 6 bits of a slice
+
+
+class QTensor(NamedTuple):
+    """Integer values plus the float scale used to (de)quantize."""
+    values: jax.Array   # int32, exact integer payload
+    scale: jax.Array    # float32 scalar or per-channel
+
+
+def quantize_act(x: jax.Array, bits: int = ACT_BITS_HIGH,
+                 axis=None) -> QTensor:
+    """Symmetric-range unsigned activation quantization.
+
+    Activations after the non-negative nonlinearity path (paper feeds
+    unsigned INT12 into the PE).  Negative inputs are clipped at 0, matching
+    an unsigned datapath.
+    """
+    qmax = (1 << bits) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0, qmax).astype(jnp.int32)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def quantize_weight(w: jax.Array, bits: int = WEIGHT_BITS,
+                    axis=None) -> QTensor:
+    """Symmetric signed weight quantization (per-tensor or per-channel)."""
+    qmax = (1 << (bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def fake_quant_act(x: jax.Array, bits: int = ACT_BITS_HIGH,
+                   axis=None) -> jax.Array:
+    """Round-trip quantization for quality experiments (straight-through)."""
+    q = quantize_act(x, bits, axis)
+    y = dequantize(q)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def fake_quant_weight(w: jax.Array, bits: int = WEIGHT_BITS,
+                      axis=None) -> jax.Array:
+    q = quantize_weight(w, bits, axis)
+    y = dequantize(q)
+    return w + jax.lax.stop_gradient(y - w)
+
+
+def bitslice_split(x_int: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split an unsigned INT12 payload into (hi, lo) 6-bit planes.
+
+    Both planes fit the paper's signed 7-bit bit-slice PE operand range.
+    ``x == hi * 64 + lo`` exactly.
+    """
+    lo = jnp.bitwise_and(x_int, SLICE_MASK)
+    hi = jnp.right_shift(x_int, 6)
+    return hi.astype(jnp.int32), lo.astype(jnp.int32)
+
+
+def bitslice_merge(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return (hi << 6) + lo
+
+
+@functools.partial(jax.jit, static_argnames=("precision_bits",))
+def quantized_matmul_reference(x: jax.Array, w: jax.Array,
+                               precision_bits: int = ACT_BITS_HIGH):
+    """INT-exact x @ w with per-tensor scales; oracle for the DBSC kernel."""
+    qx = quantize_act(x, precision_bits)
+    qw = quantize_weight(w)
+    acc = jnp.matmul(qx.values, qw.values,
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (qx.scale * qw.scale)
+
+
+def mixed_precision_quantize(x: jax.Array, important: jax.Array,
+                             scale: jax.Array | None = None) -> QTensor:
+    """TIPS mixed-precision activation quantization.
+
+    ``important`` is a boolean per-row (token) mask: True rows keep INT12,
+    False rows are re-quantized to INT6 *on the same scale grid* (the paper's
+    SIMD core quantizes both from the same cross-attention output; INT6 rows
+    simply drop the 6 LSBs -> values live on a 64x coarser grid).
+    """
+    q = quantize_act(x, ACT_BITS_HIGH) if scale is None else QTensor(
+        jnp.clip(jnp.round(x / scale), 0, ACT_HIGH_MAX).astype(jnp.int32),
+        jnp.asarray(scale, jnp.float32))
+    # INT6 on the same grid: keep the 6 MSBs (i.e. zero the low 6 bits).
+    low = jnp.left_shift(jnp.right_shift(q.values, 6), 6)
+    vals = jnp.where(important[..., None], q.values, low)
+    return QTensor(vals, q.scale)

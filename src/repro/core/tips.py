@@ -1,0 +1,92 @@
+"""TIPS — Text-based Important Pixel Spotting (paper §IV-A).
+
+Cross-attention computes, for every pixel (token) query, a softmax over the
+text keys.  The first text key is the CLS token, which captures the global
+sentence context; because softmax normalizes each query row, a *small* CLS
+attention score (CAS) implies *large* text attention scores (TAS) — i.e. the
+pixel is strongly tied to the prompt.  Pixels with CAS below a threshold are
+"important" and keep INT12 activations through the whole following FFN
+stack; the rest drop to INT6.  This is sound because neither cross-attention
+nor the FFN mixes information across pixel tokens.
+
+Generalization used for decoder-only LMs (DESIGN.md §4): the attention-sink
+(first) token plays the CLS role; we call the feature ``sink_mixed_precision``
+— the math is identical because the CAS/TAS inverse relation is a property
+of any softmax row, not of the CLS token per se.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Paper: TIPS active for the first 20 of 25 denoising iterations; the final
+# 5 are quantization-vulnerable and run full INT12.
+TIPS_ACTIVE_ITERS = 20
+TOTAL_ITERS = 25
+
+
+class TIPSResult(NamedTuple):
+    important: jax.Array      # bool (..., Tq): True -> keep INT12
+    cas: jax.Array            # (..., Tq) CLS attention score per query
+    low_precision_ratio: jax.Array  # scalar in [0, 1]
+
+
+def spot(cross_attn_probs: jax.Array, threshold: float,
+         cls_index: int = 0) -> TIPSResult:
+    """Spot important pixels from post-softmax cross-attention scores.
+
+    ``cross_attn_probs``: (..., heads, Tq, Tk_text) softmax rows.
+    CAS is averaged over heads (the IPSU sees the aggregated score).
+    Important  <=>  CAS < threshold  (small CAS -> pixel follows the text).
+    """
+    cas = cross_attn_probs[..., :, cls_index]        # (..., heads, Tq)
+    cas = jnp.mean(cas, axis=-2)                      # (..., Tq)
+    important = cas < threshold
+    low_ratio = 1.0 - jnp.mean(important.astype(jnp.float32))
+    return TIPSResult(important=important, cas=cas,
+                      low_precision_ratio=low_ratio)
+
+
+def adaptive_threshold(cas: jax.Array, target_low_ratio: float) -> jax.Array:
+    """Threshold that marks ``1 - target_low_ratio`` of tokens important.
+
+    The silicon uses a predefined threshold tuned offline; this helper does
+    that offline tuning (quantile of the CAS distribution).
+    """
+    return jnp.quantile(cas, 1.0 - target_low_ratio)
+
+
+def tips_schedule(iteration: jax.Array,
+                  active_iters: int = TIPS_ACTIVE_ITERS) -> jax.Array:
+    """True while TIPS may down-quantize (first 20/25 iterations)."""
+    return iteration < active_iters
+
+
+def apply_precision_mask(x: jax.Array, important: jax.Array,
+                         active: jax.Array | bool = True) -> jax.Array:
+    """Fake-quant an activation tensor per the TIPS mask.
+
+    Rows marked important round-trip through INT12; others through INT6 on
+    the same scale grid (see quant.mixed_precision_quantize).  When
+    ``active`` is False every row stays INT12.
+    """
+    from repro.core import quant
+
+    imp = jnp.logical_or(important, jnp.logical_not(active))
+    q = quant.mixed_precision_quantize(x, imp)
+    y = (q.values.astype(jnp.float32) * q.scale).astype(x.dtype)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def workload_low_precision_fraction(ratios_per_iter: jax.Array,
+                                    active_iters: int = TIPS_ACTIVE_ITERS,
+                                    total_iters: int = TOTAL_ITERS) -> jax.Array:
+    """Fraction of total FFN workload eligible for INT6 across the run.
+
+    Paper Fig. 9(b): per-iteration low-precision ratio, zero for the last
+    ``total - active`` iterations; overall claim is 44.8 %.
+    """
+    r = ratios_per_iter[:active_iters]
+    return jnp.sum(r) / total_iters

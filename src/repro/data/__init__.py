@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataState, SyntheticLMDataset, make_batch_specs, shard_assignment)

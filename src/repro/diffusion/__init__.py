@@ -1,0 +1,2 @@
+from repro.diffusion.unet import UNetConfig, init_unet_params, unet_forward  # noqa: F401
+from repro.diffusion.pipeline import StableDiffusionPipeline, PipelineConfig  # noqa: F401

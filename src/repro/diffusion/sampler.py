@@ -1,0 +1,75 @@
+"""DDIM sampler — 25 denoising iterations (the paper's operating point).
+
+Deterministic DDIM (eta = 0) over a linear-beta DDPM schedule, with optional
+classifier-free guidance.  TIPS is active for the first 20 of the 25
+iterations (paper Fig. 9(b)): the last 5 are quantization-vulnerable and run
+full INT12 — the sampler passes ``tips_active`` per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tips import TIPS_ACTIVE_ITERS
+
+
+@dataclasses.dataclass(frozen=True)
+class DDIMConfig:
+    num_train_steps: int = 1000
+    num_inference_steps: int = 25        # paper: 25 UNet iterations
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+    guidance_scale: float = 7.5
+    tips_active_iters: int = TIPS_ACTIVE_ITERS
+
+
+def alphas_cumprod(cfg: DDIMConfig):
+    betas = jnp.linspace(cfg.beta_start ** 0.5, cfg.beta_end ** 0.5,
+                         cfg.num_train_steps) ** 2
+    return jnp.cumprod(1.0 - betas)
+
+
+def timestep_schedule(cfg: DDIMConfig):
+    """Descending DDIM timesteps, e.g. [960, 920, ..., 0] for 25 steps."""
+    step = cfg.num_train_steps // cfg.num_inference_steps
+    return jnp.arange(cfg.num_inference_steps - 1, -1, -1) * step
+
+
+def ddim_step(latents, eps, t, t_prev, acp):
+    """One deterministic DDIM update (eta = 0)."""
+    a_t = acp[t]
+    a_prev = jnp.where(t_prev >= 0, acp[jnp.maximum(t_prev, 0)], 1.0)
+    x0 = (latents - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
+
+
+def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
+           collect_stats: bool = False):
+    """Run the full 25-iteration denoising loop.
+
+    ``unet_apply(latents, timesteps, context, tips_active)`` -> (eps, stats).
+    Python loop (25 iterations, each jit-compiled once) so per-iteration
+    stats stay inspectable — matching how the paper instruments per-iteration
+    low-precision ratios (Fig. 9(b)).
+    """
+    acp = alphas_cumprod(cfg)
+    ts = timestep_schedule(cfg)
+    step = cfg.num_train_steps // cfg.num_inference_steps
+    all_stats = []
+    for i in range(cfg.num_inference_steps):
+        t = ts[i]
+        tips_active = i < cfg.tips_active_iters
+        b = latents.shape[0]
+        tvec = jnp.full((b,), t, jnp.int32)
+        eps_c, stats = unet_apply(latents, tvec, context, tips_active)
+        if cfg.guidance_scale != 1.0 and uncond_context is not None:
+            eps_u, _ = unet_apply(latents, tvec, uncond_context, tips_active)
+            eps = eps_u + cfg.guidance_scale * (eps_c - eps_u)
+        else:
+            eps = eps_c
+        latents = ddim_step(latents, eps, t, t - step, acp)
+        if collect_stats:
+            all_stats.append(stats)
+    return latents, all_stats

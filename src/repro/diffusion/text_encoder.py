@@ -1,0 +1,96 @@
+"""CLIP-style text encoder (stage 1 of the SD flow, Fig. 1(a)).
+
+Bidirectional pre-LN transformer over the caption tokens with the CLS token
+*first* — the position TIPS relies on (paper §IV-A cites BERT/Evo-ViT for the
+CLS-first convention).  Full size mirrors CLIP ViT-L/14's text tower
+(12L, d=768, 77 tokens); tests run the reduced config.
+
+No pretrained weights offline — the encoder produces structurally-correct
+context embeddings; the paper's evaluation (energy/EMA/throughput) does not
+depend on caption semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TextEncoderConfig:
+    vocab_size: int = 49408
+    max_len: int = 77
+    d_model: int = 768
+    num_layers: int = 12
+    num_heads: int = 12
+    d_ff: int = 3072
+    dtype: str = "float32"
+
+    def smoke(self) -> "TextEncoderConfig":
+        return dataclasses.replace(self, vocab_size=256, max_len=8,
+                                   d_model=32, num_layers=2, num_heads=4,
+                                   d_ff=64)
+
+
+CLIP_TEXT = TextEncoderConfig()
+
+
+def init_text_encoder_params(key, cfg: TextEncoderConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+    s = d ** -0.5
+
+    def layer(k):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        return {
+            "ln1": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+            "wqkv": (jax.random.normal(k1, (d, 3 * d)) * s).astype(dtype),
+            "wo": (jax.random.normal(k2, (d, d)) * s).astype(dtype),
+            "ln2": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+            "w1": (jax.random.normal(k3, (d, dff)) * s).astype(dtype),
+            "w2": (jax.random.normal(k4, (dff, d))
+                   * dff ** -0.5).astype(dtype),
+        }
+
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, d))
+                  * 0.02).astype(dtype),
+        "pos": (jax.random.normal(ks[1], (cfg.max_len, d))
+                * 0.01).astype(dtype),
+        "layers": [layer(k) for k in ks[2:]],
+        "ln_f": jnp.ones((d,), dtype),
+        "ln_f_b": jnp.zeros((d,), dtype),
+    }
+
+
+def _ln(x, scale, bias, eps=1e-5):
+    m = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+    v = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+    return ((x.astype(jnp.float32) - m) * jax.lax.rsqrt(v + eps)
+            * scale + bias).astype(x.dtype)
+
+
+def encode_text(params, tokens, cfg: TextEncoderConfig):
+    """tokens (B, T) int32, CLS at position 0 -> (B, T, d) context."""
+    b, t = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["pos"][None, :t]
+    nh, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    for lp in params["layers"]:
+        x = _ln(h, lp["ln1"], lp["ln1_b"])
+        qkv = jnp.einsum("btd,dk->btk", x, lp["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, t, nh, hd)
+        k = k.reshape(b, t, nh, hd)
+        v = v.reshape(b, t, nh, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(h.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, -1)
+        h = h + jnp.einsum("btd,dk->btk", o, lp["wo"])
+        x = _ln(h, lp["ln2"], lp["ln2_b"])
+        h = h + jnp.einsum(
+            "btf,fd->btd",
+            jax.nn.gelu(jnp.einsum("btd,df->btf", x, lp["w1"])), lp["w2"])
+    return _ln(h, params["ln_f"], params["ln_f_b"])

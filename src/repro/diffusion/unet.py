@@ -1,0 +1,426 @@
+"""BK-SDM-style UNet (paper's workload) with PSSA / TIPS / DBSC folded in.
+
+Architecturally compressed Stable-Diffusion UNet following BK-SDM-Tiny
+(Kim et al., 2023 — the paper's evaluation network): SD-v1 block layout with
+one resnet + one transformer block per down stage, two per up stage, and the
+mid-block removed.  Each block is
+
+    CNN stage          — two 3x3 convs (resnet, GroupNorm + SiLU, time-embed
+                         FiLM add), input-stationary on the DBSC;
+    transformer stage  — self-attention (pixel-wise; PSSA prunes + compresses
+                         the score matrix on its way to DRAM), cross-attention
+                         over the text keys (emits the CLS attention score
+                         that TIPS thresholds), and a GEGLU FFN whose rows run
+                         INT12/INT6 mixed-precision per the TIPS mask.
+
+The module is pure JAX and runs at reduced size on CPU (tests/examples); the
+full BK-SDM-Tiny geometry is exercised analytically by ``diffusion.ledger``
+(bytes/MACs) and by shape-level ``jax.eval_shape`` checks — matching how the
+paper itself evaluates (energy / EMA / throughput, not accuracy).
+
+Forward returns ``(eps, stats)`` where ``stats`` carries per-layer PSSA
+compression statistics and per-cross-attn TIPS ratios for the energy ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pssa, tips
+from repro.core.attention import cross_attention_tips, self_attention_pssa
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 4
+    out_channels: int = 4
+    block_channels: tuple = (320, 640, 1280, 1280)
+    down_attn: tuple = (True, True, True, False)
+    resnets_per_down: int = 1          # BK-SDM-Tiny: 1 (base SD: 2)
+    resnets_per_up: int = 2            # BK-SDM-Tiny: 2 (base SD: 3)
+    has_mid_block: bool = False        # removed in BK-SDM-Small/Tiny
+    transformer_depth: int = 1
+    num_heads: int = 8
+    context_dim: int = 768             # CLIP ViT-L/14 text width
+    text_len: int = 77
+    time_dim: int = 1280
+    latent_size: int = 64              # 512x512 images -> 64x64x4 latents
+    groups: int = 32
+    ffn_mult: int = 4                  # GEGLU hidden = 4 * channels
+
+    # --- paper features ---
+    pssa: bool = True
+    tips: bool = True
+    dbsc: bool = True
+    use_dbsc_kernel: bool = False      # route FFN through the Pallas kernel
+    pssa_threshold: float = 1.0 / 8192.0
+    tips_threshold: float = 0.05
+
+    dtype: str = "float32"
+
+    def patch_size(self, resolution: int) -> int:
+        """PSXU patch width at a given feature-map resolution (16/32/64)."""
+        return min(64, max(16, resolution))
+
+    def smoke(self) -> "UNetConfig":
+        """Reduced config that runs a full fwd pass on CPU in seconds."""
+        return dataclasses.replace(
+            self,
+            block_channels=(32, 64, 64, 64),
+            num_heads=4,
+            context_dim=32,
+            text_len=8,
+            time_dim=64,
+            latent_size=16,
+            groups=8,
+        )
+
+    @property
+    def num_down_attn_layers(self) -> int:
+        return sum(self.resnets_per_down * self.transformer_depth
+                   for a in self.down_attn if a)
+
+
+BK_SDM_TINY = UNetConfig()
+
+
+# ----------------------------------------------------------------------------
+# Primitive layers
+# ----------------------------------------------------------------------------
+def conv2d(x, w, b=None, stride: int = 1, padding: int = 1):
+    """NHWC conv with HWIO weights."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(n, h, w, c) * scale + bias).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    mean = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+    y = (x.astype(jnp.float32) - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def timestep_embedding(t, dim: int, max_period: float = 10000.0):
+    """Sinusoidal (B,) int timesteps -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Parameter init
+# ----------------------------------------------------------------------------
+def _conv_p(key, kh, kw, cin, cout, dtype):
+    s = 1.0 / math.sqrt(kh * kw * cin)
+    k1, k2 = jax.random.split(key)
+    return {"w": (jax.random.uniform(k1, (kh, kw, cin, cout), jnp.float32,
+                                     -s, s)).astype(dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _lin_p(key, cin, cout, dtype, bias=True):
+    s = 1.0 / math.sqrt(cin)
+    p = {"w": (jax.random.uniform(key, (cin, cout), jnp.float32,
+                                  -s, s)).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((cout,), dtype)
+    return p
+
+
+def _norm_p(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _resnet_p(key, cin, cout, tdim, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": _norm_p(cin, dtype),
+        "conv1": _conv_p(ks[0], 3, 3, cin, cout, dtype),
+        "time": _lin_p(ks[1], tdim, cout, dtype),
+        "norm2": _norm_p(cout, dtype),
+        "conv2": _conv_p(ks[2], 3, 3, cout, cout, dtype),
+    }
+    if cin != cout:
+        p["skip"] = _conv_p(ks[3], 1, 1, cin, cout, dtype)
+    return p
+
+
+def _transformer_p(key, c, cfg: UNetConfig, dtype):
+    ks = jax.random.split(key, 12)
+    dff = cfg.ffn_mult * c
+    return {
+        "norm_in": _norm_p(c, dtype),
+        "proj_in": _lin_p(ks[0], c, c, dtype),
+        "ln1": _norm_p(c, dtype),
+        "sa_q": _lin_p(ks[1], c, c, dtype, bias=False),
+        "sa_k": _lin_p(ks[2], c, c, dtype, bias=False),
+        "sa_v": _lin_p(ks[3], c, c, dtype, bias=False),
+        "sa_o": _lin_p(ks[4], c, c, dtype),
+        "ln2": _norm_p(c, dtype),
+        "ca_q": _lin_p(ks[5], c, c, dtype, bias=False),
+        "ca_k": _lin_p(ks[6], cfg.context_dim, c, dtype, bias=False),
+        "ca_v": _lin_p(ks[7], cfg.context_dim, c, dtype, bias=False),
+        "ca_o": _lin_p(ks[8], c, c, dtype),
+        "ln3": _norm_p(c, dtype),
+        "ff_geglu": _lin_p(ks[9], c, 2 * dff, dtype),
+        "ff_out": _lin_p(ks[10], dff, c, dtype),
+        "proj_out": _lin_p(ks[11], c, c, dtype),
+    }
+
+
+def init_unet_params(key, cfg: UNetConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    chans = cfg.block_channels
+    keys = iter(jax.random.split(key, 256))
+    p = {
+        "time_mlp1": _lin_p(next(keys), chans[0], cfg.time_dim, dtype),
+        "time_mlp2": _lin_p(next(keys), cfg.time_dim, cfg.time_dim, dtype),
+        "conv_in": _conv_p(next(keys), 3, 3, cfg.in_channels, chans[0], dtype),
+    }
+    # --- down path (track the skip-channel stack exactly as forward pushes) ---
+    down = []
+    skip_channels = [chans[0]]          # conv_in output
+    cin = chans[0]
+    for i, cout in enumerate(chans):
+        stage = {"resnets": [], "attns": []}
+        for _ in range(cfg.resnets_per_down):
+            stage["resnets"].append(
+                _resnet_p(next(keys), cin, cout, cfg.time_dim, dtype))
+            if cfg.down_attn[i]:
+                stage["attns"].append(
+                    _transformer_p(next(keys), cout, cfg, dtype))
+            cin = cout
+            skip_channels.append(cout)
+        if i < len(chans) - 1:
+            stage["down"] = _conv_p(next(keys), 3, 3, cout, cout, dtype)
+            skip_channels.append(cout)
+        down.append(stage)
+    p["down"] = down
+
+    if cfg.has_mid_block:
+        c = chans[-1]
+        p["mid"] = {
+            "res1": _resnet_p(next(keys), c, c, cfg.time_dim, dtype),
+            "attn": _transformer_p(next(keys), c, cfg, dtype),
+            "res2": _resnet_p(next(keys), c, c, cfg.time_dim, dtype),
+        }
+
+    # --- up path (pops the skip stack in reverse; widths vary across
+    #     stage boundaries, so cin comes from the tracked stack) ---
+    up = []
+    rev = list(reversed(range(len(chans))))
+    cin = chans[-1]
+    for j, i in enumerate(rev):
+        cout = chans[i]
+        stage = {"resnets": [], "attns": []}
+        for r in range(cfg.resnets_per_up):
+            skip_c = skip_channels.pop()
+            stage["resnets"].append(_resnet_p(
+                next(keys), cin + skip_c, cout, cfg.time_dim, dtype))
+            if cfg.down_attn[i]:
+                stage["attns"].append(
+                    _transformer_p(next(keys), cout, cfg, dtype))
+            cin = cout
+        if j < len(chans) - 1:
+            stage["up"] = _conv_p(next(keys), 3, 3, cout, cout, dtype)
+        up.append(stage)
+    assert not skip_channels, f"unbalanced skips: {skip_channels}"
+    p["up"] = up
+
+    p["norm_out"] = _norm_p(chans[0], dtype)
+    p["conv_out"] = _conv_p(next(keys), 3, 3, chans[0], cfg.out_channels,
+                            dtype)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------------
+def _resnet(x, p, temb, groups):
+    h = group_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], groups)
+    h = conv2d(jax.nn.silu(h), p["conv1"]["w"], p["conv1"]["b"])
+    t = jnp.einsum("bd,dc->bc", jax.nn.silu(temb), p["time"]["w"]) \
+        + p["time"]["b"]
+    h = h + t[:, None, None, :]
+    h = group_norm(h, p["norm2"]["scale"], p["norm2"]["bias"], groups)
+    h = conv2d(jax.nn.silu(h), p["conv2"]["w"], p["conv2"]["b"])
+    skip = x if "skip" not in p else conv2d(x, p["skip"]["w"], p["skip"]["b"],
+                                            padding=0)
+    return skip + h
+
+
+def _attn_heads(x, w, heads):
+    b, t, _ = x.shape
+    y = jnp.einsum("btc,cd->btd", x, w)
+    return y.reshape(b, t, heads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
+                       stats: dict, layer_tag: str):
+    """x2d: (B, H, W, C) -> same; stats appended in place."""
+    b, hgt, wid, c = x2d.shape
+    res = hgt  # feature-map resolution
+    heads = cfg.num_heads
+
+    h = group_norm(x2d, p["norm_in"]["scale"], p["norm_in"]["bias"],
+                   cfg.groups)
+    h = h.reshape(b, hgt * wid, c)
+    h = jnp.einsum("btc,cd->btd", h, p["proj_in"]["w"]) + p["proj_in"]["b"]
+    resid = h
+
+    # --- self-attention (PSSA) ---
+    hn = layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"])
+    q = _attn_heads(hn, p["sa_q"]["w"], heads)
+    k = _attn_heads(hn, p["sa_k"]["w"], heads)
+    v = _attn_heads(hn, p["sa_v"]["w"], heads)
+    patch = cfg.patch_size(res)
+    sa = self_attention_pssa(q, k, v, patch=patch,
+                             threshold=cfg.pssa_threshold,
+                             prune_scores=cfg.pssa)
+    # key encodes "<tag>@<resolution>" — jit-safe (strings live in treedef)
+    stats.setdefault("pssa", {})[f"{layer_tag}@{res}"] = sa.stats
+    h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
+                            p["sa_o"]["w"]) + p["sa_o"]["b"])
+
+    # --- cross-attention (TIPS CAS source) ---
+    resid = h
+    hn = layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"])
+    q = _attn_heads(hn, p["ca_q"]["w"], heads)
+    kt = _attn_heads(context, p["ca_k"]["w"], heads)
+    vt = _attn_heads(context, p["ca_v"]["w"], heads)
+    ca = cross_attention_tips(q, kt, vt, threshold=cfg.tips_threshold)
+    stats.setdefault("tips", {})[f"{layer_tag}@{res}"] = ca.tips_result
+    h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
+                            p["ca_o"]["w"]) + p["ca_o"]["b"])
+
+    # --- FFN (GEGLU) with TIPS mixed precision ---
+    resid = h
+    hn = layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
+    if cfg.tips:
+        important = jnp.logical_or(ca.tips_result.important,
+                                   jnp.logical_not(tips_active))
+    else:
+        important = None
+    if cfg.use_dbsc_kernel:
+        # serving path: both FFN matmuls through the DBSC integer datapath
+        # (Pallas bit-slice kernel; interpret=True on CPU)
+        from repro.kernels.bitslice_matmul.ops import bitslice_matmul
+        bt = hn.shape[0] * hn.shape[1]
+        imp_flat = (important.reshape(bt) if important is not None else None)
+        gu = bitslice_matmul(hn.reshape(bt, c), p["ff_geglu"]["w"],
+                             important=imp_flat).reshape(
+            b, hn.shape[1], -1) + p["ff_geglu"]["b"]
+        g, u = jnp.split(gu, 2, axis=-1)
+        mid = jax.nn.gelu(g) * u
+        h = resid + (bitslice_matmul(
+            mid.reshape(bt, mid.shape[-1]), p["ff_out"]["w"]).reshape(
+            b, hn.shape[1], c) + p["ff_out"]["b"])
+    else:
+        if important is not None:
+            hn = tips.apply_precision_mask(hn, important)
+        gu = jnp.einsum("btc,cd->btd", hn, p["ff_geglu"]["w"]) \
+            + p["ff_geglu"]["b"]
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = resid + (jnp.einsum("btd,dc->btc", jax.nn.gelu(g) * u,
+                                p["ff_out"]["w"]) + p["ff_out"]["b"])
+
+    h = jnp.einsum("btc,cd->btd", h, p["proj_out"]["w"]) + p["proj_out"]["b"]
+    return x2d + h.reshape(b, hgt, wid, c)
+
+
+def _downsample(x, p):
+    return conv2d(x, p["w"], p["b"], stride=2)
+
+
+def _upsample(x, p):
+    b, h, w, c = x.shape
+    x = jax.image.resize(x, (b, 2 * h, 2 * w, c), "nearest")
+    return conv2d(x, p["w"], p["b"])
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
+                 tips_active: bool | jax.Array = True):
+    """latents (B, S, S, 4), timesteps (B,), context (B, Ttext, ctx_dim).
+
+    Returns (eps-prediction (B, S, S, 4), stats dict).
+    """
+    stats: dict = {}
+    tips_active = jnp.asarray(tips_active)
+
+    temb = timestep_embedding(timesteps, cfg.block_channels[0])
+    temb = jnp.einsum("bd,dc->bc", temb, params["time_mlp1"]["w"]) \
+        + params["time_mlp1"]["b"]
+    temb = jnp.einsum("bd,dc->bc", jax.nn.silu(temb),
+                      params["time_mlp2"]["w"]) + params["time_mlp2"]["b"]
+
+    h = conv2d(latents, params["conv_in"]["w"], params["conv_in"]["b"])
+    skips = [h]
+
+    for i, stage in enumerate(params["down"]):
+        for r, rp in enumerate(stage["resnets"]):
+            h = _resnet(h, rp, temb, cfg.groups)
+            if stage["attns"]:
+                h = _transformer_block(h, stage["attns"][r], context, cfg,
+                                       tips_active, stats, f"down{i}.{r}")
+            skips.append(h)
+        if "down" in stage:
+            h = _downsample(h, stage["down"])
+            skips.append(h)
+
+    if cfg.has_mid_block:
+        mp = params["mid"]
+        h = _resnet(h, mp["res1"], temb, cfg.groups)
+        h = _transformer_block(h, mp["attn"], context, cfg, tips_active,
+                               stats, "mid")
+        h = _resnet(h, mp["res2"], temb, cfg.groups)
+
+    for j, stage in enumerate(params["up"]):
+        for r, rp in enumerate(stage["resnets"]):
+            skip = skips.pop()
+            h = _resnet(jnp.concatenate([h, skip], axis=-1), rp, temb,
+                        cfg.groups)
+            if stage["attns"]:
+                h = _transformer_block(h, stage["attns"][r], context, cfg,
+                                       tips_active, stats, f"up{j}.{r}")
+        if "up" in stage:
+            h = _upsample(h, stage["up"])
+
+    h = group_norm(h, params["norm_out"]["scale"], params["norm_out"]["bias"],
+                   cfg.groups)
+    eps = conv2d(jax.nn.silu(h), params["conv_out"]["w"],
+                 params["conv_out"]["b"])
+    return eps, stats
+
+
+def abstract_unet_params(cfg: UNetConfig):
+    return jax.eval_shape(lambda: init_unet_params(jax.random.PRNGKey(0),
+                                                   cfg))

@@ -1,0 +1,95 @@
+"""VAE decoder (stage 3 of the SD flow, Fig. 1(a)): latents -> RGB image.
+
+SD-v1 decoder geometry: 4-channel latents at S x S are decoded to a
+(8S x 8S x 3) image through three nearest-neighbour x2 upsampling stages
+with resnet blocks.  Reduced channel widths run on CPU; the full geometry is
+only exercised through the analytic ledger (the decoder runs ONCE per image,
+so it is a small EMA term next to 25 UNet iterations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.unet import _conv_p, _norm_p, conv2d, group_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class VAEConfig:
+    latent_channels: int = 4
+    out_channels: int = 3
+    channels: tuple = (512, 512, 256, 128)
+    resnets_per_stage: int = 2
+    groups: int = 32
+    scale_factor: float = 0.18215       # SD-v1 latent scaling
+    dtype: str = "float32"
+
+    def smoke(self) -> "VAEConfig":
+        return dataclasses.replace(self, channels=(32, 32, 16, 16), groups=8)
+
+
+SD_VAE = VAEConfig()
+
+
+def _resnet_p(key, cin, cout, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"norm1": _norm_p(cin, dtype),
+         "conv1": _conv_p(ks[0], 3, 3, cin, cout, dtype),
+         "norm2": _norm_p(cout, dtype),
+         "conv2": _conv_p(ks[1], 3, 3, cout, cout, dtype)}
+    if cin != cout:
+        p["skip"] = _conv_p(ks[2], 1, 1, cin, cout, dtype)
+    return p
+
+
+def init_vae_params(key, cfg: VAEConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = iter(jax.random.split(key, 64))
+    chans = cfg.channels
+    p = {"conv_in": _conv_p(next(keys), 3, 3, cfg.latent_channels, chans[0],
+                            dtype)}
+    stages = []
+    cin = chans[0]
+    for i, cout in enumerate(chans):
+        st = {"resnets": []}
+        for _ in range(cfg.resnets_per_stage):
+            st["resnets"].append(_resnet_p(next(keys), cin, cout, dtype))
+            cin = cout
+        if i < len(chans) - 1:
+            st["up"] = _conv_p(next(keys), 3, 3, cout, cout, dtype)
+        stages.append(st)
+    p["stages"] = stages
+    p["norm_out"] = _norm_p(chans[-1], dtype)
+    p["conv_out"] = _conv_p(next(keys), 3, 3, chans[-1], cfg.out_channels,
+                            dtype)
+    return p
+
+
+def _resnet(x, p, groups):
+    h = group_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], groups)
+    h = conv2d(jax.nn.silu(h), p["conv1"]["w"], p["conv1"]["b"])
+    h = group_norm(h, p["norm2"]["scale"], p["norm2"]["bias"], groups)
+    h = conv2d(jax.nn.silu(h), p["conv2"]["w"], p["conv2"]["b"])
+    skip = x if "skip" not in p else conv2d(x, p["skip"]["w"],
+                                            p["skip"]["b"], padding=0)
+    return skip + h
+
+
+def decode(params, latents, cfg: VAEConfig):
+    """(B, S, S, 4) latents -> (B, 8S, 8S, 3) image in [-1, 1]."""
+    h = conv2d(latents / cfg.scale_factor, params["conv_in"]["w"],
+               params["conv_in"]["b"])
+    for i, st in enumerate(params["stages"]):
+        for rp in st["resnets"]:
+            h = _resnet(h, rp, cfg.groups)
+        if "up" in st:
+            b, hh, ww, c = h.shape
+            h = jax.image.resize(h, (b, 2 * hh, 2 * ww, c), "nearest")
+            h = conv2d(h, st["up"]["w"], st["up"]["b"])
+    h = group_norm(h, params["norm_out"]["scale"],
+                   params["norm_out"]["bias"], cfg.groups)
+    return jnp.tanh(conv2d(jax.nn.silu(h), params["conv_out"]["w"],
+                           params["conv_out"]["b"]))

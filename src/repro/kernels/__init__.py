@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   bitslice_matmul — DBSC dual-mode bit-slice core (§IV-B)
+#   pssa_attention  — blocked self-attention with threshold score pruning (§III)
+#   patch_bitmap    — PSXU bitmap generate + patch-XOR + popcount (§III-B)
+# Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper) and ref.py (pure-jnp oracle).  Validated with interpret=True.

@@ -1,0 +1,2 @@
+from repro.kernels.bitslice_matmul.ops import bitslice_matmul  # noqa: F401
+from repro.kernels.bitslice_matmul.ref import bitslice_matmul_ref  # noqa: F401

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the DBSC bit-slice matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitslice_matmul_ref(x_hi: jax.Array, x_lo: jax.Array, w: jax.Array,
+                        prec: jax.Array) -> jax.Array:
+    """Exact integer semantics of the DBSC PE column.
+
+    ``prec`` (M, 1): 1 -> INT12 row (both slices), 0 -> INT6 row (hi only).
+    """
+    lo = x_lo * prec
+    acc_hi = jnp.matmul(x_hi, w, preferred_element_type=jnp.int32)
+    acc_lo = jnp.matmul(lo, w, preferred_element_type=jnp.int32)
+    return (acc_hi << 6) + acc_lo

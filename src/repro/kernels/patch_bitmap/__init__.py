@@ -1,0 +1,2 @@
+from repro.kernels.patch_bitmap.ops import patch_bitmap  # noqa: F401
+from repro.kernels.patch_bitmap.ref import patch_bitmap_ref  # noqa: F401

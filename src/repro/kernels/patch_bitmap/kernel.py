@@ -1,0 +1,69 @@
+"""PSXU Pallas kernel (paper §III-B): bitmap generate + patch-XOR + popcount.
+
+The Patch-Similarity XOR Unit takes one 64-wide row slab of the pruned SAS,
+generates the sparsity bitmap (BGU), XORs horizontally-adjacent bitmap
+patches (RXU, reconfigurable to 16/32/64-wide patches), and hands the result
+to the CSR encoder.  The encoder's cost is fully determined by the per-patch
+popcounts, so the kernel outputs:
+
+  * the packed XOR'd bitmap (uint32 words, 32 lanes per word) — the payload a
+    DMA engine would move, and
+  * per-(row, patch) popcounts of the XOR'd bitmap — the CSR col_idx counts.
+
+TPU mapping: the comparator bank and XOR tree are VPU-lane-parallel ops; a
+64-wide SAS row slab is half a 128-lane vector register, and the bit-pack is
+a dot with a power-of-two vector.  Grid tiles the query rows; the full key
+row fits one block (SAS rows are <= 4096 in BK-SDM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(sas_ref, packed_ref, counts_ref, *, patch: int, threshold: float):
+    s = sas_ref[...]                               # (br, Tk)
+    br, tk = s.shape
+    bits = (s >= threshold)                        # BGU: bitmap generator bank
+
+    # RXU: XOR adjacent patches along the key axis (keep the first patch).
+    n = tk // patch
+    r = bits.reshape(br, n, patch)
+    delta = jnp.concatenate(
+        [r[:, :1, :], jnp.logical_xor(r[:, 1:, :], r[:, :-1, :])], axis=1)
+
+    # popcount per (row, patch) — drives the local CSR col_idx cost
+    counts_ref[...] = jnp.sum(delta.astype(jnp.int32), axis=-1)
+
+    # pack 32 lanes per uint32 word
+    flat = delta.reshape(br, tk // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed_ref[...] = jnp.sum(flat * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "threshold", "br",
+                                             "interpret"))
+def patch_bitmap_kernel(sas: jax.Array, patch: int, threshold: float,
+                        br: int = 64, interpret: bool = True):
+    """(R, Tk) pruned-SAS slab -> (packed (R, Tk/32) uint32, counts (R, Tk/patch))."""
+    rows, tk = sas.shape
+    assert tk % patch == 0 and tk % 32 == 0, (tk, patch)
+    assert rows % br == 0, (rows, br)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, patch=patch, threshold=threshold),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, tk), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, tk // 32), lambda i: (i, 0)),
+            pl.BlockSpec((br, tk // patch), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, tk // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, tk // patch), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sas)

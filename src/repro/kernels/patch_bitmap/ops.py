@@ -1,0 +1,30 @@
+"""Public op: PSXU bitmap/XOR/popcount over arbitrary leading axes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.patch_bitmap.kernel import patch_bitmap_kernel
+from repro.kernels.patch_bitmap.ref import patch_bitmap_ref
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "threshold",
+                                             "use_kernel", "interpret"))
+def patch_bitmap(sas: jax.Array, patch: int, threshold: float,
+                 use_kernel: bool = True, interpret: bool = True):
+    """(..., Tq, Tk) SAS -> packed XOR bitmap (..., Tq, Tk/32) + popcounts."""
+    *lead, tq, tk = sas.shape
+    flat = sas.reshape(-1, tk)
+    rows = flat.shape[0]
+    if use_kernel:
+        br = 64
+        while rows % br:
+            br //= 2
+        packed, counts = patch_bitmap_kernel(flat, patch, threshold, br=br,
+                                             interpret=interpret)
+    else:
+        packed, counts = patch_bitmap_ref(flat, patch, threshold)
+    return (packed.reshape(*lead, tq, tk // 32),
+            counts.reshape(*lead, tq, tk // patch))

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the PSXU patch-bitmap kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pssa
+
+
+def patch_bitmap_ref(sas: jax.Array, patch: int, threshold: float):
+    bits = sas >= threshold
+    delta = pssa.patch_xor(bits, patch)
+    rows, tk = sas.shape
+    counts = jnp.sum(delta.reshape(rows, tk // patch, patch).astype(jnp.int32),
+                     axis=-1)
+    flat = delta.reshape(rows, tk // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = jnp.sum(flat * weights, axis=-1, dtype=jnp.uint32)
+    return packed, counts

@@ -1,0 +1,2 @@
+from repro.kernels.pssa_attention.ops import pssa_attention  # noqa: F401
+from repro.kernels.pssa_attention.ref import pssa_attention_ref  # noqa: F401

@@ -1,0 +1,101 @@
+"""PSSA self-attention Pallas kernel (paper §III).
+
+Blocked pixel-wise self-attention whose post-softmax scores are pruned at a
+fixed threshold before the value matmul — the on-chip half of PSSA (the SAS
+the attention core would spill to DRAM is exactly the pruned matrix that the
+PSXU compresses).  The kernel additionally emits the per-query-block count of
+surviving scores, which feeds the EMA ledger.
+
+Pruning on normalized scores inside a *blocked* softmax needs the final row
+max/sum, so the kernel is two-pass (FlashAttention-2 style):
+
+  pass 1: stream K blocks, maintain running (m, l) per query row;
+  pass 2: stream K blocks again, p = exp(s - m)/l, zero p < tau, accumulate
+          p @ V and popcount(p >= tau).
+
+Grid: (batch*heads, Tq/bq); the full K/V stripe of one (batch, head) lives
+in VMEM (T x d x 2 operands — <= 4 MB for T=4096, d=64, fp32; half that in
+bf16 on silicon).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, nnz_ref, *, bk: int, sm_scale: float,
+            threshold: float):
+    q = q_ref[0] * sm_scale                       # (bq, d)
+    kdim = k_ref.shape[1]
+    nk = kdim // bk
+    bq = q.shape[0]
+
+    def pass1(s, carry):
+        m_prev, l_prev = carry
+        kblk = k_ref[0, pl.dslice(s * bk, bk), :]           # (bk, d)
+        scores = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32)
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        l_cur = l_prev * jnp.exp(m_prev - m_cur) + jnp.sum(
+            jnp.exp(scores - m_cur[:, None]), axis=-1)
+        return m_cur, l_cur
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    m, l = jax.lax.fori_loop(0, nk, pass1, (m0, l0))
+    l = jnp.maximum(l, 1e-30)
+
+    def pass2(s, carry):
+        acc, nnz = carry
+        kblk = k_ref[0, pl.dslice(s * bk, bk), :]
+        vblk = v_ref[0, pl.dslice(s * bk, bk), :]
+        scores = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32)
+        p = jnp.exp(scores - m[:, None]) / l[:, None]
+        keep = p >= threshold
+        p = jnp.where(keep, p, 0.0)                # PSSA step 1: prune
+        acc = acc + jnp.dot(p, vblk, preferred_element_type=jnp.float32)
+        nnz = nnz + jnp.sum(keep.astype(jnp.int32), axis=-1)
+        return acc, nnz
+
+    acc0 = jnp.zeros_like(o_ref[0])
+    nnz0 = jnp.zeros((bq,), jnp.int32)
+    acc, nnz = jax.lax.fori_loop(0, nk, pass2, (acc0, nnz0))
+    o_ref[0] = acc
+    nnz_ref[0] = nnz
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "threshold",
+                                             "interpret"))
+def pssa_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                          threshold: float,
+                          bq: int = 128, bk: int = 128,
+                          interpret: bool = True):
+    """(BH, T, d) q/k/v -> ((BH, T, d) out, (BH, T) surviving-score counts)."""
+    bh, t, d = q.shape
+    assert t % bq == 0 and t % bk == 0, (t, bq, bk)
+    sm_scale = 1.0 / (d ** 0.5)
+
+    out, nnz = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, sm_scale=sm_scale,
+                          threshold=threshold),
+        grid=(bh, t // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, nnz

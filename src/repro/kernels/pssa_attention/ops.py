@@ -1,0 +1,31 @@
+"""Public op: PSSA attention over (B, H, T, d) with head folding + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pssa_attention.kernel import pssa_attention_kernel
+from repro.kernels.pssa_attention.ref import pssa_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "use_kernel",
+                                             "interpret", "bq", "bk"))
+def pssa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   threshold: float,
+                   use_kernel: bool = True, interpret: bool = True,
+                   bq: int = 128, bk: int = 128):
+    """(B, H, T, d) q/k/v -> ((B, H, T, d) out, (B, H, T) nnz counts)."""
+    b, h, t, d = q.shape
+    fold = lambda x: x.reshape(b * h, t, x.shape[-1])
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    if use_kernel:
+        blk = min(bq, t)
+        while t % blk:
+            blk //= 2
+        out, nnz = pssa_attention_kernel(qf, kf, vf, threshold,
+                                         bq=blk, bk=blk, interpret=interpret)
+    else:
+        out, nnz = pssa_attention_ref(qf, kf, vf, threshold)
+    return out.reshape(b, h, t, d), nnz.reshape(b, h, t)

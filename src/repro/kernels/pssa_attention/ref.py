@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the PSSA pruned-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pssa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       threshold: float):
+    """(BH, T, d) -> (out, nnz): full softmax, prune, matmul."""
+    d = q.shape[-1]
+    scores = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(float(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    keep = p >= threshold
+    p = jnp.where(keep, p, 0.0)
+    out = jnp.einsum("bts,bsd->btd", p, v)
+    nnz = jnp.sum(keep.astype(jnp.int32), axis=-1)
+    return out, nnz

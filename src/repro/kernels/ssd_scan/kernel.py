@@ -1,0 +1,110 @@
+"""Fused Mamba-2 SSD scan Pallas kernel (beyond-paper, §Perf cell A lesson).
+
+The pure-jnp SSD (models/ssm.py) spills every intermediate of the chunked
+algorithm to HBM — decay tensors, per-chunk states, masked segment sums —
+which iteration A2 measured as the dominant memory term of mamba2 training.
+This kernel fuses ONE (batch*head, chunk) tile's whole pipeline in VMEM:
+
+  grid = (BH, T/chunk) with the chunk axis iterated sequentially; the
+  recurrent state (p, n) lives in a VMEM scratch carried across chunk steps
+  (the standard TPU sequential-grid carry pattern), zero-initialized when a
+  new (batch, head) row begins.
+
+  per tile:  dAc    = cumsum(dA)                       (l,)
+             L      = exp(segsum(dA)) (masked tril)    (l, l)
+             y_diag = ((C B^T) ∘ L) @ x                (l, p)   [MXU]
+             y_off  = (C ∘ exp(dAc)) @ state^T         (l, p)   [MXU]
+             state  = exp(dAc[-1] - dAc)-weighted B^T @ x
+                      + exp(dAc[-1]) * state                    [MXU]
+
+Only x, dA, B, C tiles stream in and y tiles stream out — the decay
+tensors never touch HBM.  VMEM bound per tile: l*(2n + 2p) + l*l + p*n
+floats (chunk 128, p 64, n 128: ~180 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, state_out_ref, state_scr,
+            *, nchunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0]                                   # (l, p) float32
+    dA = da_ref[0]                                 # (l,)
+    B = b_ref[0]                                   # (l, n)
+    C = c_ref[0]                                   # (l, n)
+    l = x.shape[0]
+
+    dAc = jnp.cumsum(dA)                           # (l,)
+    # segment sums: seg[i, j] = dAc[i] - dAc[j] for i >= j (decay j -> i)
+    seg = dAc[:, None] - dAc[None, :]
+    mask = jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+    L = jnp.where(mask, jnp.exp(seg), 0.0)         # (l, l)
+
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)
+    y_diag = jnp.dot(scores * L, x, preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                         # (p, n)
+    decay_in = jnp.exp(dAc)[:, None]               # (l, 1)
+    y_off = jnp.dot(C * decay_in, state.T,
+                    preferred_element_type=jnp.float32)
+
+    y_ref[0] = y_diag + y_off
+
+    # state update: decay each position to the chunk end, inject, carry
+    decay_to_end = jnp.exp(dAc[-1] - dAc)[:, None]  # (l, 1)
+    inject = jnp.dot(x.T, B * decay_to_end,
+                     preferred_element_type=jnp.float32)      # (p, n)
+    new_state = jnp.exp(dAc[-1]) * state + inject
+    state_scr[...] = new_state
+
+    @pl.when(c_idx == nchunks - 1)
+    def _emit():
+        state_out_ref[0] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(x, dA, B, C, chunk: int = 128, interpret: bool = True):
+    """Fused SSD over folded heads.
+
+    x (BH, T, p) float32 — pre-multiplied by dt;
+    dA (BH, T) float32 — dt * A (negative reals);
+    B, C (BH, T, n) float32.
+    Returns (y (BH, T, p), final_state (BH, p, n)).
+    """
+    bh, t, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nchunks = t // chunk
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, nchunks=nchunks),
+        grid=(bh, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, p, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, B, C)
+    return y, state

@@ -1,0 +1,44 @@
+"""Public op: fused SSD scan in the model's (B, T, H, P) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret"))
+def ssd_scan_fused(x, dt, A, B, C, chunk: int = 128,
+                   use_kernel: bool = True, interpret: bool = True):
+    """Drop-in for models.ssm.ssd_scan (single B/C group).
+
+    x (b,t,h,p); dt (b,t,h) post-softplus; A (h,)<0; B,C (b,t,n).
+    Returns (y (b,t,h,p), final_state (b,h,p,n)).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    ck = min(chunk, t)
+    while t % ck:
+        ck //= 2
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    dA = (dt * A[None, None, :]).astype(jnp.float32)
+    # fold heads: (b,t,h,p) -> (b*h, t, p); B/C broadcast over heads
+    xf = jnp.moveaxis(xdt, 2, 1).reshape(b * h, t, p)
+    dAf = jnp.moveaxis(dA, 2, 1).reshape(b * h, t)
+    Bf = jnp.broadcast_to(B[:, None], (b, h, t, n)).reshape(b * h, t, n)
+    Cf = jnp.broadcast_to(C[:, None], (b, h, t, n)).reshape(b * h, t, n)
+    Bf = Bf.astype(jnp.float32)
+    Cf = Cf.astype(jnp.float32)
+
+    fn = ssd_scan_kernel if use_kernel else ssd_scan_ref
+    if use_kernel:
+        y, state = fn(xf, dAf, Bf, Cf, chunk=ck, interpret=interpret)
+    else:
+        y, state = fn(xf, dAf, Bf, Cf, chunk=ck)
+    y = jnp.moveaxis(y.reshape(b, h, t, p), 1, 2)
+    return y, state.reshape(b, h, p, n)

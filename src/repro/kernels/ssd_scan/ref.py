@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused SSD kernel (folded-head layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dA, B, C, chunk: int = 128):
+    """Same contract as ssd_scan_kernel: x (BH,T,p) pre-multiplied by dt,
+    dA (BH,T), B/C (BH,T,n) -> (y (BH,T,p), state (BH,p,n)).
+
+    Direct sequential recurrence — the textbook SSM semantics:
+        s_t = exp(dA_t) * s_{t-1} + x_t^T B_t      (p, n)
+        y_t = s_t C_t^T                            (p,)
+    """
+    bh, t, p = x.shape
+    n = B.shape[-1]
+
+    def per_head(xh, dAh, Bh, Ch):
+        def step(s, inp):
+            xt, dat, bt, ct = inp
+            s = jnp.exp(dat) * s + jnp.outer(xt, bt)
+            return s, s @ ct
+        s0 = jnp.zeros((p, n))
+        state, ys = jax.lax.scan(step, s0, (xh, dAh, Bh, Ch))
+        return ys, state
+
+    y, state = jax.vmap(per_head)(x, dA, B, C)
+    return y, state

@@ -1,0 +1,92 @@
+"""Exact, loop-aware FLOP counting by walking the jaxpr.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts a while-loop
+(layer scan / microbatch scan) body ONCE, which silently undercounts a
+60-layer model by 60x.  This walker recurses through scan/while/pjit/remat/
+shard_map sub-jaxprs and multiplies by trip counts, so the count is exact
+for the real schedule (including remat recompute and gradient accumulation).
+
+Convention: matmul/conv FLOPs only (2*MACs) — the standard MFU accounting;
+elementwise ops are excluded (they are counted in the *memory* roofline
+term instead).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax import core
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _dot_flops(eqn) -> float:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
+    batch = _prod(lhs[i] for i in lb)
+    contract = _prod(lhs[i] for i in lc)
+    lfree = _prod(d for i, d in enumerate(lhs) if i not in lc and i not in lb)
+    rfree = _prod(d for i, d in enumerate(rhs) if i not in rc and i not in rb)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    dn = eqn.params["dimension_numbers"]
+    rhs_spec = dn.rhs_spec                  # (O, I_per_group, spatial...)
+    kernel_in = rhs[rhs_spec[1]]            # already per-group channels
+    window = _prod(rhs[i] for i in rhs_spec[2:])
+    return 2.0 * _prod(out) * kernel_in * window
+
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                    "body_jaxpr")
+
+
+def count_jaxpr(jaxpr, shard_multiplier: float = 1.0) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn) * shard_multiplier
+        elif name == "conv_general_dilated":
+            total += _conv_flops(eqn) * shard_multiplier
+        elif name == "scan":
+            body = eqn.params["jaxpr"]
+            n = eqn.params["length"]
+            total += n * count_jaxpr(body.jaxpr, shard_multiplier)
+        elif name == "while":
+            # bounded fori_loop: trip count not in params; treat cond/body
+            # once (not used on hot paths of this codebase)
+            for key in ("cond_jaxpr", "body_jaxpr"):
+                total += count_jaxpr(eqn.params[key].jaxpr, shard_multiplier)
+        elif name == "shard_map":
+            body = eqn.params["jaxpr"]
+            mesh = eqn.params["mesh"]
+            mult = shard_multiplier * _prod(mesh.shape.values())
+            total += count_jaxpr(body, mult)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            # count the largest branch (they are alternatives)
+            total += max(count_jaxpr(b.jaxpr, shard_multiplier)
+                         for b in branches)
+        else:
+            for key in _SUBJAXPR_PARAMS:
+                if key in eqn.params:
+                    sub = eqn.params[key]
+                    sub = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    total += count_jaxpr(sub, shard_multiplier)
+    return total
+
+
+def flops_of_callable(fn, *abstract_args) -> float:
+    """Global (whole-cluster) matmul FLOPs of one call of ``fn``."""
+    jaxpr = jax.make_jaxpr(fn)(*abstract_args)
+    return count_jaxpr(jaxpr.jaxpr)

@@ -1,0 +1,46 @@
+"""Mesh construction (production + elastic variants).
+
+All constructors are FUNCTIONS so importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp_size: int = 16):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    ``tp_size`` re-slices the same chips into (256/tp, tp) — the §Perf
+    hillclimb uses tp=8 for archs whose head count does not divide 16
+    (yi-34b: 56 heads -> GSPMD pads to 64 at tp=16; 56 % 8 == 0)."""
+    per_pod = 256
+    assert per_pod % tp_size == 0, tp_size
+    dp = per_pod // tp_size
+    shape = (2, dp, tp_size) if multi_pod else (dp, tp_size)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_elastic_mesh(tp_size: int = 16):
+    """Build the largest (data, model) mesh from the LIVE device count.
+
+    Elastic scaling: after losing hosts, relaunch calls this and gets a
+    smaller-but-valid mesh (model axis preserved so param shards stay
+    compatible; the data axis absorbs the loss).
+    """
+    n = len(jax.devices())
+    tp = min(tp_size, n)
+    while n % tp:
+        tp -= 1
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
+
+
+def make_smoke_mesh():
+    """1x1 mesh on the single CPU device (tests exercise the sharded code
+    paths without fake devices)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

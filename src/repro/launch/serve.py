@@ -1,0 +1,80 @@
+"""Production serving launcher: prefill + batched decode for any arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --batch 4 --prompt-len 32 --new-tokens 32 [--kv-int8]
+
+Serving-path features: grouped-GQA decode (no KV repeat), donated cache
+buffers (in-place update), optional int8 KV cache, TIPS sink-token mixed
+precision in the FFN (cfg.tips).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if args.kv_int8:
+        cfg = cfg.scaled(kv_cache_dtype="int8")
+    max_seq = args.prompt_len + args.new_tokens
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    t0 = time.time()
+    logits, pcache = T.prefill(params, cfg, None, tokens=prompts)
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time() - t0:.2f}s")
+
+    # decode cache sized for the full sequence; copy the prefill KV in
+    cache = T.init_cache(cfg, args.batch, max_seq)
+    if cfg.family in ("dense", "moe"):
+        from repro.models.layers import _kv_store
+        cache = {
+            k: jax.lax.dynamic_update_slice_in_dim(
+                cache[k], _kv_store(pcache[k], cache[k].dtype), 0, axis=2)
+            for k in ("k", "v")}
+    elif cfg.family == "ssm":
+        cache = pcache
+
+    step_fn = jax.jit(
+        lambda p, c, t, pos: T.decode_step(p, c, t, pos, cfg, None),
+        donate_argnums=(1,))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, cache = step_fn(params, cache, tok, pos)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    seq = jnp.concatenate(out, axis=1)
+    print(f"decode: {seq.shape[1]} tokens x {args.batch} in {dt:.2f}s "
+          f"({args.batch * seq.shape[1] / max(dt, 1e-9):.1f} tok/s)"
+          f"{' [int8 KV]' if args.kv_int8 else ''}")
+    print("sample:", seq[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,426 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, FFN (+paper hooks).
+
+All functions are pure; parameters are plain dict pytrees.  Sharding is
+expressed through ``with_sharding_constraint`` on activations when a
+``ShardCtx`` is supplied (the dry-run / production path); smoke tests pass
+``ctx=None`` and run unconstrained on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+# ----------------------------------------------------------------------------
+# Sharding context
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries the mesh + canonical axis roles through the model.
+
+    ``tp_axis=None`` folds tensor parallelism away (TP-fold, §Perf): model
+    code keeps writing the literal "model" in its constraints and ``cs``
+    rewrites it — to the physical axis normally, to replicated when folded
+    (the physical 'model' axis then serves as extra data parallelism via
+    ``dp_axes``)."""
+    mesh: object                       # jax.sharding.Mesh
+    dp_axes: tuple                     # ('pod', 'data') or ('data',)
+    tp_axis: str | None = "model"
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    def cs(self, x, *spec):
+        """Constraint helper: cs(x, dp, None, 'model') etc."""
+        spec = tuple(self.tp_axis if s == "model" else s for s in spec)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+def maybe_cs(ctx: Optional[ShardCtx], x, *spec):
+    return ctx.cs(x, *spec) if ctx is not None else x
+
+
+# ----------------------------------------------------------------------------
+# Norms / embeddings
+# ----------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """(B, T, d) @ (d, V) -> logits in float32."""
+    return jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ----------------------------------------------------------------------------
+# RoPE (supports partial rotary — chatglm3's 2-D RoPE rotates half the dims)
+# ----------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float):
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, rotary_pct: float, theta: float):
+    """x: (B, T, H, hd); positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    inv, rot_dim = rope_frequencies(hd, rotary_pct, theta)
+    if rot_dim == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                      # (B, T, rot/2)
+    sin = jnp.sin(ang)[..., None, :]                # (B, T, 1, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    xr = x[..., :rot_dim]
+    xp = x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / decode-with-cache) + PSSA hook
+# ----------------------------------------------------------------------------
+def init_attn_params(key, cfg: ArchConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * s).astype(dtype),
+    }
+
+
+def attn_param_specs(cfg: ArchConfig):
+    """PartitionSpecs (without the stacked layer axis)."""
+    return {
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+
+
+def _causal_mask(tq, tk, offset=0):
+    q = jnp.arange(tq)[:, None] + offset
+    k = jnp.arange(tk)[None, :]
+    return q >= k
+
+
+def _window_mask(tq, tk, window, offset=0):
+    q = jnp.arange(tq)[:, None] + offset
+    k = jnp.arange(tk)[None, :]
+    return (q >= k) & (q - k < window)
+
+
+def gqa_attention(x, p, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                  positions, window: int = 0,
+                  prune_threshold: float = 0.0,
+                  q_chunk: int = 1024,
+                  global_flag=None):
+    """Full-sequence causal GQA attention.  (B, T, d) -> (B, T, d).
+
+    ``prune_threshold`` > 0 applies PSSA step-1 pruning to the post-softmax
+    scores (the pruned SAS is what the PSXU compresses on its way to DRAM).
+
+    For T > q_chunk the score/softmax/PV block runs chunked over queries
+    (lax.scan), bounding the materialized score block to (B, H, qc, T) —
+    the TPU-native replacement for spilling the full SAS.
+    """
+    b, t, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(b, t, kv, hd)
+    v = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(b, t, kv, hd)
+    q = apply_rope(q, positions, cfg.rotary_pct, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rotary_pct, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.cs(q, ctx.dp, None, "model", None)
+
+    g = h // kv
+
+    def block(qb, offset):
+        """qb: (b, qc, h, hd) -> (out (b, qc, h*hd), sink (b, qc)).
+
+        Grouped-query einsums: KV is NEVER repeated to full heads (§Perf —
+        a materialized repeat multiplies KV reads by the group factor g)."""
+        qc = qb.shape[1]
+        qg = qb.reshape(b, qc, kv, g, hd)
+        scores = jnp.einsum("btkgd,bskd->bkgts", qg, k) \
+            / jnp.sqrt(float(hd))
+        if ctx is not None:
+            scores = ctx.cs(scores, ctx.dp, "model", None, None, None)
+        causal = _causal_mask(qc, t, offset)
+        if window and global_flag is not None:
+            # scan-uniform hybrid: per-layer traced global/SWA select
+            band = _window_mask(qc, t, window, offset)
+            mask = causal & jnp.logical_or(global_flag, band)
+        elif window:
+            mask = _window_mask(qc, t, window, offset)
+        else:
+            mask = causal
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        if prune_threshold > 0.0:
+            probs = jnp.where(probs >= prune_threshold, probs, 0.0)
+        # TIPS sink CAS: attention of every query to the first (sink) token,
+        # averaged over heads — the LM generalization of the CLS score.
+        sink = jnp.mean(probs[..., 0], axis=(1, 2))               # (b, qc)
+        probs = probs.astype(x.dtype)
+        ob = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+        return ob.reshape(b, qc, h * hd), sink
+
+    if t > q_chunk and t % q_chunk == 0:
+        nq = t // q_chunk
+        qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, hd), 1, 0)
+
+        def body(carry, inp):
+            i, qb = inp
+            ob, sink = block(qb, i * q_chunk)
+            return carry, (ob, sink)
+
+        _, (outs, sinks) = jax.lax.scan(
+            body, 0, (jnp.arange(nq), qs))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, t, h * hd)
+        sink_cas = jnp.moveaxis(sinks, 0, 1).reshape(b, t)
+    else:
+        out, sink_cas = block(q, 0)
+
+    out = jnp.einsum("btk,kd->btd", out, p["wo"])
+    out = maybe_cs(ctx, out, ctx.dp if ctx else None, None, None)
+    # row-parallel psum lives here; name it so the remat policy can pin it
+    out = checkpoint_name(out, "tp_psum_out")
+    return out, sink_cas, (k, v)
+
+
+def swa_attention_chunked(x, p, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                          positions, window: int):
+    """Banded (sliding-window) attention, truly sub-quadratic.
+
+    Queries are chunked at ``window``; each chunk attends to itself and the
+    previous chunk with the band mask — O(T * 2w) instead of O(T^2).  Used
+    for long prefill on SWA layers (hymba).  Sink-CAS is not defined for a
+    banded layer (the sink leaves the band), so TIPS masks come from the
+    global layers only.
+    """
+    b, t, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    assert t % window == 0, (t, window)
+    nc = t // window
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(b, t, kv, hd)
+    v = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(b, t, kv, hd)
+    q = apply_rope(q, positions, cfg.rotary_pct, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rotary_pct, cfg.rope_theta)
+
+    g = h // kv
+    qc = q.reshape(b, nc, window, kv, g, hd)
+    kc = k.reshape(b, nc, window, kv, hd)
+    vc = v.reshape(b, nc, window, kv, hd)
+    # previous chunk (zero-padded for the first)
+    kprev = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kcat = jnp.concatenate([kprev, kc], axis=2)        # (b,nc,2w,kv,hd)
+    vcat = jnp.concatenate([vprev, vc], axis=2)
+    scores = jnp.einsum("bclkgh,bcskh->bckgls", qc, kcat) / jnp.sqrt(float(hd))
+    qpos = jnp.arange(window)[:, None] + window        # within [w, 2w)
+    kpos = jnp.arange(2 * window)[None, :]
+    band = (qpos >= kpos) & (qpos - kpos < window)
+    first = jnp.zeros((nc,), bool).at[0].set(True)
+    pad_valid = kpos >= window                          # first chunk: no prev
+    mask = jnp.where(first[:, None, None], band & pad_valid, band)
+    scores = jnp.where(mask[None, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bckgls,bcskh->bclkgh", probs, vcat)
+    out = out.reshape(b, t, h * hd)
+    out = jnp.einsum("btk,kd->btd", out, p["wo"])
+    return maybe_cs(ctx, out, ctx.dp if ctx else None, None, None)
+
+
+# int8 KV-cache grid (§Perf decode iteration 3 — the serving analogue of
+# PSSA: compress the attention-side DRAM traffic).  RoPE'd keys/values from
+# unit-scale projections sit within ~|4|; 0.05 granularity covers ±6.35.
+KV_INT8_SCALE = 0.05
+
+
+def _kv_store(x, dtype):
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x / KV_INT8_SCALE), -127, 127
+                        ).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def _kv_load(x):
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.bfloat16) * KV_INT8_SCALE
+    return x
+
+
+def decode_attention(x, p, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                     cache_k, cache_v, position, window: int = 0):
+    """Single-token decode with a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S, kv, hd); position: scalar int (same for
+    every row — the serving batch is position-aligned).
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = cache_k.shape[1]
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, 1, h, hd)
+    knew = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(b, 1, kv, hd)
+    vnew = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(b, 1, kv, hd)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q = apply_rope(q, pos, cfg.rotary_pct, cfg.rope_theta)
+    knew = apply_rope(knew, pos, cfg.rotary_pct, cfg.rope_theta)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, _kv_store(knew, cache_k.dtype), position, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, _kv_store(vnew, cache_v.dtype), position, axis=1)
+
+    g = h // kv
+    # grouped-query decode: no KV repeat (a materialized repeat multiplies
+    # the cache read — the dominant decode HBM term — by g; §Perf)
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.bfloat16),
+                        _kv_load(cache_k)) / jnp.sqrt(float(hd))
+    idx = jnp.arange(s)
+    valid = idx <= position
+    if window:
+        valid &= idx > position - window
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    sink_cas = jnp.mean(probs[..., 0], axis=(1, 2))[:, None]   # (b, 1)
+    probs = probs.astype(jnp.bfloat16)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs,
+                     _kv_load(cache_v)).astype(x.dtype).reshape(b, 1, h * hd)
+    out = jnp.einsum("btk,kd->btd", out, p["wo"])
+    return out, cache_k, cache_v, sink_cas
+
+
+def decode_attention_slot(x, p, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                          cache_k, cache_v, position, slot, window: int = 0):
+    """Decode attention over a ring-buffer cache (hybrid SWA layers).
+
+    The cache holds W slots; the new KV is written at ``slot``
+    (= position % W for SWA, = position for global layers with W = max_seq).
+    RoPE is applied at write time, so slots are position-agnostic; validity
+    is derived from the absolute position window.
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    w = cache_k.shape[1]
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, 1, h, hd)
+    knew = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(b, 1, kv, hd)
+    vnew = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(b, 1, kv, hd)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q = apply_rope(q, pos, cfg.rotary_pct, cfg.rope_theta)
+    knew = apply_rope(knew, pos, cfg.rotary_pct, cfg.rope_theta)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, knew.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, vnew.astype(cache_v.dtype), slot, axis=1)
+
+    # absolute position stored in each slot (ring arithmetic)
+    idx = jnp.arange(w)
+    if window:
+        # slot i currently holds the latest position p with p % w == i, p <= position
+        slot_pos = position - ((position - idx) % w)
+    else:
+        slot_pos = idx
+    valid = (slot_pos >= 0) & (slot_pos <= position)
+    if window:
+        valid &= slot_pos > position - window
+
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k) \
+        / jnp.sqrt(float(hd))
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    # sink CAS only meaningful for global layers (slot 0 holds position 0)
+    sink_cas = jnp.mean(probs[..., 0], axis=(1, 2))[:, None]
+    probs = probs.astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cache_v).reshape(b, 1, h * hd)
+    out = jnp.einsum("btk,kd->btd", out, p["wo"])
+    return out, cache_k, cache_v, sink_cas
+
+
+# ----------------------------------------------------------------------------
+# FFN (SwiGLU / GELU) + TIPS mixed-precision hook
+# ----------------------------------------------------------------------------
+def init_ffn_params(key, d_model: int, d_ff: int, activation: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model))
+                   * d_ff ** -0.5).astype(dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype)
+    return p
+
+
+def ffn_param_specs(activation: str):
+    p = {"w_up": P(None, "model"), "w_down": P("model", None)}
+    if activation == "swiglu":
+        p["w_gate"] = P(None, "model")
+    return p
+
+
+def ffn(x, p, activation: str, ctx: Optional[ShardCtx],
+        tips_important=None):
+    """(B, T, d) -> (B, T, d).
+
+    ``tips_important``: bool (B, T) — rows kept at INT12; others fake-quant
+    to INT6 on the shared scale grid before the FFN matmuls (TIPS §IV-A).
+    """
+    if tips_important is not None:
+        from repro.core import tips as tips_mod
+        x = tips_mod.apply_precision_mask(x, tips_important)
+    if activation == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        u = jnp.einsum("btd,df->btf", x, p["w_up"])
+        hmid = jax.nn.silu(g) * u
+    else:
+        hmid = jax.nn.gelu(jnp.einsum("btd,df->btf", x, p["w_up"]))
+    hmid = maybe_cs(ctx, hmid, ctx.dp if ctx else None, None, "model")
+    out = jnp.einsum("btf,fd->btd", hmid, p["w_down"])
+    out = maybe_cs(ctx, out, ctx.dp if ctx else None, None, None)
+    return checkpoint_name(out, "tp_psum_out")
+
+
+def tips_sink_mask(x, p_attn, cfg: ArchConfig, probs_sink):
+    """Sink-token CAS -> importance mask (the LM generalization of TIPS)."""
+    from repro.core import tips as tips_mod
+    # probs_sink: (B, H, T) attention of each query to the sink (first) token
+    cas = jnp.mean(probs_sink, axis=1)
+    return cas < cfg.tips_threshold

@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) in JAX (arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks; each chunk's
+diagonal block is computed quadratically (attention-like, MXU-friendly),
+inter-chunk information flows through a small recurrent state carried by a
+``lax.scan`` over chunks.  Decode is the O(1) recurrent update.
+
+Shapes follow the minimal-mamba2 reference: x (B, T, H, P), dt (B, T, H),
+A (H,) negative reals, B/C (B, T, G, N) with G=1 group.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ShardCtx, maybe_cs, rms_norm
+
+
+def _segsum(x):
+    """(..., L) -> (..., L, L) lower-triangular segment sums.
+
+    out[..., l, s] = sum_{s < i <= l} x[..., i]  (for l >= s, else -inf)
+    """
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD forward.
+
+    x: (b, t, h, p); dt: (b, t, h) (post-softplus); A: (h,) < 0;
+    B, C: (b, t, n) (single group).  Returns (y (b,t,h,p), state (b,h,p,n)).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    c = t // chunk
+
+    # fold dt into x; dA = dt * A per step
+    xdt = x * dt[..., None]                          # (b,t,h,p)
+    dA = dt * A[None, None, :]                       # (b,t,h)
+
+    # chunk views
+    xc = xdt.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+    dAc = dA.reshape(b, c, chunk, h)
+
+    dA_cum = jnp.cumsum(dAc, axis=2)                 # (b,c,l,h)
+
+    # 1) intra-chunk (diagonal blocks): quadratic, attention-like.
+    # The (b,c,h,l,l) decay tensor dominates the layer's HBM footprint
+    # (§Perf mamba2 iteration 2): the segment-sum/exp run in f32 for
+    # stability, then the big operands drop to bf16 for the MXU einsum
+    # with f32 accumulation — halves the dominant memory term.
+    Ldec = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))  # (b,c,h,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)    # (b,c,l,s)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        scores.astype(jnp.bfloat16),
+                        Ldec.astype(jnp.bfloat16),
+                        xc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+
+    # 2) per-chunk states: contribution of each chunk to the running state
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_to_end, xc)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,c,h)
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, p, n), x.dtype)
+    else:
+        s0 = initial_state
+
+    def step(carry, inp):
+        st, dec = inp                                # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                            # emit state *entering* chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (b,c,h,p,n)
+
+    # 4) off-diagonal: prior state read out through the chunk
+    state_decay_in = jnp.exp(dA_cum)                 # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states,
+                       state_decay_in)
+
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """O(1) recurrent update.  x: (b,h,p); dt: (b,h); B,C: (b,n);
+    state: (b,h,p,n) -> (y (b,h,p), new_state)."""
+    dA = jnp.exp(dt * A[None, :])                    # (b,h)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", B, dt, x)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C)
+    return y, new_state
+
+
+# ----------------------------------------------------------------------------
+# Full Mamba-2 mixer layer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ----------------------------------------------------------------------------
+def init_ssm_params(key, cfg: ArchConfig, dtype):
+    """Input projection is SPLIT into (z, xBC, dt) heads — fused-width TP
+    slicing would cross segment boundaries AND the fused width
+    (2*di + 2*n + heads) is generally not divisible by the TP degree."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "in_z": (jax.random.normal(k1, (d, di)) * s).astype(dtype),
+        "in_xbc": (jax.random.normal(k4, (d, conv_ch)) * s).astype(dtype),
+        "in_dt": (jax.random.normal(k5, (d, h)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(k3, (di, d))
+                     * di ** -0.5).astype(dtype),
+    }
+
+
+def ssm_param_specs(cfg: ArchConfig):
+    return {
+        "in_z": P(None, "model"),
+        "in_xbc": P(None, "model"),
+        "in_dt": P(None, None),         # heads (24/50) rarely divide TP=16
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "gate_norm": P("model"),
+        "out_proj": P("model", None),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width W, via shifted adds (W is tiny)."""
+    W = w.shape[0]
+    out = xBC * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def mamba_mixer(x, p, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                chunk: int = 128, return_cache: bool = False):
+    """Full-sequence Mamba-2 mixer: (B, T, d) -> (B, T, d)."""
+    b, t, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("btd,dk->btk", x, p["in_z"])
+    xBC_raw = jnp.einsum("btd,dk->btk", x, p["in_xbc"])
+    dt = jnp.einsum("btd,dk->btk", x, p["in_dt"])
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(b, t, h, hd)
+    Bm = xBC[..., di:di + n]
+    Cm = xBC[..., di + n:]
+    if ctx is not None:
+        xs = ctx.cs(xs, ctx.dp, None, "model", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    ck = min(chunk, t)
+    while t % ck:
+        ck //= 2
+    if cfg.use_ssd_kernel:
+        # fused Pallas path (§Perf A4): decay tensors stay in VMEM
+        from repro.kernels.ssd_scan import ssd_scan_fused
+        y, final_state = ssd_scan_fused(xs, dt, A, Bm, Cm, chunk=ck)
+    else:
+        y, final_state = ssd_scan(xs.astype(jnp.float32), dt, A,
+                                  Bm.astype(jnp.float32),
+                                  Cm.astype(jnp.float32), ck)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, p["out_proj"])
+    out = maybe_cs(ctx, out, ctx.dp if ctx else None, None, None)
+    if return_cache:
+        w = cfg.ssm_conv_width
+        cache = {"state": final_state,
+                 "conv": xBC_raw[:, t - (w - 1):, :]}
+        return out, cache
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    """Decode cache per layer: recurrent state + conv window."""
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, h, hd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba_decode(x, cache, p, cfg: ArchConfig, ctx: Optional[ShardCtx]):
+    """One-token decode: x (B, 1, d) -> (out (B, 1, d), new cache)."""
+    b = x.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x0 = x[:, 0]
+    z = jnp.einsum("bd,dk->bk", x0, p["in_z"])
+    xBC = jnp.einsum("bd,dk->bk", x0, p["in_xbc"])
+    dt = jnp.einsum("bd,dk->bk", x0, p["in_dt"])
+    # conv over the rolling window
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    new_conv = win[:, 1:, :]
+    conv_out = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    xs = xBC[..., :di].reshape(b, h, hd).astype(jnp.float32)
+    Bm = xBC[..., di:di + n].astype(jnp.float32)
+    Cm = xBC[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_step(xs, dt, A, Bm, Cm, cache["state"])
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"state": new_state, "conv": new_conv}

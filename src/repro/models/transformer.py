@@ -1,0 +1,385 @@
+"""Decoder stack assembly for all assigned families (dense/moe/ssm/hybrid).
+
+Layers are ``lax.scan``-stacked (stacked weights, leading L axis) so the HLO
+stays small at 60 layers and AOT compiles fast across 512 fake devices.
+The hybrid (hymba) decode path unrolls a Python loop instead, because its
+per-layer KV caches differ in size (3 global layers, 29 sliding-window).
+
+Paper features (first-class, per DESIGN.md §4):
+  * PSSA  — post-softmax score pruning in self-attention (cfg.pssa)
+  * TIPS  — sink-token CAS -> per-token INT12/INT6 FFN precision (cfg.tips)
+  * DBSC  — bit-slice integer FFN execution for serving (cfg.dbsc; the
+            Pallas kernel path is exercised by examples/serve_lm.py and the
+            kernel tests; the lowered dry-run uses the bf16 tensor path)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import ShardCtx, maybe_cs
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _is_global_layer(cfg: ArchConfig, i: int) -> bool:
+    if not cfg.sliding_window:
+        return True
+    return i in (0, cfg.num_layers // 2, cfg.num_layers - 1)
+
+
+# ----------------------------------------------------------------------------
+# Parameter init / specs
+# ----------------------------------------------------------------------------
+def init_layer_params(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((d,), dtype)}
+    if cfg.family in ("dense", "moe", "hybrid"):
+        p.update(L.init_attn_params(ks[0], cfg, dtype))
+        p["ln2"] = jnp.ones((d,), dtype)
+    if cfg.family == "dense":
+        p.update(L.init_ffn_params(ks[1], d, cfg.d_ff, cfg.ffn_activation,
+                                   dtype))
+    elif cfg.family == "moe":
+        p["moe"] = MOE.init_moe_params(ks[1], cfg, dtype)
+    elif cfg.family == "ssm":
+        p["ssm"] = SSM.init_ssm_params(ks[1], cfg, dtype)
+    elif cfg.family == "hybrid":
+        p["ssm"] = SSM.init_ssm_params(ks[1], cfg, dtype)
+        p["attn_norm"] = jnp.ones((d,), dtype)
+        p["ssm_norm"] = jnp.ones((d,), dtype)
+        p.update(L.init_ffn_params(ks[2], d, cfg.d_ff, cfg.ffn_activation,
+                                   dtype))
+    return p
+
+
+def layer_param_specs(cfg: ArchConfig, tp_size: int):
+    p = {"ln1": P(None)}
+    if cfg.family in ("dense", "moe", "hybrid"):
+        p.update(L.attn_param_specs(cfg))
+        p["ln2"] = P(None)
+    if cfg.family == "dense":
+        p.update(L.ffn_param_specs(cfg.ffn_activation))
+    elif cfg.family == "moe":
+        p["moe"] = MOE.moe_param_specs(cfg, tp_size)
+    elif cfg.family == "ssm":
+        p["ssm"] = SSM.ssm_param_specs(cfg)
+    elif cfg.family == "hybrid":
+        p["ssm"] = SSM.ssm_param_specs(cfg)
+        p["attn_norm"] = P(None)
+        p["ssm_norm"] = P(None)
+        p.update(L.ffn_param_specs(cfg.ffn_activation))
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = _dtype(cfg)
+    k_embed, k_out, k_layers = jax.random.split(key, 3)
+    d, v = cfg.d_model, cfg.vocab_size
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer_params(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": (jax.random.normal(k_embed, (v, d)) * 0.02).astype(dtype),
+        "unembed": (jax.random.normal(k_out, (d, v)) * d ** -0.5).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "layers": stacked,
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct param tree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_specs(cfg: ArchConfig, tp_size: int):
+    lspecs = layer_param_specs(cfg, tp_size)
+    stacked = jax.tree.map(lambda s: P(None, *s), lspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    # vocab-parallel embeddings when the vocab divides the TP axis; otherwise
+    # shard the hidden axis (50280/92553/32001-style vocabs — explicit
+    # in_shardings require exact divisibility, unlike constraints)
+    if cfg.vocab_size % tp_size == 0:
+        embed, unembed = P("model", None), P(None, "model")
+    else:
+        embed, unembed = P(None, "model"), P("model", None)
+    return {
+        "embed": embed,
+        "unembed": unembed,
+        "final_norm": P(None),
+        "layers": stacked,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------------
+def _block_train(x, lp, cfg: ArchConfig, ctx, positions, is_global=None,
+                 collect_cache=False):
+    """One layer, full-sequence.  Returns (x, aux_loss, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    tips_mask = None
+    cache = None
+    prune = cfg.pssa_threshold if cfg.pssa else 0.0
+
+    if cfg.family == "ssm":
+        xa = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if collect_cache:
+            h, cache = SSM.mamba_mixer(xa, lp["ssm"], cfg, ctx,
+                                       return_cache=True)
+        else:
+            h = SSM.mamba_mixer(xa, lp["ssm"], cfg, ctx)
+        return x + h, aux, cache
+
+    xa = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if cfg.family == "hybrid":
+        attn_out, sink, kv = L.gqa_attention(xa, lp, cfg, ctx, positions,
+                                             window=cfg.sliding_window,
+                                             prune_threshold=prune,
+                                             global_flag=is_global)
+        if collect_cache:
+            ssm_out, ssm_cache = SSM.mamba_mixer(xa, lp["ssm"], cfg, ctx,
+                                                 return_cache=True)
+            cache = {"k": kv[0], "v": kv[1], "ssm": ssm_cache}
+        else:
+            ssm_out = SSM.mamba_mixer(xa, lp["ssm"], cfg, ctx)
+        attn_out = L.rms_norm(attn_out, lp["attn_norm"], cfg.norm_eps)
+        ssm_out = L.rms_norm(ssm_out, lp["ssm_norm"], cfg.norm_eps)
+        h = 0.5 * (attn_out + ssm_out)
+    else:
+        attn_out, sink, kv = L.gqa_attention(xa, lp, cfg, ctx, positions,
+                                             prune_threshold=prune)
+        if collect_cache:
+            cache = {"k": kv[0], "v": kv[1]}
+        h = attn_out
+    x = x + h
+
+    if cfg.tips:
+        tips_mask = sink < cfg.tips_threshold      # important tokens
+
+    xf = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = MOE.moe_ffn(xf, lp["moe"], cfg, ctx,
+                             tips_important=tips_mask)
+    else:
+        f = L.ffn(xf, lp, cfg.ffn_activation, ctx, tips_important=tips_mask)
+    return x + f.astype(x.dtype), aux, cache
+
+
+# ----------------------------------------------------------------------------
+# Forward (train / prefill)
+# ----------------------------------------------------------------------------
+def forward(params, cfg: ArchConfig, ctx: Optional[ShardCtx],
+            tokens=None, embeds=None, remat: bool = True,
+            collect_cache: bool = False, last_logit_only: bool = False):
+    """-> (logits float32, aux, cache-or-None)."""
+    if embeds is None:
+        x = L.embed(tokens, params["embed"])
+        if ctx is not None:
+            x = ctx.cs(x, ctx.dp, None, None)
+    else:
+        x = embeds
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    if cfg.sliding_window:
+        is_global = jnp.array([_is_global_layer(cfg, i)
+                               for i in range(cfg.num_layers)])
+    else:
+        is_global = None
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs["lp"]
+        ig = xs.get("ig")
+        x, a, cache = _block_train(x, lp, cfg, ctx, positions, is_global=ig,
+                                   collect_cache=collect_cache)
+        return (x, aux + a), cache
+
+    if remat:
+        if cfg.remat_save_collectives:
+            # §Perf: save the two post-psum activations per layer so the
+            # backward replay does NOT re-run the TP all-reduces (cuts the
+            # per-layer AR count 6 -> 4 at ~2 extra saved tensors/layer)
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.save_only_these_names(
+                    "tp_psum_out"))
+        else:
+            body = jax.checkpoint(body)   # save-nothing: full recompute
+
+    xs = {"lp": params["layers"]}
+    if is_global is not None:
+        xs["ig"] = is_global
+    (x, aux), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    if last_logit_only:
+        x = x[:, -1:, :]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["unembed"])
+    if not last_logit_only:
+        logits = maybe_cs(ctx, logits, ctx.dp if ctx else None, None, "model")
+    return logits, aux, cache
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx, aux_coef: float = 0.01):
+    logits, aux, _ = forward(params, cfg, ctx,
+                             tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_coef * aux, {"nll": nll, "aux": aux}
+
+
+# ----------------------------------------------------------------------------
+# Decode (serving): KV/SSM caches, one-token step
+# ----------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    dtype = _dtype(cfg)
+    lcount = cfg.num_layers
+    if cfg.family == "ssm":
+        one = SSM.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((lcount,) + a.shape, a.dtype), one)
+    if cfg.family == "hybrid":
+        caches = []
+        for i in range(lcount):
+            s = max_seq if _is_global_layer(cfg, i) else min(
+                cfg.sliding_window, max_seq)
+            caches.append({
+                "k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim),
+                               dtype),
+                "ssm": SSM.init_ssm_cache(cfg, batch, dtype),
+            })
+        return caches
+    # dense / moe: uniform stacked KV (optionally int8-compressed — §Perf)
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+    kv = jnp.zeros((lcount, batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                   kv_dtype)
+    return {"k": kv, "v": jnp.zeros_like(kv)}
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dp_axes: tuple, tp_size: int):
+    """PartitionSpecs for the decode cache (DESIGN.md §5 rules)."""
+    bspec = dp_axes if batch >= 2 * tp_size else None
+    if cfg.family == "ssm":
+        # state (L, B, h, p, n): shard the head_dim axis p (64 — always
+        # TP-divisible); the head count (24/50) generally is not.
+        state = P(None, bspec, None, "model", None)
+        conv = P(None, bspec, None, "model")
+        return {"state": state, "conv": conv}
+    if cfg.num_kv_heads % tp_size == 0:
+        kvspec = P(None, bspec, None, "model", None)
+    elif bspec is None:
+        # long-context single-request: shard the sequence everywhere
+        kvspec = P(None, None, tuple(dp_axes) + ("model",), None, None)
+    else:
+        kvspec = P(None, bspec, "model", None, None)
+    if cfg.family == "hybrid":
+        per_layer = {
+            "k": P(*kvspec[1:]), "v": P(*kvspec[1:]),
+            "ssm": {"state": P(bspec, None, "model", None),
+                    "conv": P(bspec, None, "model")},
+        }
+        return [per_layer] * cfg.num_layers
+    return {"k": kvspec, "v": kvspec}
+
+
+def decode_step(params, cache, tokens, position, cfg: ArchConfig,
+                ctx: Optional[ShardCtx]):
+    """One decode step.  tokens: (B, 1) int32; position: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = L.embed(tokens, params["embed"])
+    if ctx is not None:
+        x = ctx.cs(x, ctx.dp if tokens.shape[0] > 1 else None, None, None)
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, c = xs["lp"], xs["cache"]
+            h, nc = SSM.mamba_decode(
+                L.rms_norm(x, lp["ln1"], cfg.norm_eps), c, lp["ssm"], cfg, ctx)
+            return x + h, nc
+        x, new_cache = jax.lax.scan(
+            body, x, {"lp": params["layers"], "cache": cache})
+    elif cfg.family == "hybrid":
+        new_cache = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            c = cache[i]
+            xa = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            win = c["k"].shape[1]
+            is_g = _is_global_layer(cfg, i)
+            # ring-buffer slot for SWA layers; linear slot for global layers
+            slot = position if is_g else position % win
+            attn_out, ck, cv, sink = L.decode_attention_slot(
+                xa, lp, cfg, ctx, c["k"], c["v"], position, slot,
+                window=0 if is_g else win)
+            ssm_out, nssm = SSM.mamba_decode(xa, c["ssm"], lp["ssm"], cfg, ctx)
+            attn_out = L.rms_norm(attn_out, lp["attn_norm"], cfg.norm_eps)
+            ssm_out = L.rms_norm(ssm_out, lp["ssm_norm"], cfg.norm_eps)
+            x = x + 0.5 * (attn_out + ssm_out)
+            tips_mask = (sink < cfg.tips_threshold) if cfg.tips else None
+            xf = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.ffn(xf, lp, cfg.ffn_activation, ctx,
+                          tips_important=tips_mask)
+            new_cache.append({"k": ck, "v": cv, "ssm": nssm})
+    else:
+        def body(carry, xs):
+            x = carry
+            lp, ck, cv = xs["lp"], xs["k"], xs["v"]
+            xa = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            attn_out, nk, nv, sink = L.decode_attention(
+                xa, lp, cfg, ctx, ck, cv, position)
+            x = x + attn_out
+            tips_mask = (sink < cfg.tips_threshold) if cfg.tips else None
+            xf = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = MOE.moe_ffn(xf, lp["moe"], cfg, ctx,
+                                   tips_important=tips_mask)
+            else:
+                f = L.ffn(xf, lp, cfg.ffn_activation, ctx,
+                          tips_important=tips_mask)
+            return x + f, {"k": nk, "v": nv}
+
+        x, new_cache = jax.lax.scan(
+            body, x, {"lp": params["layers"], **cache})
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["unembed"])
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, ctx, tokens=None, embeds=None):
+    """Prefill: last-token logits + the populated per-layer cache.
+
+    Writing the cache out is the honest serving cost (it dominates prefill
+    HBM traffic at 32k context); logits are trimmed to the final position,
+    which is all decoding needs.
+    """
+    logits, _, cache = forward(params, cfg, ctx, tokens=tokens, embeds=embeds,
+                               remat=False, collect_cache=True,
+                               last_logit_only=True)
+    return logits, cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, adamw  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine  # noqa: F401
+from repro.optim.compression import compress_gradients, error_feedback_update  # noqa: F401

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.models import transformer as T
+from repro.optim import AdamW
+from repro.train import make_train_step
+
+BATCH, SEQ = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.embedding_input:
+        return {"embeds": jax.random.normal(key, (BATCH, SEQ, cfg.d_model),
+                                            jnp.bfloat16),
+                "labels": jax.random.randint(key, (BATCH, SEQ), 0,
+                                             cfg.vocab_size)}
+    toks = jax.random.randint(key, (BATCH, SEQ), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_arch(arch).smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux, _ = T.forward(params, cfg, None,
+                               tokens=b.get("tokens"),
+                               embeds=b.get("embeds"))
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_no_nan(arch):
+    cfg = get_arch(arch).smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, None, opt))
+    state = (params, opt.init(params), jnp.zeros(()))
+    state, metrics = step(state, _batch(cfg, jax.random.PRNGKey(1)))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda p0, p1: float(jnp.sum(jnp.abs(
+            p0.astype(jnp.float32) - p1.astype(jnp.float32)))),
+            params, state[0]))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_step_matches_cache_semantics(arch):
+    """decode_step produces finite logits and updates the cache in place."""
+    cfg = get_arch(arch).smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    cache = T.init_cache(cfg, batch=BATCH, max_seq=16)
+    tok = jax.random.randint(jax.random.PRNGKey(2), (BATCH, 1), 0,
+                             cfg.vocab_size)
+    logits, new_cache = T.decode_step(params, cache, tok,
+                                      jnp.asarray(0, jnp.int32), cfg, None)
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache structure preserved
+    jax.tree.map(lambda a, b: None
+                 if a.shape == b.shape else pytest.fail("cache shape"),
+                 cache, new_cache)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-130m", "hymba-1.5b"])
+def test_prefill_then_decode_consistent(arch):
+    """Greedy continuation: prefill cache + decode next token == running
+    forward on the extended sequence (teacher forcing)."""
+    # vanilla path: TIPS fake-quant uses a full-tensor scale in prefill but a
+    # per-step scale in decode, so exact consistency holds with features off
+    cfg = get_arch(arch).smoke().scaled(tips=False, pssa=False)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              cfg.vocab_size)
+
+    logits_full, _, _ = T.forward(params, cfg, None, tokens=toks,
+                                  remat=False)
+    # prefill on the first 7, decode token 7, compare its logits to full fwd
+    if cfg.family == "hybrid":
+        pytest.skip("hybrid ring-buffer cache needs full-seq prefill shapes")
+    logits_p, cache = T.prefill(params, cfg, None, tokens=toks[:, :7])
+    # pad cache seq axis to 8 for the dense path
+    if cfg.family in ("dense", "moe"):
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+        cache = {"k": pad(cache["k"]), "v": pad(cache["v"])}
+    logits_d, _ = T.decode_step(params, cache, toks[:, 7:8],
+                                jnp.asarray(7, jnp.int32), cfg, None)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(logits_full[:, 7]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_router_balance_aux_positive():
+    cfg = get_arch("qwen2-moe-a2.7b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    _, aux, _ = T.forward(params, cfg, None, tokens=toks)
+    assert float(aux) >= 1.0 - 1e-3    # e * sum(me*ce) >= 1 by Cauchy-Schwarz
+
+
+def test_pssa_pruning_changes_attention():
+    """cfg.pssa threshold actually prunes (different logits vs pssa=False)."""
+    cfg = get_arch("llama3-8b").smoke().scaled(pssa=True,
+                                               pssa_threshold=0.2)
+    cfg_off = cfg.scaled(pssa=False)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    lg_on, _, _ = T.forward(params, cfg, None, tokens=toks)
+    lg_off, _, _ = T.forward(params, cfg_off, None, tokens=toks)
+    assert float(jnp.max(jnp.abs(lg_on - lg_off))) > 0
+
+
+def test_hymba_global_vs_swa_layers():
+    cfg = get_arch("hymba-1.5b").smoke()
+    assert cfg.sliding_window == 16
+    # smoke seq 32 > window 16 -> banded mask actually matters
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size)
+    logits, _, _ = T.forward(params, cfg, None, tokens=toks)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_moe_capacity_drops_tokens():
+    """Capacity-factor semantics: a tight cap drops overflow tokens (their
+    combine weight is zero), a generous cap keeps everything."""
+    from repro.models import moe as MOE
+    cfg = get_arch("qwen2-moe-a2.7b").smoke()
+    p = MOE.init_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y_full, _ = MOE.moe_ffn(x, p, cfg, None, capacity_factor=16.0)
+    y_tight, _ = MOE.moe_ffn(x, p, cfg, None, capacity_factor=0.25)
+    # tight capacity changes outputs (tokens were dropped)
+    assert float(jnp.max(jnp.abs(y_full - y_tight))) > 0
+    # and dropped-token rows fall back to the shared-expert path only
+    assert bool(jnp.all(jnp.isfinite(y_tight)))

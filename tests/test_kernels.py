@@ -1,0 +1,161 @@
+"""Pallas kernel tests: shape/dtype sweeps, allclose vs the pure-jnp oracle.
+
+All kernels run interpret=True (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pssa, quant
+from repro.kernels.bitslice_matmul.kernel import bitslice_matmul_kernel
+from repro.kernels.bitslice_matmul.ops import bitslice_matmul
+from repro.kernels.bitslice_matmul.ref import bitslice_matmul_ref
+from repro.kernels.patch_bitmap.kernel import patch_bitmap_kernel
+from repro.kernels.patch_bitmap.ref import patch_bitmap_ref
+from repro.kernels.pssa_attention.kernel import pssa_attention_kernel
+from repro.kernels.pssa_attention.ref import pssa_attention_ref
+
+
+# ----------------------------------------------------------------------------
+# DBSC bit-slice matmul
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 256)])
+@pytest.mark.parametrize("dataflow", ["weight_stationary",
+                                      "input_stationary"])
+def test_bitslice_kernel_exact_vs_ref(m, k, n, dataflow):
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(0, 4096, (m, k)), jnp.int32)
+    hi, lo = quant.bitslice_split(vals)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    prec = jnp.asarray(rng.integers(0, 2, (m, 1)), jnp.int32)
+    out = bitslice_matmul_kernel(hi, lo, w, prec, dataflow=dataflow)
+    ref = bitslice_matmul_ref(hi, lo, w, prec)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 128, 64),
+                                      (64, 128, 128)])
+def test_bitslice_kernel_block_shape_sweep(bm, bn, bk):
+    rng = np.random.default_rng(1)
+    m, k, n = 256, 256, 256
+    vals = jnp.asarray(rng.integers(0, 4096, (m, k)), jnp.int32)
+    hi, lo = quant.bitslice_split(vals)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    prec = jnp.ones((m, 1), jnp.int32)
+    out = bitslice_matmul_kernel(hi, lo, w, prec, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(bitslice_matmul_ref(hi, lo, w, prec)))
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_bitslice_int6_rows_skip_low_slice(seed):
+    """prec=0 rows must equal the hi-slice-only product (the silicon skips
+    the low-slice pass entirely for INT6 rows)."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(0, 4096, (128, 128)), jnp.int32)
+    hi, lo = quant.bitslice_split(vals)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int32)
+    prec = jnp.zeros((128, 1), jnp.int32)
+    out = bitslice_matmul_kernel(hi, lo, w, prec)
+    expect = (jnp.matmul(hi, w, preferred_element_type=jnp.int32) << 6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("m,k,n", [(100, 96, 40), (7, 130, 129)])
+def test_bitslice_op_ragged_shapes(m, k, n):
+    """ops.py pads ragged shapes to the 128-multiple grid."""
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(2), (m, k)))
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n))
+    y = bitslice_matmul(x, w)
+    rel = jnp.max(jnp.abs(y - x @ w)) / (jnp.max(jnp.abs(x @ w)) + 1e-9)
+    assert float(rel) < 0.02
+
+
+def test_bitslice_op_kernel_matches_ref_path():
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(4), (64, 64)))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 64))
+    imp = jnp.arange(64) % 2 == 0
+    yk = bitslice_matmul(x, w, important=imp, use_kernel=True)
+    yr = bitslice_matmul(x, w, important=imp, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------------
+# PSSA attention kernel
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("bh,t,d", [(2, 256, 64), (4, 512, 32),
+                                    (1, 1024, 128)])
+def test_pssa_attention_matches_ref(bh, t, d):
+    k = jax.random.PRNGKey(0)
+    q, kk, v = (jax.random.normal(jax.random.PRNGKey(i), (bh, t, d))
+                for i in range(3))
+    out, nnz = pssa_attention_kernel(q, kk, v, threshold=1.0 / 1024.0)
+    oref, nref = pssa_attention_ref(q, kk, v, threshold=1.0 / 1024.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(nref))
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 256), (256, 128)])
+def test_pssa_attention_block_sweep(bq, bk):
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 64))
+    out, nnz = pssa_attention_kernel(q, q, q, threshold=1.0 / 1024.0,
+                                     bq=bq, bk=bk)
+    oref, nref = pssa_attention_ref(q, q, q, threshold=1.0 / 1024.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(nref))
+
+
+def test_pssa_attention_zero_threshold_is_exact_softmax():
+    q = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 64))
+    out, nnz = pssa_attention_kernel(q, q, q, threshold=0.0)
+    probs = jax.nn.softmax(
+        jnp.einsum("bqd,bkd->bqk", q, q) / jnp.sqrt(64.0), -1)
+    oref = jnp.einsum("bqk,bkd->bqd", probs, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+    assert (np.asarray(nnz) == 256).all()
+
+
+# ----------------------------------------------------------------------------
+# PSXU patch-bitmap kernel
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("patch", [16, 32, 64])
+@pytest.mark.parametrize("rows,tk", [(64, 256), (128, 1024), (256, 64)])
+def test_patch_bitmap_matches_ref(patch, rows, tk):
+    if tk % patch:
+        pytest.skip("patch must divide Tk")
+    sas = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (rows, tk)) * 3, -1)
+    packed, counts = patch_bitmap_kernel(sas, patch=patch,
+                                         threshold=1.0 / 1024.0)
+    pref, cref = patch_bitmap_ref(sas, patch=patch, threshold=1.0 / 1024.0)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(pref))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(cref))
+
+
+def test_patch_bitmap_counts_match_core_pssa():
+    """Kernel popcounts == core.pssa patch_xor ones (two implementations)."""
+    sas = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(1), (128, 512)) * 4, -1)
+    _, counts = patch_bitmap_kernel(sas, patch=32, threshold=1.0 / 1024.0)
+    bm = pssa.bitmap(pssa.prune(sas, 1.0 / 1024.0))
+    xbm = pssa.patch_xor(bm, 32)
+    cref = jnp.sum(xbm.reshape(128, 512 // 32, 32).astype(jnp.int32), -1)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(cref))
+
+
+def test_patch_bitmap_pack_unpack_roundtrip():
+    sas = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(2), (64, 128)) * 4, -1)
+    packed, _ = patch_bitmap_kernel(sas, patch=32, threshold=1.0 / 1024.0)
+    # unpack the uint32 words back to bits
+    bits = (packed[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1
+    bits = bits.reshape(64, 128).astype(bool)
+    bm = pssa.bitmap(pssa.prune(sas, 1.0 / 1024.0))
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  np.asarray(pssa.patch_xor(bm, 32)))

@@ -1,0 +1,162 @@
+"""Tests for the §Perf framework features (TP-fold, int8 KV, grouped GQA,
+model-flops accounting)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.model_flops import (model_bytes_decode, model_flops,
+                                      param_count)
+from repro.models import transformer as T
+from repro.models.layers import KV_INT8_SCALE, ShardCtx, _kv_load, _kv_store
+
+
+# ----------------------------------------------------------------------------
+# TP-fold
+# ----------------------------------------------------------------------------
+def test_tp_fold_policy():
+    from repro.launch.dryrun import choose_tp_fold
+    assert choose_tp_fold(get_arch("mamba2-130m"), SHAPES["train_4k"])
+    assert not choose_tp_fold(get_arch("yi-34b"), SHAPES["train_4k"])
+    assert not choose_tp_fold(get_arch("qwen2-moe-a2.7b"),
+                              SHAPES["train_4k"])        # MoE keeps EP/TP
+    assert not choose_tp_fold(get_arch("mamba2-130m"),
+                              SHAPES["decode_32k"])      # decode keeps TP
+
+
+def test_shardctx_tp_substitution(smoke_mesh):
+    ctx = ShardCtx(mesh=smoke_mesh, dp_axes=("data",), tp_axis=None)
+    x = jnp.zeros((4, 8))
+    y = ctx.cs(x, "data", "model")       # 'model' must rewrite to None
+    assert y.shape == x.shape
+    assert ctx.tp_size == 1
+    ctx2 = ShardCtx(mesh=smoke_mesh, dp_axes=("data",))
+    assert ctx2.tp_size == smoke_mesh.shape["model"]
+
+
+def test_tp_fold_forward_matches_tp(smoke_mesh):
+    """tp_axis=None produces the same math as tp_axis='model' on 1 device."""
+    cfg = get_arch("mamba2-130m").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    ctx_tp = ShardCtx(mesh=smoke_mesh, dp_axes=("data",))
+    ctx_fold = ShardCtx(mesh=smoke_mesh, dp_axes=("data", "model"),
+                        tp_axis=None)
+    a, _, _ = T.forward(params, cfg, ctx_tp, tokens=toks, remat=False)
+    b, _, _ = T.forward(params, cfg, ctx_fold, tokens=toks, remat=False)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# int8 KV cache
+# ----------------------------------------------------------------------------
+def test_kv_int8_store_load_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 2, 8),
+                          jnp.bfloat16) * 2
+    q = _kv_store(x, jnp.int8)
+    assert q.dtype == jnp.int8
+    y = _kv_load(q)
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                 - x.astype(jnp.float32)))) \
+        <= KV_INT8_SCALE * 0.51 + 0.02   # grid error + bf16 input error
+
+
+def test_kv_int8_decode_close_to_bf16():
+    cfg = get_arch("llama3-8b").smoke().scaled(tips=False, pssa=False)
+    cfg8 = cfg.scaled(kv_cache_dtype="int8")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 1), 0,
+                              cfg.vocab_size)
+    c16 = T.init_cache(cfg, 2, 8)
+    c8 = T.init_cache(cfg8, 2, 8)
+    assert c8["k"].dtype == jnp.int8
+    l16, _ = T.decode_step(params, c16, toks, jnp.asarray(0), cfg, None)
+    l8, _ = T.decode_step(params, c8, toks, jnp.asarray(0), cfg8, None)
+    rel = float(jnp.max(jnp.abs(l8 - l16))
+                / (jnp.max(jnp.abs(l16)) + 1e-9))
+    assert rel < 0.05
+
+
+# ----------------------------------------------------------------------------
+# grouped GQA == repeat-based reference
+# ----------------------------------------------------------------------------
+def test_grouped_gqa_matches_repeat_reference():
+    from repro.models import layers as L
+    cfg = get_arch("llama3-8b").smoke().scaled(pssa=False, tips=False)
+    p = L.init_attn_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    out, sink, (k, v) = L.gqa_attention(x, p, cfg, None, pos)
+
+    # independent repeat-based reference
+    b, t = 2, 16
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, t, h, hd)
+    kk = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(b, t, kv, hd)
+    vv = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(b, t, kv, hd)
+    q = L.apply_rope(q, pos, cfg.rotary_pct, cfg.rope_theta)
+    kk = L.apply_rope(kk, pos, cfg.rotary_pct, cfg.rope_theta)
+    kf = jnp.repeat(kk, h // kv, axis=2)
+    vf = jnp.repeat(vv, h // kv, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q, kf) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bhts,bshd->bthd", pr, vf).reshape(b, t, h * hd)
+    ref = jnp.einsum("btk,kd->btd", ref, p["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    # sink CAS equals head-mean attention to token 0
+    np.testing.assert_allclose(np.asarray(sink),
+                               np.asarray(jnp.mean(pr[..., 0], axis=1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------------
+# model-flops accounting
+# ----------------------------------------------------------------------------
+def test_param_count_matches_init():
+    for arch in ("llama3-8b", "mamba2-130m", "qwen2-moe-a2.7b",
+                 "hymba-1.5b"):
+        cfg = get_arch(arch).smoke()
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert param_count(cfg) == pytest.approx(actual, rel=1e-6), arch
+
+
+def test_active_params_lt_total_for_moe():
+    cfg = get_arch("qwen2-moe-a2.7b")
+    assert param_count(cfg, active_only=True) < param_count(cfg)
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("llama3-8b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr > pf > dc > 0
+    assert model_bytes_decode(cfg, SHAPES["decode_32k"]) > 0
+
+
+def test_mamba_forward_fused_kernel_path():
+    """cfg.use_ssd_kernel routes through the Pallas kernel with matching
+    numerics (bf16-vs-f32 path tolerance)."""
+    cfg = get_arch("mamba2-130m").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size)
+    a, _, _ = T.forward(params, cfg, None, tokens=toks, remat=False)
+    b, _, _ = T.forward(params, cfg.scaled(use_ssd_kernel=True), None,
+                        tokens=toks, remat=False)
+    rel = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(a)) + 1e-9))
+    assert rel < 2e-2
+
+
+def test_elastic_mesh_from_live_devices():
+    from repro.launch.mesh import make_elastic_mesh
+    mesh = make_elastic_mesh(tp_size=16)
+    assert mesh.devices.size == len(jax.devices())
+    assert set(mesh.axis_names) == {"data", "model"}

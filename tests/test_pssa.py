@@ -1,0 +1,110 @@
+"""PSSA unit + property tests (paper §III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pssa
+
+
+def _softmax_rows(key, shape, temp=3.0):
+    return jax.nn.softmax(jax.random.normal(key, shape) * temp, axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Lossless round trip (the compression must be exact on the pruned SAS)
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("patch", [16, 32, 64])
+@pytest.mark.parametrize("shape", [(64, 64), (2, 128, 128), (2, 2, 64, 128)])
+def test_compress_decompress_lossless(patch, shape):
+    if shape[-1] % patch:
+        pytest.skip("patch must divide Tk")
+    sas = _softmax_rows(jax.random.PRNGKey(0), shape)
+    rec = pssa.compress_decompress(sas, patch)
+    np.testing.assert_array_equal(np.asarray(rec),
+                                  np.asarray(pssa.prune(sas)))
+
+
+@given(patch_log=st.integers(0, 2), seed=st.integers(0, 2 ** 16),
+       temp=st.floats(0.5, 8.0))
+@settings(max_examples=25, deadline=None)
+def test_xor_unxor_roundtrip_property(patch_log, seed, temp):
+    """patch_unxor(patch_xor(b)) == b for any bitmap (hypothesis sweep)."""
+    patch = 16 << patch_log
+    sas = _softmax_rows(jax.random.PRNGKey(seed), (32, 64), temp)
+    bm = pssa.bitmap(pssa.prune(sas))
+    rec = pssa.patch_unxor(pssa.patch_xor(bm, patch), patch)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(bm))
+
+
+# ----------------------------------------------------------------------------
+# Mechanism: XOR of similar adjacent patches increases bitmap sparsity
+# ----------------------------------------------------------------------------
+def test_xor_reduces_ones_for_similar_patches():
+    """Adjacent-row similarity (the paper's Fig. 3(a) premise) must make the
+    XOR'd bitmap sparser than the raw bitmap."""
+    key = jax.random.PRNGKey(1)
+    w = 64
+    base = jax.random.normal(key, (w, w)) * 3.0
+    # adjacent patches similar: each patch = base + small noise
+    patches = [base + 0.1 * jax.random.normal(jax.random.PRNGKey(i), (w, w))
+               for i in range(4)]
+    sas = jax.nn.softmax(jnp.concatenate(patches, axis=-1), axis=-1)
+    bm = pssa.bitmap(pssa.prune(sas))
+    xbm = pssa.patch_xor(bm, w)
+    assert int(jnp.sum(xbm)) < int(jnp.sum(bm))
+
+
+def test_xor_no_benefit_for_independent_patches():
+    """Independent patches: XOR ~doubles-ish the ones — documents the
+    failure mode the paper's locality argument avoids."""
+    sas = _softmax_rows(jax.random.PRNGKey(2), (64, 256), temp=4.0)
+    bm = pssa.bitmap(pssa.prune(sas))
+    xbm = pssa.patch_xor(bm, 64)
+    # not a win (allow equality noise)
+    assert int(jnp.sum(xbm)) >= int(jnp.sum(bm)) * 0.9
+
+
+# ----------------------------------------------------------------------------
+# Byte accounting
+# ----------------------------------------------------------------------------
+def test_compress_stats_bytes_exact():
+    sas = _softmax_rows(jax.random.PRNGKey(3), (128, 128), temp=5.0)
+    st_ = pssa.compress_stats(sas, patch=32)
+    bm = pssa.bitmap(pssa.prune(sas))
+    assert float(st_.nnz) == float(jnp.sum(bm))
+    assert float(st_.total) == 128 * 128
+    assert float(st_.bytes_baseline) == 128 * 128 * 1.5
+    assert float(st_.bytes_values) == float(jnp.sum(bm)) * 1.5
+    # PSSA total = values + index
+    assert float(st_.bytes_pssa_total) == pytest.approx(
+        float(st_.bytes_values) + float(st_.bytes_index_pssa))
+
+
+def test_local_csr_beats_global_csr_on_sparse_similar():
+    """Paper claim: local per-patch CSR beats global CSR (index overhead)."""
+    w = 64
+    base = jax.random.normal(jax.random.PRNGKey(4), (w, w)) * 5.0
+    patches = [base + 0.05 * jax.random.normal(jax.random.PRNGKey(10 + i),
+                                               (w, w)) for i in range(8)]
+    sas = jax.nn.softmax(jnp.concatenate(patches, axis=-1), axis=-1)
+    st_ = pssa.compress_stats(sas, patch=w)
+    assert float(st_.bytes_index_pssa) < float(st_.bytes_index_csr_global)
+
+
+def test_prune_threshold_semantics():
+    tau = pssa.DEFAULT_THRESHOLD
+    sas = jnp.array([[tau / 2, 0.5, tau, 2 * tau]])
+    out = pssa.prune(sas)
+    np.testing.assert_array_equal(
+        np.asarray(out != 0), [[False, True, True, True]])
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_ema_reduction_bounded(seed):
+    sas = _softmax_rows(jax.random.PRNGKey(seed), (64, 64), temp=6.0)
+    st_ = pssa.compress_stats(sas, patch=16)
+    red = float(pssa.ema_reduction(st_))
+    assert red <= 1.0  # can be negative for dense SAS (honest accounting)

@@ -1,0 +1,113 @@
+"""TIPS + quantization unit/property tests (paper §IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant, tips
+
+
+# ----------------------------------------------------------------------------
+# Quantization primitives
+# ----------------------------------------------------------------------------
+@given(seed=st.integers(0, 2 ** 16), bits=st.sampled_from([6, 8, 12]))
+@settings(max_examples=30, deadline=None)
+def test_act_quant_error_bound(seed, bits):
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed), (64, 32)))
+    q = quant.quantize_act(x, bits)
+    err = jnp.max(jnp.abs(quant.dequantize(q) - x))
+    assert float(err) <= float(q.scale) * 0.5 + 1e-6
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_bitslice_split_merge_exact(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 4096, (100,)), jnp.int32)
+    hi, lo = quant.bitslice_split(x)
+    assert int(jnp.max(hi)) <= 63 and int(jnp.max(lo)) <= 63  # int7-safe
+    np.testing.assert_array_equal(np.asarray(quant.bitslice_merge(hi, lo)),
+                                  np.asarray(x))
+
+
+def test_quantized_matmul_reference_close():
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(0), (32, 64)))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y = quant.quantized_matmul_reference(x, w)
+    rel = jnp.max(jnp.abs(y - x @ w)) / jnp.max(jnp.abs(x @ w))
+    assert float(rel) < 0.02  # INT12/INT8 is tight
+
+
+def test_mixed_precision_int6_grid():
+    """INT6 rows live on the 64x coarser grid of the SAME scale (paper:
+    the SIMD core re-quantizes from one cross-attention output)."""
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(2), (8, 16))) * 3
+    imp = jnp.array([True, False] * 4)
+    q = quant.mixed_precision_quantize(x, imp)
+    vals = np.asarray(q.values)
+    assert (vals[1::2] % 64 == 0).all()       # INT6 rows: low 6 bits zero
+    qfull = quant.quantize_act(x, quant.ACT_BITS_HIGH)
+    np.testing.assert_array_equal(vals[0::2], np.asarray(qfull.values)[0::2])
+
+
+# ----------------------------------------------------------------------------
+# TIPS spotting
+# ----------------------------------------------------------------------------
+def test_spot_inverse_cas_tas_relation():
+    """Small CAS <=> large TAS (softmax row property the paper relies on)."""
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(3), (2, 4, 64, 8)) * 2, -1)
+    r = tips.spot(probs, threshold=0.1)
+    cas = np.asarray(r.cas)
+    tas = 1.0 - cas                       # row sums to 1
+    important = np.asarray(r.important)
+    assert (tas[important] > tas[~important].mean()).mean() > 0.9
+
+
+def test_spot_threshold_monotonic():
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(4), (1, 2, 128, 16)) * 2, -1)
+    r_lo = tips.spot(probs, threshold=0.02)
+    r_hi = tips.spot(probs, threshold=0.5)
+    # higher threshold -> more tokens important -> lower low-precision ratio
+    assert float(r_hi.low_precision_ratio) <= float(r_lo.low_precision_ratio)
+
+
+def test_adaptive_threshold_hits_target():
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(5), (1, 8, 4096, 77)) * 2, -1)
+    r = tips.spot(probs, threshold=1.0)   # all important -> get CAS
+    thr = tips.adaptive_threshold(r.cas, target_low_ratio=0.448)
+    r2 = tips.spot(probs, threshold=float(thr))
+    assert float(r2.low_precision_ratio) == pytest.approx(0.448, abs=0.02)
+
+
+def test_tips_schedule_20_of_25():
+    active = [bool(tips.tips_schedule(jnp.asarray(i))) for i in range(25)]
+    assert sum(active) == 20 and not any(active[20:])
+
+
+def test_workload_fraction_matches_paper_shape():
+    # per-iteration ratios like Fig. 9(b): ~0.56 while active, 0 after
+    ratios = jnp.array([0.56] * 20 + [0.0] * 5)
+    frac = tips.workload_low_precision_fraction(ratios)
+    assert float(frac) == pytest.approx(0.448, abs=1e-6)
+
+
+def test_apply_precision_mask_important_rows_change_less():
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(6), (2, 64, 32)))
+    imp = jnp.zeros((2, 64), bool).at[:, :32].set(True)
+    y = tips.apply_precision_mask(x, imp)
+    err_imp = float(jnp.abs(y - x)[:, :32].mean())
+    err_unimp = float(jnp.abs(y - x)[:, 32:].mean())
+    assert err_imp < err_unimp
+
+
+def test_apply_precision_mask_inactive_is_high_precision():
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(7), (2, 16, 8)))
+    imp = jnp.zeros((2, 16), bool)
+    y_active = tips.apply_precision_mask(x, imp, active=True)
+    y_inactive = tips.apply_precision_mask(x, imp, active=False)
+    assert float(jnp.abs(y_inactive - x).mean()) \
+        < float(jnp.abs(y_active - x).mean())
