@@ -5,6 +5,7 @@
   bench_tips          — Fig. 9(b): TIPS low-precision ratio per iteration
   bench_dbsc          — Fig. 9(c): DBSC FFN energy efficiency + exactness
   bench_energy_iter   — Table I:  28.6 / 213.3 mJ per iteration
+  bench_engine        — jitted scan/fused-CFG engine vs seed Python loop
   roofline            — §Roofline table from the dry-run records
 
 Each section prints measured vs paper numbers; exit code 1 if any section
@@ -40,8 +41,8 @@ def _section(name, fn):
 
 def main() -> None:
     from benchmarks import (bench_dbsc, bench_ema_breakdown,
-                            bench_energy_iter, bench_pssa, bench_tips,
-                            roofline)
+                            bench_energy_iter, bench_engine, bench_pssa,
+                            bench_tips, roofline)
 
     ok = True
     ok &= _section("ema_breakdown", bench_ema_breakdown.run)
@@ -49,6 +50,7 @@ def main() -> None:
     ok &= _section("tips", bench_tips.run)
     ok &= _section("dbsc", bench_dbsc.run)
     ok &= _section("energy_iter", bench_energy_iter.run)
+    ok &= _section("engine", bench_engine.run)
 
     def _roof():
         rows = roofline.run()

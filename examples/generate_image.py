@@ -1,20 +1,28 @@
 """End-to-end text-to-image generation (the paper's Fig. 1(a) flow).
 
-Runs the reduced-geometry pipeline on CPU — text encode -> 25 DDIM UNet
-iterations (PSSA pruning + TIPS mixed precision live) -> VAE decode — then
-feeds the measured compression/precision statistics into the full
-BK-SDM-Tiny ledger and prints the Table-I-style energy summary.
+Runs the reduced-geometry path on CPU — text encode -> DDIM UNet iterations
+(PSSA pruning + TIPS mixed precision live) -> VAE decode — then feeds the
+measured compression/precision statistics into the full BK-SDM-Tiny ledger
+and prints the Table-I-style energy summary.
+
+Default path is the fully-jitted ``DiffusionEngine`` (one XLA computation:
+scanned sampler, fused-CFG batched UNet, stacked stats pytree); pass
+``--python-loop`` for the seed-style per-step dispatch loop.  Both feed the
+same ledger.
 
 Run:  PYTHONPATH=src python examples/generate_image.py [--steps 5]
 """
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.diffusion.pipeline import PipelineConfig, StableDiffusionPipeline
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import (PipelineConfig, StableDiffusionPipeline,
+                                      energy_report)
 from repro.diffusion.sampler import DDIMConfig
 
 
@@ -23,32 +31,47 @@ def main():
     ap.add_argument("--steps", type=int, default=5,
                     help="DDIM iterations (paper: 25; CPU demo default 5)")
     ap.add_argument("--guidance", type=float, default=1.0)
+    ap.add_argument("--python-loop", action="store_true",
+                    help="seed-style per-step dispatch instead of the "
+                         "jitted engine")
     args = ap.parse_args()
 
     cfg = PipelineConfig.smoke()
-    cfg = PipelineConfig(
-        unet=cfg.unet, text=cfg.text, vae=cfg.vae,
-        ddim=DDIMConfig(num_inference_steps=args.steps,
-                        guidance_scale=args.guidance,
-                        tips_active_iters=max(1, args.steps * 20 // 25)))
+    cfg = dataclasses.replace(cfg, ddim=DDIMConfig(
+        num_inference_steps=args.steps,
+        guidance_scale=args.guidance,
+        tips_active_iters=max(1, args.steps * 20 // 25)))
     print(f"pipeline: latent {cfg.unet.latent_size}^2, "
-          f"{args.steps} DDIM steps, guidance {args.guidance}")
+          f"{args.steps} DDIM steps, guidance {args.guidance}, "
+          f"{'python loop' if args.python_loop else 'jitted engine'}")
 
-    pipe = StableDiffusionPipeline(cfg, key=jax.random.PRNGKey(0))
     # "a toy raccoon standing on a pile of broccoli" — tokens are synthetic
     # (no tokenizer offline); semantics don't affect the energy evaluation.
     prompt = jax.random.randint(jax.random.PRNGKey(7),
                                 (1, cfg.text.max_len), 0,
                                 cfg.text.vocab_size)
+    uncond = (jnp.zeros_like(prompt) if args.guidance != 1.0 else None)
+
     t0 = time.time()
-    image, stats = pipe.generate(prompt, jax.random.PRNGKey(1))
-    print(f"generated image {image.shape} in {time.time() - t0:.1f}s, "
+    if args.python_loop:
+        pipe = StableDiffusionPipeline(cfg, key=jax.random.PRNGKey(0))
+        image, stats = pipe.generate(prompt, jax.random.PRNGKey(1),
+                                     uncond_tokens=uncond)
+        jax.block_until_ready(image)
+    else:
+        eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+        out = eng.generate(prompt, jax.random.PRNGKey(1),
+                           uncond_tokens=uncond)
+        image, stats = out.images, out.stats
+    wall = time.time() - t0
+    print(f"generated image {image.shape} in {wall:.1f}s "
+          f"({1e3 * wall / args.steps:.0f} ms/iter incl. compile), "
           f"range [{float(image.min()):.2f}, {float(image.max()):.2f}]")
     img8 = np.asarray((image[0] * 0.5 + 0.5) * 255, dtype=np.uint8)
     np.save("/tmp/generated_image.npy", img8)
     print("saved /tmp/generated_image.npy")
 
-    rep = pipe.energy_report(stats)
+    rep = energy_report(cfg, stats)
     print("\nfull-geometry (BK-SDM-Tiny) energy ledger:")
     for k, v in rep.summary().items():
         print(f"  {k:42s} {v:10.4f}")

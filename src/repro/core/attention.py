@@ -30,8 +30,17 @@ class SelfAttnOut(NamedTuple):
 def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
                         patch: int,
                         threshold: float = pssa.DEFAULT_THRESHOLD,
-                        prune_scores: bool = True) -> SelfAttnOut:
-    """(B, H, T, d) q/k/v -> (B, H, T, d); scores pruned at `threshold`."""
+                        prune_scores: bool = True,
+                        stats_rows: int | None = None,
+                        reference_stats: bool = False) -> SelfAttnOut:
+    """(B, H, T, d) q/k/v -> (B, H, T, d); scores pruned at `threshold`.
+
+    ``stats_rows`` limits the compression accounting to the first N batch
+    rows (static).  The fused-CFG sampler sets it to the cond half: the
+    energy ledger only ever consumes cond-prompt statistics, so skipping
+    the uncond half keeps stats bit-identical to a cond-only call while
+    halving the accounting cost per step.
+    """
     d = q.shape[-1]
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d))
     probs = jax.nn.softmax(scores, axis=-1)
@@ -39,23 +48,41 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
         probs_used = pssa.prune(probs, threshold)
     else:
         probs_used = probs
-    stats = pssa.compress_stats(probs, patch, threshold)
+    probs_stat = probs if stats_rows is None else probs[:stats_rows]
+    compress = (pssa.compress_stats_reference if reference_stats
+                else pssa.compress_stats)
+    stats = compress(probs_stat, patch, threshold)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs_used, v)
     return SelfAttnOut(out=out, stats=stats)
 
 
 class CrossAttnOut(NamedTuple):
     out: jax.Array
-    tips_result: tips.TIPSResult
+    tips_result: tips.TIPSResult   # reported stats (cond rows under CFG)
+    important_full: jax.Array      # full-batch mask for the FFN precision
 
 
 def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
                          threshold: float,
-                         cls_index: int = 0) -> CrossAttnOut:
-    """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS."""
+                         cls_index: int = 0,
+                         stats_rows: int | None = None) -> CrossAttnOut:
+    """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS.
+
+    The returned ``tips_result.important`` always covers the FULL batch
+    (the FFN precision mask needs every row); with ``stats_rows`` set, the
+    *reported* CAS / low-precision ratio are restricted to the first N
+    rows — the cond half under fused CFG — matching a cond-only call.
+    """
     d = q.shape[-1]
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_text) / jnp.sqrt(float(d))
     probs = jax.nn.softmax(scores, axis=-1)
     spotted = tips.spot(probs, threshold, cls_index)
+    important_full = spotted.important
+    if stats_rows is not None:
+        imp = spotted.important[:stats_rows]
+        spotted = tips.TIPSResult(
+            important=imp, cas=spotted.cas[:stats_rows],
+            low_precision_ratio=1.0 - jnp.mean(imp.astype(jnp.float32)))
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_text)
-    return CrossAttnOut(out=out, tips_result=spotted)
+    return CrossAttnOut(out=out, tips_result=spotted,
+                        important_full=important_full)

@@ -90,47 +90,131 @@ def patch_unxor(delta_bm: jax.Array, patch: int) -> jax.Array:
     return out.reshape(delta_bm.shape)
 
 
+def index_bit_widths(tq: int, tk: int, patch: int) -> dict:
+    """Static field widths of the three index formats (exact Python ints)."""
+    return {
+        "col_bits_global": max(1, math.ceil(math.log2(tk))),
+        "ptr_bits_global": max(1, math.ceil(math.log2(tq * tk + 1))),
+        "run_bits": max(1, math.ceil(math.log2(tk))),
+        "col_bits_local": max(1, math.ceil(math.log2(patch))),
+        "ptr_bits_local": max(1, math.ceil(math.log2(patch * patch + 1))),
+    }
+
+
+def exact_byte_counts(nnz: int, ones_xor: int, lead: int, tq: int, tk: int,
+                      patch: int, value_bits: int = 12) -> dict:
+    """Byte accounting from integer counters in EXACT Python arithmetic.
+
+    Python ints never round, so this is the ground truth for any SAS size —
+    including the full-geometry 4096x4096 SAS with heads folded in, where
+    counters exceed float32's 24-bit integer range (~16.7M) and the
+    in-graph float math (see ``compress_stats``) starts rounding.  Use this
+    for ledger-grade numbers; all divisions by 8 are exact in binary
+    floating point.
+    """
+    w = index_bit_widths(tq, tk, patch)
+    total = lead * tq * tk
+    n_tiles = lead * (tq // patch) * (tk // patch)
+    return {
+        "total": total,
+        "bytes_baseline": total * value_bits / 8.0,
+        "bytes_values": nnz * value_bits / 8.0,
+        "bytes_index_csr_global": (nnz * w["col_bits_global"]
+                                   + lead * (tq + 1)
+                                   * w["ptr_bits_global"]) / 8.0,
+        "bytes_index_rle": nnz * w["run_bits"] / 8.0,
+        "bytes_index_pssa": (ones_xor * w["col_bits_local"]
+                             + n_tiles * (patch + 1)
+                             * w["ptr_bits_local"]) / 8.0,
+    }
+
+
 def compress_stats(sas: jax.Array, patch: int,
                    threshold: float = DEFAULT_THRESHOLD,
                    value_bits: int = 12) -> PSSAStats:
     """Exact compressed sizes (in bytes) for one SAS of shape (..., Tq, Tk).
 
     Leading axes (heads, batch) are folded into the totals.
-    """
-    pruned = prune(sas, threshold)
-    bm = bitmap(pruned)
-    xbm = patch_xor(bm, patch)
 
-    tq, tk = sas.shape[-2], sas.shape[-1]
+    Counter precision: the bitmap populations are accumulated in INTEGER
+    dtype (int64 under x64, else int32 — exact up to 2^31, far beyond the
+    134M-element full-geometry SAS) and only then converted to the widest
+    available float for the byte arithmetic; every static quantity
+    (element totals, pointer/field widths, tile counts) is computed with
+    exact Python ints before conversion.  The seed implementation did all
+    of this in float32, which silently rounds integers above ~16.7M — off
+    by up to 8 elements per counter at full geometry.  Under
+    ``jax_enable_x64`` every stored stat is float64 and therefore exact;
+    without it the single final float32 rounding is at most 0.5 ulp
+    (documented, and recoverable exactly via :func:`exact_byte_counts`).
+    """
+    bm = bitmap(prune(sas, threshold))
+    tk = sas.shape[-1]
+    assert tk % patch == 0, (tk, patch)
+
+    x64 = bool(jax.config.read("jax_enable_x64"))
+    int_dtype = jnp.int64 if x64 else jnp.int32
+
+    # dynamic counters: integer accumulation, single conversion at the end.
+    # The XOR-bitmap population is summed directly from the shifted slices
+    # (first patch column verbatim + pairwise deltas) without materializing
+    # the full delta bitmap that patch_xor would build — the counters are
+    # identical (tests pin this against compress_stats_reference) and this
+    # sits on the hot path of every attention layer.
+    r = bm.reshape(*bm.shape[:-1], tk // patch, patch)
+    nnz = jnp.sum(bm, dtype=int_dtype)
+    ones_xor = (jnp.sum(r[..., 0, :], dtype=int_dtype)
+                + jnp.sum(jnp.logical_xor(r[..., 1:, :], r[..., :-1, :]),
+                          dtype=int_dtype))
+    return _assemble_stats(nnz, ones_xor, sas.shape, patch, value_bits)
+
+
+def compress_stats_reference(sas: jax.Array, patch: int,
+                             threshold: float = DEFAULT_THRESHOLD,
+                             value_bits: int = 12) -> PSSAStats:
+    """Seed implementation of :func:`compress_stats`: materialize the full
+    patch-XOR delta bitmap, then count.  Byte-identical results, ~an order
+    of magnitude more memory traffic — kept as the oracle the fused counter
+    path is tested against, and as the baseline ``benchmarks/bench_engine``
+    charges when measuring this PR's loop-vs-engine trajectory.
+    """
+    bm = bitmap(prune(sas, threshold))
+    xbm = patch_xor(bm, patch)
+    x64 = bool(jax.config.read("jax_enable_x64"))
+    int_dtype = jnp.int64 if x64 else jnp.int32
+    nnz = jnp.sum(bm, dtype=int_dtype)
+    ones_xor = jnp.sum(xbm, dtype=int_dtype)
+    return _assemble_stats(nnz, ones_xor, sas.shape, patch, value_bits)
+
+
+def _assemble_stats(nnz, ones_xor, shape, patch: int,
+                    value_bits: int) -> PSSAStats:
+    """Byte arithmetic from integer counters (shared by both impls)."""
+    tq, tk = shape[-2], shape[-1]
     lead = 1
-    for s in sas.shape[:-2]:
+    for s in shape[:-2]:
         lead *= s
 
-    total = jnp.asarray(lead * tq * tk, jnp.float64 if jax.config.read(
-        "jax_enable_x64") else jnp.float32)
-    nnz = jnp.sum(bm).astype(jnp.float32)
-    ones_xor = jnp.sum(xbm).astype(jnp.float32)
+    x64 = bool(jax.config.read("jax_enable_x64"))
+    count_dtype = jnp.float64 if x64 else jnp.float32
+    nnz = nnz.astype(count_dtype)
+    ones_xor = ones_xor.astype(count_dtype)
 
-    bytes_baseline = total * value_bits / 8.0
-    bytes_values = nnz * value_bits / 8.0
-
-    # --- plain global CSR over the pruned bitmap (per head-slice) ---
-    col_bits_g = max(1, math.ceil(math.log2(tk)))
-    ptr_bits_g = max(1, math.ceil(math.log2(tq * tk + 1)))
-    bytes_csr = (nnz * col_bits_g + lead * (tq + 1) * ptr_bits_g) / 8.0
-
-    # --- RLE: classic zero-run stream (the hardware format the paper
-    # compares against): one run-length field per surviving value, wide
-    # enough for the worst-case in-row zero run (log2 Tk bits). ---
-    run_bits = max(1, math.ceil(math.log2(tk)))
-    bytes_rle = nnz * run_bits / 8.0
-
-    # --- PSSA: local CSR per (patch x patch) tile of the XOR bitmap ---
-    col_bits_l = max(1, math.ceil(math.log2(patch)))
-    ptr_bits_l = max(1, math.ceil(math.log2(patch * patch + 1)))
+    # static quantities: exact Python-int arithmetic, converted once
+    w = index_bit_widths(tq, tk, patch)
+    total_i = lead * tq * tk
     n_tiles = lead * (tq // patch) * (tk // patch)
-    bytes_pssa_idx = (ones_xor * col_bits_l
-                      + n_tiles * (patch + 1) * ptr_bits_l) / 8.0
+    total = jnp.asarray(float(total_i), count_dtype)
+    bytes_baseline = jnp.asarray(total_i * value_bits / 8.0, count_dtype)
+    ptr_global = jnp.asarray(
+        lead * (tq + 1) * w["ptr_bits_global"] / 8.0, count_dtype)
+    ptr_local = jnp.asarray(
+        n_tiles * (patch + 1) * w["ptr_bits_local"] / 8.0, count_dtype)
+
+    bytes_values = nnz * value_bits / 8.0
+    bytes_csr = nnz * (w["col_bits_global"] / 8.0) + ptr_global
+    bytes_rle = nnz * (w["run_bits"] / 8.0)
+    bytes_pssa_idx = ones_xor * (w["col_bits_local"] / 8.0) + ptr_local
 
     return PSSAStats(
         nnz=nnz, total=total,

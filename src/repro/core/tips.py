@@ -71,11 +71,22 @@ def apply_precision_mask(x: jax.Array, important: jax.Array,
     Rows marked important round-trip through INT12; others through INT6 on
     the same scale grid (see quant.mixed_precision_quantize).  When
     ``active`` is False every row stays INT12.
+
+    The quantization scale is computed PER SAMPLE (reduced over every
+    non-batch axis), not per tensor: each image's activation grid must not
+    depend on what else shares the batch, so a fused cond+uncond CFG batch
+    (sampler.cfg_batch) produces bitwise-identical results to two separate
+    calls — the invariant tests/test_engine.py pins down.  Per-sample is
+    also what the silicon does: the SIMD core rescales one image's
+    activations at a time.
     """
     from repro.core import quant
 
     imp = jnp.logical_or(important, jnp.logical_not(active))
-    q = quant.mixed_precision_quantize(x, imp)
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / quant.ACT_HIGH_MAX
+    q = quant.mixed_precision_quantize(x, imp, scale=scale)
     y = (q.values.astype(jnp.float32) * q.scale).astype(x.dtype)
     return x + jax.lax.stop_gradient(y - x)
 

@@ -1,0 +1,142 @@
+"""Fully-jitted batched diffusion engine (encode -> scan -> decode).
+
+The seed pipeline dispatched 25 Python-level UNet steps (x2 under CFG).
+``DiffusionEngine`` compiles the *whole* text-to-image path — text encoding,
+the scanned DDIM loop with fused-CFG batched UNet calls, and the VAE decode
+— into ONE ``jax.jit`` per (batch, geometry) signature:
+
+  * one XLA computation per generation call: no per-step dispatch overhead,
+    cross-step fusion, and the latent buffer is donated (updated in place);
+  * classifier-free guidance costs one batched UNet call per step instead
+    of two (cond + uncond concatenated along batch, split after);
+  * the PSSA/TIPS statistics trajectory comes back as a stacked
+    ``UNetStats`` pytree — ``(num_steps, ...)`` leaves — feeding the
+    full-geometry energy ledger without leaving the device until read.
+
+Compiled executables are cached per input signature, so a serving front-end
+(``repro.launch.serve_diffusion``) pays compilation once per micro-batch
+shape and then streams generations through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.sampler import sample_scan
+from repro.diffusion.text_encoder import encode_text, init_text_encoder_params
+from repro.diffusion.unet import init_unet_params, unet_forward
+from repro.diffusion.vae import decode, init_vae_params
+
+
+@dataclasses.dataclass
+class EngineOutput:
+    """One engine call: images plus the stacked stats trajectory."""
+    images: jax.Array            # (B, 8S, 8S, 3) in [-1, 1]
+    latents: jax.Array           # (B, S, S, 4) final denoised latents
+    stats: object                # UNetStats, leaves (num_steps, ...)
+
+
+class DiffusionEngine:
+    """Holds params; jits the whole generate path once per signature.
+
+    ``cfg`` is a ``repro.diffusion.pipeline.PipelineConfig``.  Use
+    ``generate(prompt_tokens, key, uncond_tokens=...)``; pass
+    ``uncond_tokens`` iff ``cfg.ddim.guidance_scale != 1.0``.
+    """
+
+    def __init__(self, cfg, key=None):
+        self.cfg = cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        assert cfg.text.d_model == cfg.unet.context_dim, \
+            (cfg.text.d_model, cfg.unet.context_dim)
+        self.text_params = init_text_encoder_params(k1, cfg.text)
+        self.unet_params = init_unet_params(k2, cfg.unet)
+        self.vae_params = init_vae_params(k3, cfg.vae)
+        # jitted executables keyed by (batch, use_cfg); geometry is fixed
+        # per engine so the signature is just the leading dims.
+        self._compiled: dict = {}
+        self.last_wall_s: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def _run(self, prompt_tokens, uncond_tokens, latents):
+        """Traced end-to-end path; ``uncond_tokens`` may be None (static)."""
+        cfg = self.cfg
+        context = encode_text(self.text_params, prompt_tokens, cfg.text)
+        uncond = (encode_text(self.text_params, uncond_tokens, cfg.text)
+                  if uncond_tokens is not None else None)
+
+        def unet_apply(lat, tvec, ctx, active, stats_rows=None,
+                       cfg_dup=False):
+            return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
+                                tips_active=active, stats_rows=stats_rows,
+                                cfg_dup=cfg_dup)
+
+        latents, stats = sample_scan(unet_apply, latents, context, uncond,
+                                     cfg.ddim)
+        images = decode(self.vae_params, latents, cfg.vae)
+        return images, latents, stats
+
+    def _get_compiled(self, batch: int, use_cfg: bool):
+        key = (batch, use_cfg)
+        fn = self._compiled.get(key)
+        if fn is None:
+            if use_cfg:
+                fn = jax.jit(lambda p, u, l: self._run(p, u, l),
+                             donate_argnums=(2,))
+            else:
+                fn = jax.jit(lambda p, l: self._run(p, None, l),
+                             donate_argnums=(1,))
+            self._compiled[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def init_latents(self, batch: int, key) -> jax.Array:
+        s = self.cfg.unet.latent_size
+        return jax.random.normal(key, (batch, s, s,
+                                       self.cfg.unet.in_channels))
+
+    def generate(self, prompt_tokens, key, uncond_tokens=None,
+                 latents=None) -> EngineOutput:
+        """(B, text_len) int32 tokens -> EngineOutput.
+
+        The initial ``latents`` buffer (drawn from ``key`` unless given) is
+        donated to the compiled call.  Wall time of the call (device sync
+        included) lands in ``self.last_wall_s``.
+        """
+        cfg = self.cfg
+        use_cfg = (cfg.ddim.guidance_scale != 1.0
+                   and uncond_tokens is not None)
+        batch = prompt_tokens.shape[0]
+        if latents is None:
+            latents = self.init_latents(batch, key)
+        fn = self._get_compiled(batch, use_cfg)
+        t0 = time.perf_counter()
+        if use_cfg:
+            images, latents, stats = fn(prompt_tokens, uncond_tokens,
+                                        latents)
+        else:
+            images, latents, stats = fn(prompt_tokens, latents)
+        jax.block_until_ready(images)
+        self.last_wall_s = time.perf_counter() - t0
+        return EngineOutput(images=images, latents=latents, stats=stats)
+
+    # ------------------------------------------------------------------
+    def warmup(self, batch: int, use_cfg: Optional[bool] = None) -> float:
+        """Compile (and discard) one call for the given signature.
+
+        Returns the wall seconds the warmup call took (compile + run).
+        """
+        cfg = self.cfg
+        if use_cfg is None:
+            use_cfg = cfg.ddim.guidance_scale != 1.0
+        toks = jnp.zeros((batch, cfg.text.max_len), jnp.int32)
+        un = jnp.zeros((batch, cfg.text.max_len), jnp.int32) if use_cfg \
+            else None
+        t0 = time.perf_counter()
+        self.generate(toks, jax.random.PRNGKey(0), uncond_tokens=un)
+        return time.perf_counter() - t0

@@ -20,11 +20,28 @@ from repro.core import energy, pssa
 from repro.core.tips import TIPS_ACTIVE_ITERS
 from repro.diffusion import ledger as L
 from repro.diffusion.sampler import DDIMConfig, sample
+from repro.diffusion.stats import UNetStats, coerce_per_step_stats
 from repro.diffusion.text_encoder import (TextEncoderConfig,
                                           encode_text,
                                           init_text_encoder_params)
 from repro.diffusion.unet import UNetConfig, init_unet_params, unet_forward
 from repro.diffusion.vae import VAEConfig, decode, init_vae_params
+
+
+def _iter_layer_stats(stats_one_iter, kind: str):
+    """Yield (resolution, per-layer stats) from either stats representation.
+
+    ``kind`` is "pssa" or "tips".  Supports the ``UNetStats`` pytree (layer
+    resolutions are static metadata) and the legacy string-keyed dict view
+    (resolution parsed from the "tag@res" key).
+    """
+    if isinstance(stats_one_iter, UNetStats):
+        entries = getattr(stats_one_iter, kind)
+        for lk, st in zip(stats_one_iter.layers, entries):
+            yield lk.resolution, st
+        return
+    for key, st in stats_one_iter.get(kind, {}).items():
+        yield int(key.rsplit("@", 1)[1]), st
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +63,15 @@ class PipelineConfig:
 
 
 class StableDiffusionPipeline:
-    """Holds params + jitted stage functions; reusable across prompts."""
+    """Holds params + jitted stage functions; reusable across prompts.
+
+    This is the per-step reference path (25 Python dispatches, two UNet
+    calls per step under CFG).  The production path is
+    ``repro.diffusion.engine.DiffusionEngine`` — one jitted
+    encode -> scanned-sampler -> decode computation with fused CFG; both
+    feed the same ``energy_report`` (stats representations are
+    interchangeable via ``repro.diffusion.stats``).
+    """
 
     def __init__(self, cfg: PipelineConfig, key=None):
         self.cfg = cfg
@@ -84,65 +109,85 @@ class StableDiffusionPipeline:
         return image, stats
 
     # ------------------------------------------------------------------
-    # Measurement -> full-geometry ledger
+    # Measurement -> full-geometry ledger (delegates to module functions
+    # so the engine/serving path can use them without a pipeline object)
     # ------------------------------------------------------------------
     def measured_sas_ratios(self, stats_one_iter) -> dict:
-        """Per-resolution (compressed/dense) SAS ratio from PSSAStats."""
-        by_res: dict = {}
-        for key, st in stats_one_iter.get("pssa", {}).items():
-            res = int(key.rsplit("@", 1)[1])
-            comp = float(st.bytes_pssa_total)
-            base = float(st.bytes_baseline)
-            num, den = by_res.get(res, (0.0, 0.0))
-            by_res[res] = (num + comp, den + base)
-        return {res: num / max(den, 1e-12)
-                for res, (num, den) in by_res.items()}
+        return measured_sas_ratios(stats_one_iter)
 
     def measured_tips_ratio(self, stats_one_iter) -> float:
-        """Workload-weighted INT6 fraction across the iteration's FFNs."""
-        num = den = 0.0
-        for key, tr in stats_one_iter.get("tips", {}).items():
-            res = int(key.rsplit("@", 1)[1])
-            work = float(res * res)        # FFN MACs scale with token count
-            num += float(tr.low_precision_ratio) * work
-            den += work
-        return num / max(den, 1e-12)
+        return measured_tips_ratio(stats_one_iter)
 
     def energy_report(self, stats_per_iter, full_geometry: bool = True
                       ) -> "PipelineEnergyReport":
-        """Headline numbers: EMA GB/iter + mJ/iter (Table I reproduction).
+        return energy_report(self.cfg, stats_per_iter,
+                             full_geometry=full_geometry)
 
-        The reduced run's measured ratios drive the FULL BK-SDM-Tiny ledger
-        (hardware adaptation note: patch locality is resolution-dependent,
-        so per-resolution ratios transfer; DESIGN.md §2).
-        """
-        geom = UNetConfig() if full_geometry else self.cfg.unet
-        # attention lives at latent_size / {1, 2, 4} in both geometries;
-        # remap measured per-resolution ratios by rank (largest -> largest)
-        # when the reduced run's resolutions differ from the full ones.
-        geom_res = sorted({geom.latent_size >> s
-                           for s, a in enumerate(geom.down_attn) if a},
-                          reverse=True)
 
-        def remap(ratios: dict) -> dict:
-            meas = sorted(ratios, reverse=True)
-            return {g: ratios[m] for g, m in zip(geom_res, meas)}
+def measured_sas_ratios(stats_one_iter) -> dict:
+    """Per-resolution (compressed/dense) SAS ratio from PSSAStats.
 
-        opts_per_iter = []
-        n = self.cfg.ddim.num_inference_steps
-        for i, stats in enumerate(stats_per_iter):
-            opts_per_iter.append(L.LedgerOptions(
-                pssa=self.cfg.unet.pssa,
-                tips=self.cfg.unet.tips and i < self.cfg.ddim.tips_active_iters,
-                sas_ratio=remap(self.measured_sas_ratios(stats)),
-                tips_low_ratio=self.measured_tips_ratio(stats),
-            ))
-        baseline_opts = [L.LedgerOptions()] * n
-        return PipelineEnergyReport(
-            optimized=L.generation_report(geom, opts_per_iter),
-            baseline=L.generation_report(geom, baseline_opts),
-            iterations=n,
-        )
+    Accepts a single-step ``UNetStats`` pytree or the legacy
+    ``{"pssa": {"tag@res": PSSAStats}}`` dict view.
+    """
+    by_res: dict = {}
+    for res, st in _iter_layer_stats(stats_one_iter, "pssa"):
+        comp = float(st.bytes_pssa_total)
+        base = float(st.bytes_baseline)
+        num, den = by_res.get(res, (0.0, 0.0))
+        by_res[res] = (num + comp, den + base)
+    return {res: num / max(den, 1e-12)
+            for res, (num, den) in by_res.items()}
+
+
+def measured_tips_ratio(stats_one_iter) -> float:
+    """Workload-weighted INT6 fraction across the iteration's FFNs."""
+    num = den = 0.0
+    for res, tr in _iter_layer_stats(stats_one_iter, "tips"):
+        work = float(res * res)            # FFN MACs scale with token count
+        num += float(tr.low_precision_ratio) * work
+        den += work
+    return num / max(den, 1e-12)
+
+
+def energy_report(cfg: "PipelineConfig", stats_per_iter,
+                  full_geometry: bool = True) -> "PipelineEnergyReport":
+    """Headline numbers: EMA GB/iter + mJ/iter (Table I reproduction).
+
+    ``stats_per_iter`` is either the stacked ``UNetStats`` a scanned
+    engine run returns (leading axis = iterations) or the seed's list of
+    per-iteration stats.  The reduced run's measured ratios drive the
+    FULL BK-SDM-Tiny ledger (hardware adaptation note: patch locality is
+    resolution-dependent, so per-resolution ratios transfer; DESIGN.md §2).
+    """
+    stats_per_iter = coerce_per_step_stats(stats_per_iter)
+    geom = UNetConfig() if full_geometry else cfg.unet
+    # attention lives at latent_size / {1, 2, 4} in both geometries;
+    # remap measured per-resolution ratios by rank (largest -> largest)
+    # when the reduced run's resolutions differ from the full ones.
+    geom_res = sorted({geom.latent_size >> s
+                       for s, a in enumerate(geom.down_attn) if a},
+                      reverse=True)
+
+    def remap(ratios: dict) -> dict:
+        meas = sorted(ratios, reverse=True)
+        return {g: ratios[m] for g, m in zip(geom_res, meas)}
+
+    opts_per_iter = []
+    n = cfg.ddim.num_inference_steps
+    for i, stats in enumerate(stats_per_iter):
+        opts_per_iter.append(L.LedgerOptions(
+            pssa=cfg.unet.pssa,
+            tips=cfg.unet.tips and i < cfg.ddim.tips_active_iters,
+            sas_ratio=remap(measured_sas_ratios(stats)),
+            tips_low_ratio=measured_tips_ratio(stats),
+        ))
+    baseline_opts = [L.LedgerOptions()] * n
+    return PipelineEnergyReport(
+        optimized=L.generation_report(geom, opts_per_iter),
+        baseline=L.generation_report(geom, baseline_opts),
+        iterations=n,
+    )
 
 
 @dataclasses.dataclass

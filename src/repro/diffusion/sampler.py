@@ -4,6 +4,21 @@ Deterministic DDIM (eta = 0) over a linear-beta DDPM schedule, with optional
 classifier-free guidance.  TIPS is active for the first 20 of the 25
 iterations (paper Fig. 9(b)): the last 5 are quantization-vulnerable and run
 full INT12 — the sampler passes ``tips_active`` per step.
+
+Two interchangeable loop implementations:
+
+``sample``       — the seed's Python loop (25 dispatches, two UNet calls per
+                   step under CFG).  Kept as the parity/reference path: its
+                   per-iteration stats list is the ground truth the scanned
+                   path is tested against.
+``sample_scan``  — all 25 steps inside one ``jax.lax.scan`` with
+                   ``tips_active`` as a per-step traced array, and cond +
+                   uncond CFG fused into ONE batched UNet call (concatenate
+                   along batch, split after).  Halves dispatch count, makes
+                   the whole loop jittable (the ``DiffusionEngine`` wraps
+                   encode -> scan -> decode in a single ``jax.jit``), and
+                   returns the stats trajectory as a stacked ``UNetStats``
+                   pytree (leading axis = iterations).
 """
 from __future__ import annotations
 
@@ -45,14 +60,31 @@ def ddim_step(latents, eps, t, t_prev, acp):
     return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
 
 
+def cfg_batch(latents, context, uncond_context):
+    """Fuse cond + uncond into one batch: (B,...) -> (2B,...).
+
+    Row layout is [cond | uncond] along the leading axis; undo with
+    ``jnp.split(eps, 2)``.  Each half attends to its own context, so the
+    fused call is arithmetically identical to two separate calls.
+    """
+    lat2 = jnp.concatenate([latents, latents], axis=0)
+    ctx2 = jnp.concatenate([context, uncond_context], axis=0)
+    return lat2, ctx2
+
+
+def guided_eps(eps_fused, guidance_scale):
+    """Split a fused [cond | uncond] eps and apply CFG."""
+    eps_c, eps_u = jnp.split(eps_fused, 2, axis=0)
+    return eps_u + guidance_scale * (eps_c - eps_u)
+
+
 def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
            collect_stats: bool = False):
-    """Run the full 25-iteration denoising loop.
+    """Run the denoising loop as 25 Python-level dispatches (seed path).
 
     ``unet_apply(latents, timesteps, context, tips_active)`` -> (eps, stats).
-    Python loop (25 iterations, each jit-compiled once) so per-iteration
-    stats stay inspectable — matching how the paper instruments per-iteration
-    low-precision ratios (Fig. 9(b)).
+    Kept for per-step inspectability and as the reference the scanned
+    implementation is verified against (tests/test_engine.py).
     """
     acp = alphas_cumprod(cfg)
     ts = timestep_schedule(cfg)
@@ -73,3 +105,52 @@ def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
         if collect_stats:
             all_stats.append(stats)
     return latents, all_stats
+
+
+def sample_scan(unet_apply, latents, context, uncond_context,
+                cfg: DDIMConfig):
+    """Run all denoising steps inside one ``jax.lax.scan``.
+
+    Per-step traced inputs (xs): the DDIM timestep and the TIPS activity
+    flag.  Under CFG the cond and uncond UNet evaluations are fused into a
+    single batched call per step with the shared prefix deduplicated, and
+    ``unet_apply`` must accept static ``stats_rows`` and ``cfg_dup``
+    keywords (``repro.diffusion.unet.unet_forward`` does) — stats
+    restricted to the cond rows, latents carrying only the cond half.
+    Returns ``(latents,
+    stacked_stats)`` where ``stacked_stats`` is a ``UNetStats`` whose
+    leaves carry a leading ``num_inference_steps`` axis; reconstruct the
+    per-step view with ``stacked_stats.step(i)`` / ``.unstack()``.
+    """
+    acp = alphas_cumprod(cfg)
+    ts = timestep_schedule(cfg)
+    step = cfg.num_train_steps // cfg.num_inference_steps
+    n = cfg.num_inference_steps
+    tips_flags = jnp.arange(n) < cfg.tips_active_iters
+
+    use_cfg = cfg.guidance_scale != 1.0 and uncond_context is not None
+    if use_cfg:
+        ctx_fused = jnp.concatenate([context, uncond_context], axis=0)
+    b = latents.shape[0]
+
+    def body(lat, xs):
+        t, active = xs
+        if use_cfg:
+            tvec = jnp.full((b,), t, jnp.int32)
+            # cfg_dup: latents stay at b rows — the UNet tiles the hidden
+            # state to [cond | uncond] at the first cross-attention (the
+            # halves are identical before it).  stats_rows=b accounts
+            # PSSA/TIPS on the cond half only — the ledger never consumes
+            # uncond stats (the two-call reference path computes and
+            # discards them; the fused path skips them).
+            eps_fused, stats = unet_apply(lat, tvec, ctx_fused, active,
+                                          stats_rows=b, cfg_dup=True)
+            eps = guided_eps(eps_fused, cfg.guidance_scale)
+        else:
+            tvec = jnp.full((b,), t, jnp.int32)
+            eps, stats = unet_apply(lat, tvec, context, active)
+        lat = ddim_step(lat, eps, t, t - step, acp)
+        return lat, stats
+
+    latents, stacked = jax.lax.scan(body, latents, (ts, tips_flags))
+    return latents, stacked

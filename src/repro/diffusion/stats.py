@@ -1,0 +1,142 @@
+"""Stats pytree for the jittable diffusion engine.
+
+The seed implementation threaded a string-keyed ``stats: dict`` through the
+UNet forward and returned one dict per denoising iteration.  That shape is
+hostile to whole-loop ``jax.lax.scan``/``jax.jit``: the dict is mutated in
+place, its insertion order is an accident of control flow, and per-iteration
+collection forces a Python-level sampler loop.
+
+``UNetStats`` replaces it: a frozen dataclass registered as a pytree whose
+*static* part (the layer order — ``(tag, resolution)`` pairs derived from
+``UNetConfig``) lives in the treedef, and whose *dynamic* part (one
+``PSSAStats`` + one ``TIPSResult`` per transformer block, in that fixed
+order) are the leaves.  Because the treedef is identical at every denoising
+step, a ``lax.scan`` over the sampler stacks every leaf along a leading
+``num_steps`` axis — the whole 25-iteration stats trajectory comes back as
+one pytree of ``(25, ...)`` arrays.
+
+Parity path: ``step(i)`` / ``unstack()`` recover the per-iteration view and
+``as_dict()`` reproduces the seed's ``{"pssa": {"down0.0@16": ...}, ...}``
+dict exactly, so every downstream consumer (energy ledger, benchmarks) can
+read either representation.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pssa import PSSAStats
+from repro.core.tips import TIPSResult
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKey:
+    """Static identity of one transformer block: tag + feature-map res."""
+    tag: str
+    resolution: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.tag}@{self.resolution}"
+
+
+def attn_layer_order(cfg) -> Tuple[LayerKey, ...]:
+    """Transformer blocks in forward-traversal order, derived from config.
+
+    Mirrors ``unet_forward`` exactly: down stages (attn at ``latent >> i``),
+    optional mid block, then up stages (stage ``j`` revisits resolution
+    ``latent >> rev[j]``).  This is the canonical leaf order of
+    ``UNetStats`` — the contract that makes stacked stats addressable.
+    """
+    order = []
+    nstages = len(cfg.block_channels)
+    for i, has_attn in enumerate(cfg.down_attn):
+        if not has_attn:
+            continue
+        for r in range(cfg.resnets_per_down):
+            order.append(LayerKey(f"down{i}.{r}", cfg.latent_size >> i))
+    if cfg.has_mid_block:
+        order.append(LayerKey("mid", cfg.latent_size >> (nstages - 1)))
+    for j, i in enumerate(reversed(range(nstages))):
+        if not cfg.down_attn[i]:
+            continue
+        for r in range(cfg.resnets_per_up):
+            order.append(LayerKey(f"up{j}.{r}", cfg.latent_size >> i))
+    return tuple(order)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class UNetStats:
+    """Per-layer PSSA/TIPS stats in fixed, config-derived order.
+
+    ``layers`` is static (treedef); ``pssa``/``tips`` are tuples of
+    per-layer stat pytrees in the same order.  Leaves are scalars (or
+    per-query arrays) for a single forward pass, and gain a leading
+    ``num_steps`` axis after a scanned sampler run.
+    """
+    layers: Tuple[LayerKey, ...]
+    pssa: Tuple[PSSAStats, ...]
+    tips: Tuple[TIPSResult, ...]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.pssa, self.tips), self.layers
+
+    @classmethod
+    def tree_unflatten(cls, layers, children):
+        pssa, tips = children
+        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips))
+
+    # -- views -----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    @property
+    def num_steps(self) -> int:
+        """Leading (scan) axis length; 0 for an unstacked single pass."""
+        if not self.pssa:
+            return 0
+        lead = self.pssa[0].nnz
+        return int(lead.shape[0]) if getattr(lead, "ndim", 0) >= 1 else 0
+
+    def step(self, i: int) -> "UNetStats":
+        """Per-iteration view of a stacked (scanned) stats pytree."""
+        return jax.tree_util.tree_map(lambda x: x[i], self)
+
+    def unstack(self) -> list:
+        """Stacked stats -> list of per-step ``UNetStats`` (parity path)."""
+        n = self.num_steps
+        if n == 0:
+            return [self]
+        return [self.step(i) for i in range(n)]
+
+    def as_dict(self) -> dict:
+        """The seed's ``{"pssa": {...}, "tips": {...}}`` string-keyed view."""
+        return {
+            "pssa": {k.name: s for k, s in zip(self.layers, self.pssa)},
+            "tips": {k.name: t for k, t in zip(self.layers, self.tips)},
+        }
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_layer_list(cls, layers, pssa, tips) -> "UNetStats":
+        layers, pssa, tips = tuple(layers), tuple(pssa), tuple(tips)
+        assert len(layers) == len(pssa) == len(tips), \
+            (len(layers), len(pssa), len(tips))
+        return cls(layers=layers, pssa=pssa, tips=tips)
+
+
+def coerce_per_step_stats(stats) -> list:
+    """Normalize any supported stats shape to a per-iteration list.
+
+    Accepts a stacked ``UNetStats`` (scan output), a single ``UNetStats``,
+    a list of ``UNetStats``, or the legacy list-of-dicts — returns a list
+    with one entry per denoising iteration.
+    """
+    if isinstance(stats, UNetStats):
+        return stats.unstack()
+    return list(stats)

@@ -18,8 +18,12 @@ full BK-SDM-Tiny geometry is exercised analytically by ``diffusion.ledger``
 (bytes/MACs) and by shape-level ``jax.eval_shape`` checks — matching how the
 paper itself evaluates (energy / EMA / throughput, not accuracy).
 
-Forward returns ``(eps, stats)`` where ``stats`` carries per-layer PSSA
-compression statistics and per-cross-attn TIPS ratios for the energy ledger.
+Forward returns ``(eps, stats)`` where ``stats`` is a ``UNetStats`` pytree
+(fixed config-derived layer order — see ``repro.diffusion.stats``) carrying
+per-layer PSSA compression statistics and per-cross-attn TIPS ratios for the
+energy ledger.  Being a registered pytree with static layer keys, it flows
+through ``jax.lax.scan``/``jax.jit`` unchanged — the property the jitted
+``DiffusionEngine`` builds on.
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import pssa, tips
 from repro.core.attention import cross_attention_tips, self_attention_pssa
+from repro.diffusion.stats import UNetStats, attn_layer_order
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +64,9 @@ class UNetConfig:
     use_dbsc_kernel: bool = False      # route FFN through the Pallas kernel
     pssa_threshold: float = 1.0 / 8192.0
     tips_threshold: float = 0.05
+    # route PSSA accounting through the seed's materializing reference
+    # implementation (benchmark baseline / oracle; see core.pssa)
+    pssa_stats_reference: bool = False
 
     dtype: str = "float32"
 
@@ -282,8 +290,21 @@ def _merge_heads(x):
 
 
 def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
-                       stats: dict, layer_tag: str):
-    """x2d: (B, H, W, C) -> same; stats appended in place."""
+                       stats_rows=None, dup_after_self: bool = False):
+    """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult).
+
+    ``stats_rows`` (static) restricts the returned stats to the first N
+    batch rows — the cond half under a fused-CFG batch.
+
+    ``dup_after_self``: CFG prefix deduplication.  Under fused CFG, the
+    cond and uncond halves are IDENTICAL until the first cross-attention
+    (only the text context differs), so the fused path runs everything up
+    to and including this block's self-attention on the cond half alone
+    and tiles the hidden state to both halves here — exact, and it halves
+    the most expensive self-attention in the network (the first block sits
+    at the highest resolution).  ``x2d`` then has half as many rows as
+    ``context``.
+    """
     b, hgt, wid, c = x2d.shape
     res = hgt  # feature-map resolution
     heads = cfg.num_heads
@@ -302,11 +323,18 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     patch = cfg.patch_size(res)
     sa = self_attention_pssa(q, k, v, patch=patch,
                              threshold=cfg.pssa_threshold,
-                             prune_scores=cfg.pssa)
-    # key encodes "<tag>@<resolution>" — jit-safe (strings live in treedef)
-    stats.setdefault("pssa", {})[f"{layer_tag}@{res}"] = sa.stats
+                             prune_scores=cfg.pssa,
+                             stats_rows=None if dup_after_self
+                             else stats_rows,
+                             reference_stats=cfg.pssa_stats_reference)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
                             p["sa_o"]["w"]) + p["sa_o"]["b"])
+
+    if dup_after_self:
+        # tile [cond] -> [cond | uncond]; divergence starts at cross-attn
+        h = jnp.concatenate([h, h], axis=0)
+        x2d = jnp.concatenate([x2d, x2d], axis=0)
+        b = x2d.shape[0]
 
     # --- cross-attention (TIPS CAS source) ---
     resid = h
@@ -314,8 +342,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     q = _attn_heads(hn, p["ca_q"]["w"], heads)
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
     vt = _attn_heads(context, p["ca_v"]["w"], heads)
-    ca = cross_attention_tips(q, kt, vt, threshold=cfg.tips_threshold)
-    stats.setdefault("tips", {})[f"{layer_tag}@{res}"] = ca.tips_result
+    ca = cross_attention_tips(q, kt, vt, threshold=cfg.tips_threshold,
+                              stats_rows=stats_rows)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
                             p["ca_o"]["w"]) + p["ca_o"]["b"])
 
@@ -323,7 +351,7 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     resid = h
     hn = layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
     if cfg.tips:
-        important = jnp.logical_or(ca.tips_result.important,
+        important = jnp.logical_or(ca.important_full,
                                    jnp.logical_not(tips_active))
     else:
         important = None
@@ -351,7 +379,7 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                 p["ff_out"]["w"]) + p["ff_out"]["b"])
 
     h = jnp.einsum("btc,cd->btd", h, p["proj_out"]["w"]) + p["proj_out"]["b"]
-    return x2d + h.reshape(b, hgt, wid, c)
+    return x2d + h.reshape(b, hgt, wid, c), sa.stats, ca.tips_result
 
 
 def _downsample(x, p):
@@ -368,19 +396,55 @@ def _upsample(x, p):
 # Forward
 # ----------------------------------------------------------------------------
 def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
-                 tips_active: bool | jax.Array = True):
+                 tips_active: bool | jax.Array = True,
+                 stats_rows: Optional[int] = None,
+                 cfg_dup: bool = False):
     """latents (B, S, S, 4), timesteps (B,), context (B, Ttext, ctx_dim).
 
-    Returns (eps-prediction (B, S, S, 4), stats dict).
+    Returns (eps-prediction (B, S, S, 4), ``UNetStats`` pytree) with one
+    PSSA/TIPS entry per transformer block in ``attn_layer_order(cfg)``.
+    ``stats_rows`` (static) restricts stats to the first N batch rows; the
+    fused-CFG path sets it to the cond half so accounting matches a
+    cond-only call at half the cost.
+
+    ``cfg_dup``: fused-CFG prefix deduplication.  ``latents``/``timesteps``
+    carry ONLY the cond half (B rows) while ``context`` carries
+    ``[cond | uncond]`` (2B rows); everything up to the first
+    cross-attention — identical for both halves — runs once on B rows and
+    the hidden state is tiled to 2B there.  ``eps`` comes back with 2B
+    rows, split by ``sampler.guided_eps``.
     """
-    stats: dict = {}
+    pssa_stats: list = []
+    tips_stats: list = []
     tips_active = jnp.asarray(tips_active)
+    needs_dup = cfg_dup
+    if cfg_dup:
+        assert context.shape[0] == 2 * latents.shape[0], \
+            (context.shape, latents.shape)
 
     temb = timestep_embedding(timesteps, cfg.block_channels[0])
     temb = jnp.einsum("bd,dc->bc", temb, params["time_mlp1"]["w"]) \
         + params["time_mlp1"]["b"]
     temb = jnp.einsum("bd,dc->bc", jax.nn.silu(temb),
                       params["time_mlp2"]["w"]) + params["time_mlp2"]["b"]
+
+    def attn_block(h, bp):
+        nonlocal temb, needs_dup
+        h, sa, ca = _transformer_block(h, bp, context, cfg, tips_active,
+                                       stats_rows, dup_after_self=needs_dup)
+        if needs_dup:
+            # downstream resnets now see [cond | uncond] rows
+            temb = jnp.concatenate([temb, temb], axis=0)
+            needs_dup = False
+        pssa_stats.append(sa)
+        tips_stats.append(ca)
+        return h
+
+    def pop_skip(h):
+        skip = skips.pop()
+        if skip.shape[0] != h.shape[0]:   # recorded before duplication
+            skip = jnp.concatenate([skip, skip], axis=0)
+        return skip
 
     h = conv2d(latents, params["conv_in"]["w"], params["conv_in"]["b"])
     skips = [h]
@@ -389,8 +453,7 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
         for r, rp in enumerate(stage["resnets"]):
             h = _resnet(h, rp, temb, cfg.groups)
             if stage["attns"]:
-                h = _transformer_block(h, stage["attns"][r], context, cfg,
-                                       tips_active, stats, f"down{i}.{r}")
+                h = attn_block(h, stage["attns"][r])
             skips.append(h)
         if "down" in stage:
             h = _downsample(h, stage["down"])
@@ -399,25 +462,28 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     if cfg.has_mid_block:
         mp = params["mid"]
         h = _resnet(h, mp["res1"], temb, cfg.groups)
-        h = _transformer_block(h, mp["attn"], context, cfg, tips_active,
-                               stats, "mid")
+        h = attn_block(h, mp["attn"])
         h = _resnet(h, mp["res2"], temb, cfg.groups)
 
     for j, stage in enumerate(params["up"]):
         for r, rp in enumerate(stage["resnets"]):
-            skip = skips.pop()
+            skip = pop_skip(h)
             h = _resnet(jnp.concatenate([h, skip], axis=-1), rp, temb,
                         cfg.groups)
             if stage["attns"]:
-                h = _transformer_block(h, stage["attns"][r], context, cfg,
-                                       tips_active, stats, f"up{j}.{r}")
+                h = attn_block(h, stage["attns"][r])
         if "up" in stage:
             h = _upsample(h, stage["up"])
+
+    if needs_dup:                     # no cross-attention anywhere: tile eps
+        h = jnp.concatenate([h, h], axis=0)
 
     h = group_norm(h, params["norm_out"]["scale"], params["norm_out"]["bias"],
                    cfg.groups)
     eps = conv2d(jax.nn.silu(h), params["conv_out"]["w"],
                  params["conv_out"]["b"])
+    stats = UNetStats.from_layer_list(attn_layer_order(cfg), pssa_stats,
+                                      tips_stats)
     return eps, stats
 
 

@@ -1,6 +1,22 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+
+
+def force_fake_devices(count: int = 512) -> None:
+    """Give this process ``count`` fake host devices for AOT compilation.
+
+    Must run before the first jax backend init — called from the
+    ``__main__`` entrypoint below, NOT at import time: pure helpers in this
+    module (``collective_bytes_from_hlo``, ``pick_microbatches``,
+    ``choose_tp_fold``) are imported by the test suite, and an import-time
+    env mutation would silently put the ENTIRE suite (collected before any
+    test runs) on a 512-device platform — exactly what tests/conftest.py
+    promises never happens to smoke tests and benches.
+    """
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                                 f"={count}")
+
+
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this AOT-compiles the real step function (train_step /
@@ -457,4 +473,5 @@ def main():
 
 
 if __name__ == "__main__":
+    force_fake_devices()
     main()

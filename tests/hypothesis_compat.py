@@ -1,0 +1,40 @@
+"""Import hypothesis, or stub it so modules still collect without it.
+
+The tier-1 container does not ship ``hypothesis`` (it is declared in
+``requirements-test.txt`` / the ``test`` extra for CI and dev machines).
+Importing it unguarded made four test modules ERROR at collection and took
+the whole suite down with ``-x``.  This shim keeps the property tests as
+first-class hypothesis tests when the library is present, and degrades them
+to individually-skipped tests — without hiding the modules' plain unit
+tests — when it is not.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Answers any strategy constructor with a placeholder."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()

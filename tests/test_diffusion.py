@@ -36,8 +36,11 @@ def test_unet_forward_shapes(smoke_unet):
     assert eps.shape == lat.shape
     assert bool(jnp.all(jnp.isfinite(eps)))
     # 9 transformer blocks in the BK-SDM layout (3 down + 6 up)
-    assert len(stats["pssa"]) == 9
-    assert len(stats["tips"]) == 9
+    assert len(stats) == 9
+    d = stats.as_dict()                      # legacy string-keyed view
+    assert len(d["pssa"]) == 9
+    assert len(d["tips"]) == 9
+    assert "down0.0@16" in d["pssa"]
 
 
 def test_unet_full_geometry_shapes_abstract():

@@ -1,0 +1,263 @@
+"""Jitted-engine refactor tests: stats pytree, fused CFG, scan parity.
+
+The contract under test (DESIGN.md §3):
+
+  * ``UNetStats`` is a registered pytree whose layer order is derived from
+    config and whose leaves flow through ``lax.scan`` as stacked arrays;
+  * one fused [cond | uncond] UNet call equals two separate calls;
+  * the scanned sampler reproduces the Python-loop seed implementation —
+    latents AND per-iteration stats — on the smoke config;
+  * ``energy_report`` produces identical headline numbers from the stacked
+    stats pytree and from the per-step list.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pssa
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import (PipelineConfig, StableDiffusionPipeline,
+                                      energy_report)
+from repro.diffusion.sampler import (DDIMConfig, cfg_batch, guided_eps,
+                                     sample, sample_scan)
+from repro.diffusion.stats import UNetStats, attn_layer_order
+from repro.diffusion.unet import UNetConfig, init_unet_params, unet_forward
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = PipelineConfig.smoke()
+    key = jax.random.PRNGKey(42)
+    pipe = StableDiffusionPipeline(cfg, key=key)
+    eng = DiffusionEngine(cfg, key=key)   # same key -> identical params
+    return cfg, pipe, eng
+
+
+def _toks(cfg, batch=1, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (batch, cfg.text.max_len), 0,
+                              cfg.text.vocab_size)
+
+
+# ----------------------------------------------------------------------------
+# Stats pytree
+# ----------------------------------------------------------------------------
+def test_layer_order_matches_forward_traversal(smoke_setup):
+    cfg, pipe, _ = smoke_setup
+    order = attn_layer_order(cfg.unet)
+    assert [k.name for k in order] == [
+        "down0.0@16", "down1.0@8", "down2.0@4",
+        "up1.0@4", "up1.1@4", "up2.0@8", "up2.1@8",
+        "up3.0@16", "up3.1@16"]
+    s = cfg.unet.latent_size
+    lat = jax.random.normal(jax.random.PRNGKey(0), (1, s, s, 4))
+    ctx = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, cfg.unet.text_len, cfg.unet.context_dim))
+    _, stats = unet_forward(pipe.unet_params, lat, jnp.array([500]), ctx,
+                            cfg.unet)
+    assert stats.layers == order
+
+
+def test_unet_stats_is_scan_compatible_pytree(smoke_setup):
+    cfg, pipe, _ = smoke_setup
+    s = cfg.unet.latent_size
+    lat = jax.random.normal(jax.random.PRNGKey(0), (1, s, s, 4))
+    ctx = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, cfg.unet.text_len, cfg.unet.context_dim))
+    _, stats = unet_forward(pipe.unet_params, lat, jnp.array([500]), ctx,
+                            cfg.unet)
+    # round-trips flatten/unflatten with static layer keys in the treedef
+    leaves, treedef = jax.tree_util.tree_flatten(stats)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.layers == stats.layers
+    # a stacked pytree indexes back to per-step views
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x, x]), stats)
+    assert stacked.num_steps == 2
+    per_step = stacked.step(0)
+    np.testing.assert_allclose(np.asarray(per_step.pssa[0].nnz),
+                               np.asarray(stats.pssa[0].nnz))
+    # legacy dict view preserved
+    d = stats.as_dict()
+    assert set(d) == {"pssa", "tips"}
+    assert len(d["pssa"]) == len(stats)
+
+
+# ----------------------------------------------------------------------------
+# Fused CFG
+# ----------------------------------------------------------------------------
+def test_fused_cfg_matches_two_call_path(smoke_setup):
+    cfg, pipe, _ = smoke_setup
+    ucfg = cfg.unet
+    s = ucfg.latent_size
+    lat = jax.random.normal(jax.random.PRNGKey(3), (2, s, s, 4))
+    ctx = jax.random.normal(jax.random.PRNGKey(4),
+                            (2, ucfg.text_len, ucfg.context_dim))
+    unc = jax.random.normal(jax.random.PRNGKey(5),
+                            (2, ucfg.text_len, ucfg.context_dim))
+    tvec = jnp.full((2,), 500, jnp.int32)
+
+    eps_c, stats_c = unet_forward(pipe.unet_params, lat, tvec, ctx, ucfg)
+    eps_u, _ = unet_forward(pipe.unet_params, lat, tvec, unc, ucfg)
+    two_call = eps_u + 7.5 * (eps_c - eps_u)
+
+    lat2, ctx2 = cfg_batch(lat, ctx, unc)
+    eps_f, stats_f = unet_forward(pipe.unet_params, lat2,
+                                  jnp.full((4,), 500, jnp.int32), ctx2, ucfg,
+                                  stats_rows=2)
+    fused = guided_eps(eps_f, 7.5)
+
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_call),
+                               rtol=1e-4, atol=1e-4)
+
+    # prefix-deduplicated variant (the engine's path): latents carry only
+    # the cond half; the shared prefix runs once — exact equality per half
+    eps_d, _ = unet_forward(pipe.unet_params, lat, tvec, ctx2, ucfg,
+                            stats_rows=2, cfg_dup=True)
+    eps_dc, eps_du = jnp.split(eps_d, 2, axis=0)
+    np.testing.assert_allclose(np.asarray(eps_dc), np.asarray(eps_c),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eps_du), np.asarray(eps_u),
+                               rtol=1e-5, atol=1e-5)
+    # stats from the fused call restricted to cond rows == cond-call stats.
+    # Scores within one ulp of the prune threshold can flip between the
+    # batched and unbatched einsum, so counters get a few counts of slack.
+    for a, b in zip(stats_f.pssa, stats_c.pssa):
+        np.testing.assert_allclose(np.asarray(a.nnz), np.asarray(b.nnz),
+                                   atol=16)
+        np.testing.assert_allclose(np.asarray(a.bytes_pssa_total),
+                                   np.asarray(b.bytes_pssa_total),
+                                   rtol=1e-3)
+    for a, b in zip(stats_f.tips, stats_c.tips):
+        np.testing.assert_allclose(np.asarray(a.low_precision_ratio),
+                                   np.asarray(b.low_precision_ratio),
+                                   atol=0.02)
+        assert a.important.shape == b.important.shape   # cond rows only
+
+
+# ----------------------------------------------------------------------------
+# Scanned sampler vs Python loop
+# ----------------------------------------------------------------------------
+def test_scan_sampler_matches_python_loop(smoke_setup):
+    cfg, pipe, _ = smoke_setup
+    s = cfg.unet.latent_size
+    lat = jax.random.normal(jax.random.PRNGKey(9), (1, s, s, 4))
+    ctx = pipe._encode(_toks(cfg))
+
+    def unet_apply(l, t, c, act, stats_rows=None):
+        return unet_forward(pipe.unet_params, l, t, c, cfg.unet,
+                            tips_active=act, stats_rows=stats_rows)
+
+    lat_loop, stats_loop = sample(unet_apply, lat, ctx, None, cfg.ddim,
+                                  collect_stats=True)
+    lat_scan, stacked = sample_scan(unet_apply, lat, ctx, None, cfg.ddim)
+
+    # eager loop vs scanned-jit execution reassociates fp ops
+    np.testing.assert_allclose(np.asarray(lat_scan), np.asarray(lat_loop),
+                               rtol=2e-3, atol=2e-3)
+    assert stacked.num_steps == cfg.ddim.num_inference_steps
+    for i, st in enumerate(stacked.unstack()):
+        ref = stats_loop[i]
+        for a, b in zip(st.pssa, ref.pssa):
+            # threshold-knife-edge scores may flip between eager and
+            # scanned execution; allow a few counts of slack
+            np.testing.assert_allclose(np.asarray(a.nnz),
+                                       np.asarray(b.nnz), atol=16)
+            np.testing.assert_allclose(np.asarray(a.bytes_pssa_total),
+                                       np.asarray(b.bytes_pssa_total),
+                                       rtol=1e-3)
+        for a, b in zip(st.tips, ref.tips):
+            np.testing.assert_allclose(np.asarray(a.low_precision_ratio),
+                                       np.asarray(b.low_precision_ratio),
+                                       atol=0.02)
+
+
+def test_engine_end_to_end_and_energy_report_parity(smoke_setup):
+    cfg, pipe, eng = smoke_setup
+    toks = _toks(cfg)
+    img_loop, stats_loop = pipe.generate(toks, jax.random.PRNGKey(2))
+    out = eng.generate(toks, jax.random.PRNGKey(2))
+
+    assert out.images.shape == img_loop.shape
+    assert bool(jnp.all(jnp.isfinite(out.images)))
+    np.testing.assert_allclose(np.asarray(out.images),
+                               np.asarray(img_loop), rtol=1e-3, atol=1e-3)
+
+    rep_list = energy_report(cfg, stats_loop).summary()
+    rep_stacked = energy_report(cfg, out.stats).summary()
+    for k in rep_list:
+        assert rep_stacked[k] == pytest.approx(rep_list[k], rel=1e-3), k
+
+
+def test_engine_cfg_trajectory_close_to_two_call_loop(smoke_setup):
+    cfg0, _, _ = smoke_setup
+    cfg = dataclasses.replace(cfg0, ddim=dataclasses.replace(
+        cfg0.ddim, guidance_scale=7.5))
+    key = jax.random.PRNGKey(7)
+    pipe = StableDiffusionPipeline(cfg, key=key)
+    eng = DiffusionEngine(cfg, key=key)
+    toks, un = _toks(cfg), jnp.zeros_like(_toks(cfg))
+    s = cfg.unet.latent_size
+    lat = jax.random.normal(jax.random.PRNGKey(8), (1, s, s, 4))
+
+    ctx, uc = pipe._encode(toks), pipe._encode(un)
+    lat_loop, _ = sample(pipe._unet, lat, ctx, uc, cfg.ddim)
+    out = eng.generate(toks, None, uncond_tokens=un, latents=lat.copy())
+    # prefix dedup makes the fused step per-row identical to the two-call
+    # step; residual drift is jit-vs-eager fp reassociation only
+    np.testing.assert_allclose(np.asarray(out.latents),
+                               np.asarray(lat_loop), rtol=2e-3, atol=2e-3)
+
+
+def test_engine_caches_compiled_signatures(smoke_setup):
+    cfg, _, eng = smoke_setup
+    eng.generate(_toks(cfg, batch=1), jax.random.PRNGKey(0))
+    n = len(eng._compiled)
+    eng.generate(_toks(cfg, batch=1, seed=3), jax.random.PRNGKey(1))
+    assert len(eng._compiled) == n          # same signature -> cached
+    eng.generate(_toks(cfg, batch=2), jax.random.PRNGKey(2))
+    assert len(eng._compiled) == n + 1      # new batch -> new executable
+
+
+# ----------------------------------------------------------------------------
+# PSSA byte-counter precision (satellite fix)
+# ----------------------------------------------------------------------------
+def test_compress_stats_integer_exact_at_full_geometry():
+    """The static byte terms must be exact where float32 would round."""
+    # full-geometry SAS with heads folded in: 8 * 4096 * 4096 = 134M elems
+    lead, tq, tk, patch = 8, 4096, 4096, 64
+    exact = pssa.exact_byte_counts(nnz=2 ** 24 + 1, ones_xor=2 ** 24 + 3,
+                                   lead=lead, tq=tq, tk=tk, patch=patch)
+    assert exact["total"] == lead * tq * tk                  # exact int
+    assert exact["bytes_baseline"] == lead * tq * tk * 12 / 8
+    # float32 cannot represent odd integers above 2^24 — the exact path must
+    # not inherit that rounding
+    f32_nnz = float(np.float32(2 ** 24 + 1))
+    assert f32_nnz != 2 ** 24 + 1
+    assert exact["bytes_values"] == (2 ** 24 + 1) * 12 / 8
+
+
+def test_compress_stats_fused_matches_reference_oracle():
+    key = jax.random.PRNGKey(0)
+    sas = jax.nn.softmax(jax.random.normal(key, (3, 2, 64, 64)) * 4.0, -1)
+    fast = pssa.compress_stats(sas, patch=16)
+    ref = pssa.compress_stats_reference(sas, patch=16)
+    for f, r in zip(fast, ref):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(r))
+
+
+def test_compress_stats_counters_accumulate_in_integers():
+    sas = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32)) * 4.0, -1)
+    st = pssa.compress_stats(sas, patch=16)
+    # counters are whole numbers (integer accumulation, float storage)
+    assert float(st.nnz) == int(float(st.nnz))
+    assert float(st.bitmap_ones_xor) == int(float(st.bitmap_ones_xor))
+    exact = pssa.exact_byte_counts(int(float(st.nnz)),
+                                   int(float(st.bitmap_ones_xor)),
+                                   lead=2, tq=32, tk=32, patch=16)
+    assert float(st.bytes_pssa_total) == pytest.approx(
+        exact["bytes_values"] + exact["bytes_index_pssa"], rel=1e-6)

@@ -1,7 +1,8 @@
 """Hypothesis property tests on the energy-ledger invariants."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import energy
 from repro.core.tips import workload_low_precision_fraction
