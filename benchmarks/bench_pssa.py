@@ -23,10 +23,14 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
 from benchmarks.synthetic_sas import synthetic_sas
 from repro.core import pssa
 from repro.diffusion import ledger as L
 from repro.diffusion.unet import BK_SDM_TINY
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 
 POINTS = [(64, 8), (32, 8), (16, 8)]       # (resolution, heads)
 TARGET_DENSITY_64 = 1.0 / 3.0
@@ -47,17 +51,30 @@ def calibrate_sharpness(key, target=TARGET_DENSITY_64, lo=0.2, hi=3.0,
     return 0.5 * (lo + hi)
 
 
-def measure(sharpness: float, seed: int = 0):
-    """-> (per-res stats, aggregate bytes per scheme with dense-bypass)."""
+def measure(sharpness: float, seed: int = 0,
+            policy: KernelPolicy = KernelPolicy.fused()):
+    """-> (per-res stats, aggregate bytes per scheme with dense-bypass).
+
+    The PSXU payload — the packed XOR bitmap a DMA engine would actually
+    move — is generated through ``dispatch.patch_bitmap`` per the kernel
+    policy, and its popcounts are cross-checked against the byte-accounting
+    counters (``payload_counter_parity``): the payload and the ledger must
+    describe the same bits.
+    """
     rows = {}
     agg = {"baseline": 0.0, "rle": 0.0, "csr": 0.0, "pssa": 0.0,
            "idx_rle": 0.0, "idx_csr": 0.0, "idx_pssa": 0.0}
+    payload_parity = True
     for res, heads in POINTS:
         key = jax.random.fold_in(jax.random.PRNGKey(seed), res)
         sas = synthetic_sas(key, res, heads=heads, sharpness=sharpness)
         patch = BK_SDM_TINY.patch_size(res)
         st = pssa.compress_stats(sas, patch=patch)
         rows[res] = st
+        _, counts = dispatch.patch_bitmap(policy, sas, patch,
+                                          pssa.DEFAULT_THRESHOLD)
+        payload_parity &= (int(jnp.sum(counts))
+                           == int(float(st.bitmap_ones_xor)))
         dense = float(st.bytes_baseline)
         agg["baseline"] += dense
         agg["rle"] += min(dense, float(st.bytes_values + st.bytes_index_rle))
@@ -67,6 +84,7 @@ def measure(sharpness: float, seed: int = 0):
         agg["idx_rle"] += float(st.bytes_index_rle)
         agg["idx_csr"] += float(st.bytes_index_csr_global)
         agg["idx_pssa"] += float(st.bytes_index_pssa)
+    agg["payload_counter_parity"] = payload_parity
     return rows, agg
 
 
@@ -83,6 +101,7 @@ def run() -> dict:
 
     return {
         "calibrated_sharpness": sharp,
+        "payload_counter_parity": agg["payload_counter_parity"],
         "density_by_res": {res: float(st.nnz / st.total)
                            for res, st in rows.items()},
         "sas_ratio_by_res": sas_ratio,

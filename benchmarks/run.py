@@ -6,6 +6,8 @@
   bench_dbsc          — Fig. 9(c): DBSC FFN energy efficiency + exactness
   bench_energy_iter   — Table I:  28.6 / 213.3 mJ per iteration
   bench_engine        — jitted scan/fused-CFG engine vs seed Python loop
+  bench_fused_attention — Pallas fused-attention path vs materializing
+                        reference: peak temp bytes, wall, imgs/s, parity
   roofline            — §Roofline table from the dry-run records
 
 Each section prints measured vs paper numbers; exit code 1 if any section
@@ -41,7 +43,8 @@ def _section(name, fn):
 
 def main() -> None:
     from benchmarks import (bench_dbsc, bench_ema_breakdown,
-                            bench_energy_iter, bench_engine, bench_pssa,
+                            bench_energy_iter, bench_engine,
+                            bench_fused_attention, bench_pssa,
                             bench_tips, roofline)
 
     ok = True
@@ -51,6 +54,7 @@ def main() -> None:
     ok &= _section("dbsc", bench_dbsc.run)
     ok &= _section("energy_iter", bench_energy_iter.run)
     ok &= _section("engine", bench_engine.run)
+    ok &= _section("fused_attention", bench_fused_attention.run)
 
     def _roof():
         rows = roofline.run()

@@ -34,16 +34,26 @@ def main():
     ap.add_argument("--python-loop", action="store_true",
                     help="seed-style per-step dispatch instead of the "
                          "jitted engine")
+    ap.add_argument("--kernels", default="reference",
+                    help="kernel policy: 'reference', 'fused', or per-op "
+                         "overrides (see repro.kernels.dispatch)")
     args = ap.parse_args()
 
+    from repro.kernels.dispatch import KernelPolicy
     cfg = PipelineConfig.smoke()
-    cfg = dataclasses.replace(cfg, ddim=DDIMConfig(
-        num_inference_steps=args.steps,
-        guidance_scale=args.guidance,
-        tips_active_iters=max(1, args.steps * 20 // 25)))
+    cfg = dataclasses.replace(
+        cfg,
+        unet=dataclasses.replace(cfg.unet,
+                                 kernel_policy=KernelPolicy.parse(
+                                     args.kernels)),
+        ddim=DDIMConfig(
+            num_inference_steps=args.steps,
+            guidance_scale=args.guidance,
+            tips_active_iters=max(1, args.steps * 20 // 25)))
     print(f"pipeline: latent {cfg.unet.latent_size}^2, "
           f"{args.steps} DDIM steps, guidance {args.guidance}, "
-          f"{'python loop' if args.python_loop else 'jitted engine'}")
+          f"{'python loop' if args.python_loop else 'jitted engine'}, "
+          f"kernels {args.kernels}")
 
     # "a toy raccoon standing on a pile of broccoli" — tokens are synthetic
     # (no tokenizer offline); semantics don't affect the energy evaluation.

@@ -5,11 +5,14 @@ the processor was evaluated on (MS-COCO, 25 DDIM iterations).  Exposed here
 so ``--arch bk-sdm`` selects the paper-faithful pipeline in examples and
 benchmarks.  See ``repro.diffusion`` for the model itself.
 """
+import dataclasses
+
 from repro.diffusion.pipeline import PipelineConfig
 from repro.diffusion.sampler import DDIMConfig
 from repro.diffusion.text_encoder import TextEncoderConfig
 from repro.diffusion.unet import UNetConfig
 from repro.diffusion.vae import VAEConfig
+from repro.kernels.dispatch import KernelPolicy
 
 CONFIG = PipelineConfig(
     unet=UNetConfig(),            # BK-SDM-Tiny geometry (full)
@@ -19,3 +22,16 @@ CONFIG = PipelineConfig(
 )
 
 SMOKE = PipelineConfig.smoke()
+
+
+def with_kernel_policy(cfg: PipelineConfig,
+                       policy: KernelPolicy) -> PipelineConfig:
+    """Pipeline config with the UNet hot path routed per ``policy``."""
+    return dataclasses.replace(
+        cfg, unet=dataclasses.replace(cfg.unet, kernel_policy=policy))
+
+
+# Serving path: blocked Pallas attention + PSXU kernel — the SAS never
+# materializes (interpret auto-selected per backend; see kernels.dispatch).
+FUSED = with_kernel_policy(CONFIG, KernelPolicy.fused())
+SMOKE_FUSED = with_kernel_policy(SMOKE, KernelPolicy.fused())

@@ -7,10 +7,15 @@ compression statistics are returned for the EMA ledger.
 ``cross_attention_tips`` — cross-attention that additionally emits the CLS
 attention score per query (CAS) for the IPSU (TIPS spotting).
 
-Both are deliberately materializing the score matrix — that is the paper's
-dataflow (SAS spills to DRAM) and the thing PSSA compresses.  The Pallas
-kernels in ``repro.kernels.pssa_attention`` implement the blocked/fused
-TPU-native version used by the performance path.
+``self_attention_pssa_fused`` — the same contract through the blocked
+Pallas kernel (``repro.kernels.pssa_attention``): the score matrix never
+exists in memory, and the PSSA byte accounting is assembled from integer
+counters the kernel accumulates per query row.  Selection between the two
+lives in ``repro.kernels.dispatch`` (``KernelPolicy``).
+
+``self_attention_pssa`` is deliberately materializing — that is the paper's
+*baseline* dataflow (SAS spills to DRAM) and the thing PSSA compresses; it
+stays the stats oracle the fused path is tested against.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pssa, tips
+from repro.kernels.pssa_attention.ops import pssa_attention
 
 
 class SelfAttnOut(NamedTuple):
@@ -53,6 +59,39 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
                 else pssa.compress_stats)
     stats = compress(probs_stat, patch, threshold)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs_used, v)
+    return SelfAttnOut(out=out, stats=stats)
+
+
+def self_attention_pssa_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                              patch: int,
+                              threshold: float = pssa.DEFAULT_THRESHOLD,
+                              stats_rows: int | None = None,
+                              interpret: bool | None = None,
+                              bq: int = 128, bk: int = 128) -> SelfAttnOut:
+    """``self_attention_pssa`` through the blocked Pallas kernel.
+
+    The (B, H, T, T) score matrix is never materialized: the kernel streams
+    K blocks (two-pass online softmax), prunes at ``threshold`` before the
+    value matmul, and accumulates the two PSSA counters — surviving-score
+    count and patch-XOR bitmap popcount — per query row.  ``PSSAStats`` is
+    assembled from those integer counters via ``pssa.stats_from_counters``,
+    sharing the byte arithmetic with the materializing reference (equal
+    counters => bit-identical stats).  ``stats_rows`` restricts accounting
+    to the first N batch rows exactly as the reference does (row slices
+    commute with the per-row counters).  Always prunes; callers wanting
+    ``prune_scores=False`` or the seed stats oracle use the reference path
+    (the dispatch layer downgrades those combinations).
+    """
+    b, h, t, d = q.shape
+    out, nnz_rows, xor_rows = pssa_attention(
+        q, k, v, threshold, patch=patch, interpret=interpret, bq=bq, bk=bk)
+    rows = b if stats_rows is None else stats_rows
+    x64 = bool(jax.config.read("jax_enable_x64"))
+    int_dtype = jnp.int64 if x64 else jnp.int32
+    nnz = jnp.sum(nnz_rows[:rows], dtype=int_dtype)
+    ones_xor = jnp.sum(xor_rows[:rows], dtype=int_dtype)
+    stats = pssa.stats_from_counters(nnz, ones_xor, lead=rows * h,
+                                     tq=t, tk=t, patch=patch)
     return SelfAttnOut(out=out, stats=stats)
 
 

@@ -228,6 +228,21 @@ def _assemble_stats(nnz, ones_xor, shape, patch: int,
     )
 
 
+def stats_from_counters(nnz: jax.Array, ones_xor: jax.Array,
+                        lead: int, tq: int, tk: int, patch: int,
+                        value_bits: int = 12) -> PSSAStats:
+    """``PSSAStats`` from already-accumulated integer counters.
+
+    The fused kernel path (``kernels.pssa_attention`` with ``patch`` set)
+    counts surviving scores and XOR-bitmap ones *inside* the blocked
+    attention kernel — the SAS never exists in memory — and hands the two
+    scalars here.  Byte assembly is shared with :func:`compress_stats`, so
+    equal counters give bit-identical stats.  ``lead`` folds every leading
+    axis (batch rows x heads) exactly as ``compress_stats`` folds shape.
+    """
+    return _assemble_stats(nnz, ones_xor, (lead, tq, tk), patch, value_bits)
+
+
 def compress_decompress(sas: jax.Array, patch: int,
                         threshold: float = DEFAULT_THRESHOLD) -> jax.Array:
     """Losslessness check: prune -> bitmap -> XOR -> un-XOR -> re-mask.

@@ -46,9 +46,18 @@ class DiffusionEngine:
     ``cfg`` is a ``repro.diffusion.pipeline.PipelineConfig``.  Use
     ``generate(prompt_tokens, key, uncond_tokens=...)``; pass
     ``uncond_tokens`` iff ``cfg.ddim.guidance_scale != 1.0``.
+    ``kernel_policy`` (a ``repro.kernels.dispatch.KernelPolicy``) overrides
+    the UNet's per-op kernel routing — e.g. ``KernelPolicy.fused()`` runs
+    self-attention through the blocked Pallas kernel so the score matrix
+    never materializes; stats stay bit-identical to the reference policy.
     """
 
-    def __init__(self, cfg, key=None):
+    def __init__(self, cfg, key=None, kernel_policy=None):
+        if kernel_policy is not None:
+            # route the UNet hot path per the policy (kernels.dispatch)
+            cfg = dataclasses.replace(
+                cfg, unet=dataclasses.replace(cfg.unet,
+                                              kernel_policy=kernel_policy))
         self.cfg = cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         k1, k2, k3 = jax.random.split(key, 3)

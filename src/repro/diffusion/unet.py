@@ -34,9 +34,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import pssa, tips
-from repro.core.attention import cross_attention_tips, self_attention_pssa
+from repro.core.attention import cross_attention_tips
 from repro.diffusion.stats import UNetStats, attn_layer_order
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,18 +62,30 @@ class UNetConfig:
     pssa: bool = True
     tips: bool = True
     dbsc: bool = True
-    use_dbsc_kernel: bool = False      # route FFN through the Pallas kernel
+    # legacy FFN-only kernel toggle; folded into kernel_policy (ffn="dbsc")
+    # by effective_kernel_policy() — prefer setting kernel_policy directly
+    use_dbsc_kernel: bool = False
     pssa_threshold: float = 1.0 / 8192.0
     tips_threshold: float = 0.05
     # route PSSA accounting through the seed's materializing reference
     # implementation (benchmark baseline / oracle; see core.pssa)
     pssa_stats_reference: bool = False
+    # per-op kernel routing (repro.kernels.dispatch): which implementation
+    # self-attention / FFN / bitmap use, interpret auto-selection, blocks
+    kernel_policy: KernelPolicy = KernelPolicy()
 
     dtype: str = "float32"
 
     def patch_size(self, resolution: int) -> int:
         """PSXU patch width at a given feature-map resolution (16/32/64)."""
         return min(64, max(16, resolution))
+
+    def effective_kernel_policy(self) -> KernelPolicy:
+        """``kernel_policy`` with the legacy ``use_dbsc_kernel`` folded in."""
+        pol = self.kernel_policy
+        if self.use_dbsc_kernel and pol.ffn == "reference":
+            pol = dataclasses.replace(pol, ffn="dbsc")
+        return pol
 
     def smoke(self) -> "UNetConfig":
         """Reduced config that runs a full fwd pass on CPU in seconds."""
@@ -290,8 +303,13 @@ def _merge_heads(x):
 
 
 def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
-                       stats_rows=None, dup_after_self: bool = False):
+                       stats_rows=None, dup_after_self: bool = False,
+                       policy: KernelPolicy | None = None):
     """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult).
+
+    ``policy`` selects the per-op kernel implementation (reference vs
+    Pallas) via ``repro.kernels.dispatch``; None falls back to the config's
+    effective policy.
 
     ``stats_rows`` (static) restricts the returned stats to the first N
     batch rows — the cond half under a fused-CFG batch.
@@ -308,6 +326,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     b, hgt, wid, c = x2d.shape
     res = hgt  # feature-map resolution
     heads = cfg.num_heads
+    if policy is None:
+        policy = cfg.effective_kernel_policy()
 
     h = group_norm(x2d, p["norm_in"]["scale"], p["norm_in"]["bias"],
                    cfg.groups)
@@ -321,12 +341,12 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     k = _attn_heads(hn, p["sa_k"]["w"], heads)
     v = _attn_heads(hn, p["sa_v"]["w"], heads)
     patch = cfg.patch_size(res)
-    sa = self_attention_pssa(q, k, v, patch=patch,
-                             threshold=cfg.pssa_threshold,
-                             prune_scores=cfg.pssa,
-                             stats_rows=None if dup_after_self
-                             else stats_rows,
-                             reference_stats=cfg.pssa_stats_reference)
+    sa = dispatch.self_attention(policy, q, k, v, patch=patch,
+                                 threshold=cfg.pssa_threshold,
+                                 prune_scores=cfg.pssa,
+                                 stats_rows=None if dup_after_self
+                                 else stats_rows,
+                                 reference_stats=cfg.pssa_stats_reference)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
                             p["sa_o"]["w"]) + p["sa_o"]["b"])
 
@@ -355,28 +375,7 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                    jnp.logical_not(tips_active))
     else:
         important = None
-    if cfg.use_dbsc_kernel:
-        # serving path: both FFN matmuls through the DBSC integer datapath
-        # (Pallas bit-slice kernel; interpret=True on CPU)
-        from repro.kernels.bitslice_matmul.ops import bitslice_matmul
-        bt = hn.shape[0] * hn.shape[1]
-        imp_flat = (important.reshape(bt) if important is not None else None)
-        gu = bitslice_matmul(hn.reshape(bt, c), p["ff_geglu"]["w"],
-                             important=imp_flat).reshape(
-            b, hn.shape[1], -1) + p["ff_geglu"]["b"]
-        g, u = jnp.split(gu, 2, axis=-1)
-        mid = jax.nn.gelu(g) * u
-        h = resid + (bitslice_matmul(
-            mid.reshape(bt, mid.shape[-1]), p["ff_out"]["w"]).reshape(
-            b, hn.shape[1], c) + p["ff_out"]["b"])
-    else:
-        if important is not None:
-            hn = tips.apply_precision_mask(hn, important)
-        gu = jnp.einsum("btc,cd->btd", hn, p["ff_geglu"]["w"]) \
-            + p["ff_geglu"]["b"]
-        g, u = jnp.split(gu, 2, axis=-1)
-        h = resid + (jnp.einsum("btd,dc->btc", jax.nn.gelu(g) * u,
-                                p["ff_out"]["w"]) + p["ff_out"]["b"])
+    h = resid + dispatch.ffn_geglu(policy, hn, p, important)
 
     h = jnp.einsum("btc,cd->btd", h, p["proj_out"]["w"]) + p["proj_out"]["b"]
     return x2d + h.reshape(b, hgt, wid, c), sa.stats, ca.tips_result
@@ -417,6 +416,7 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     pssa_stats: list = []
     tips_stats: list = []
     tips_active = jnp.asarray(tips_active)
+    policy = cfg.effective_kernel_policy()
     needs_dup = cfg_dup
     if cfg_dup:
         assert context.shape[0] == 2 * latents.shape[0], \
@@ -431,7 +431,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     def attn_block(h, bp):
         nonlocal temb, needs_dup
         h, sa, ca = _transformer_block(h, bp, context, cfg, tips_active,
-                                       stats_rows, dup_after_self=needs_dup)
+                                       stats_rows, dup_after_self=needs_dup,
+                                       policy=policy)
         if needs_dup:
             # downstream resnets now see [cond | uncond] rows
             temb = jnp.concatenate([temb, temb], axis=0)

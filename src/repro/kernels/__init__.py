@@ -1,6 +1,12 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
 #   bitslice_matmul — DBSC dual-mode bit-slice core (§IV-B)
-#   pssa_attention  — blocked self-attention with threshold score pruning (§III)
+#   pssa_attention  — blocked self-attention with threshold score pruning
+#                     + kernel-side PSSA byte counters (§III)
 #   patch_bitmap    — PSXU bitmap generate + patch-XOR + popcount (§III-B)
 # Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-# wrapper) and ref.py (pure-jnp oracle).  Validated with interpret=True.
+# wrapper with pad-and-slice block handling) and ref.py (pure-jnp oracle).
+#
+# dispatch.py — the KernelPolicy dispatch layer: one policy object routes
+#   every hot-path op to its reference or Pallas implementation (DESIGN.md
+#   §5).  runtime.py — shared interpret auto-selection (interpret only
+#   where Pallas has no real lowering) and padding helpers.

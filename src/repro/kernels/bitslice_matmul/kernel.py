@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(x_hi_ref, x_lo_ref, w_ref, prec_ref, o_ref, *, bk: int):
     kdim = x_hi_ref.shape[-1]
@@ -59,7 +61,7 @@ def bitslice_matmul_kernel(x_hi: jax.Array, x_lo: jax.Array, w: jax.Array,
                            prec: jax.Array,
                            bm: int = 128, bn: int = 128, bk: int = 128,
                            dataflow: str = "weight_stationary",
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """int32 bit-planes (M,K), weights (K,N), precision flags (M,1) -> (M,N)."""
     m, kdim = x_hi.shape
     _, n = w.shape
@@ -93,5 +95,5 @@ def bitslice_matmul_kernel(x_hi: jax.Array, x_lo: jax.Array, w: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), omap),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x_hi, x_lo, w, prec)

@@ -32,7 +32,7 @@ def bitslice_matmul(x: jax.Array, w: jax.Array,
                     important: jax.Array | None = None,
                     dataflow: str = "weight_stationary",
                     use_kernel: bool = True,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """``x (M,K) @ w (K,N)`` through the DBSC integer datapath.
 
     ``important``: bool (M,) TIPS mask; None -> all rows INT12.

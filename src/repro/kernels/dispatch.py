@@ -1,0 +1,239 @@
+"""Kernel dispatch layer: one policy object routes every hot-path op.
+
+The UNet's compute hot spots each exist twice in this repo — a pure-JAX
+reference (materializing, CPU-friendly, the stats oracle) and a blocked
+Pallas kernel (the paper's dataflow: the SAS never leaves on-chip memory,
+the FFN runs the DBSC integer datapath).  ``KernelPolicy`` names which
+implementation each op uses; the dispatch functions below are the single
+call sites the model layers go through, so serving, benchmarks and tests
+select reference vs. fused per-op with one config knob instead of scattered
+``use_*_kernel`` flags and inline imports.
+
+Ops and implementations (``DISPATCH_TABLE``):
+
+  self_attention  reference | fused    PSSA-pruned self-attention + stats
+  ffn             reference | dbsc     GEGLU FFN (TIPS mixed precision)
+  bitmap          reference | kernel   PSXU bitmap / patch-XOR / popcount
+
+``interpret=None`` (the default) resolves per backend at trace time —
+interpret mode only where Pallas has no real lowering (CPU) — so the same
+policy object is TPU-real and CPU-testable.  The stats-parity contract
+(DESIGN.md §5): for any policy, reported ``PSSAStats``/TIPS ratios are
+bit-identical to the reference path, because every implementation reduces
+to the same integer counters before the shared byte arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention, tips
+from repro.kernels.bitslice_matmul.ops import bitslice_matmul
+from repro.kernels.patch_bitmap.ops import patch_bitmap as _patch_bitmap_op
+from repro.kernels.runtime import resolve_interpret
+
+_CHOICES = {
+    "self_attention": ("reference", "fused"),
+    "ffn": ("reference", "dbsc"),
+    "bitmap": ("reference", "kernel"),
+}
+_PRESETS = ("reference", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Which implementation each hot-path op dispatches to.
+
+    Frozen + hashable so it can live inside ``UNetConfig`` and flow through
+    jit closures.  ``interpret=None`` auto-selects per backend; block sizes
+    are forwarded to the Pallas wrappers (which pad-and-slice, so any
+    geometry is legal).
+    """
+    self_attention: str = "reference"
+    ffn: str = "reference"
+    bitmap: str = "reference"
+    interpret: bool | None = None
+    attn_block_q: int = 128
+    attn_block_k: int = 128
+    bitmap_block_rows: int = 64
+
+    def __post_init__(self):
+        for op, allowed in _CHOICES.items():
+            val = getattr(self, op)
+            if val not in allowed:
+                raise ValueError(
+                    f"KernelPolicy.{op}={val!r}: expected one of {allowed}")
+
+    # -- presets ---------------------------------------------------------
+    @classmethod
+    def reference(cls) -> "KernelPolicy":
+        """Pure-JAX everywhere (the seed's materializing path)."""
+        return cls()
+
+    @classmethod
+    def fused(cls) -> "KernelPolicy":
+        """Blocked Pallas attention + PSXU kernel; the SAS never hits HBM.
+
+        The FFN stays on the float reference — the DBSC integer datapath is
+        a *precision* feature (INT12/INT6), selected per-op via ``ffn``
+        (or the legacy ``UNetConfig.use_dbsc_kernel``), not a prerequisite
+        of the fused memory path.
+        """
+        return cls(self_attention="fused", bitmap="kernel")
+
+    @classmethod
+    def parse(cls, spec: str) -> "KernelPolicy":
+        """Build a policy from a CLI spec.
+
+        ``spec`` is a preset name (``reference`` | ``fused``) or a
+        comma-separated list of ``op=impl`` / ``interpret={auto,true,false}``
+        overrides applied on top of the reference preset, e.g.
+        ``"self_attention=fused,ffn=dbsc"``.
+        """
+        spec = spec.strip()
+        if spec in _PRESETS:
+            return getattr(cls, spec)()
+        fields = {}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            if "=" not in item:
+                raise ValueError(
+                    f"kernel policy spec {item!r}: expected op=impl or a "
+                    f"preset in {_PRESETS}")
+            op, impl = (s.strip() for s in item.split("=", 1))
+            if op == "interpret":
+                try:
+                    fields[op] = {"auto": None, "true": True,
+                                  "false": False}[impl.lower()]
+                except KeyError:
+                    raise ValueError(
+                        f"kernel policy spec: interpret={impl!r} (expected "
+                        f"auto, true or false)") from None
+            elif op in _CHOICES:
+                fields[op] = impl
+            else:
+                raise ValueError(f"kernel policy spec: unknown op {op!r} "
+                                 f"(expected {tuple(_CHOICES)})")
+        return cls(**fields)
+
+    # -- views -----------------------------------------------------------
+    def resolve_interpret(self) -> bool:
+        return resolve_interpret(self.interpret)
+
+    def describe(self) -> dict:
+        """JSON-friendly view for serving metrics / benchmark records."""
+        return {**{op: getattr(self, op) for op in _CHOICES},
+                "interpret": ("auto" if self.interpret is None
+                              else self.interpret),
+                "interpret_resolved": self.resolve_interpret(),
+                "backend": jax.default_backend()}
+
+
+# ----------------------------------------------------------------------------
+# Dispatch targets
+# ----------------------------------------------------------------------------
+def _ffn_reference(policy: KernelPolicy, hn, p, important):
+    """GEGLU FFN, float matmuls; TIPS rows fake-quantized on entry."""
+    if important is not None:
+        hn = tips.apply_precision_mask(hn, important)
+    gu = jnp.einsum("btc,cd->btd", hn, p["ff_geglu"]["w"]) \
+        + p["ff_geglu"]["b"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    return jnp.einsum("btd,dc->btc", jax.nn.gelu(g) * u,
+                      p["ff_out"]["w"]) + p["ff_out"]["b"]
+
+
+def _ffn_dbsc(policy: KernelPolicy, hn, p, important):
+    """Both FFN matmuls through the DBSC bit-slice integer datapath."""
+    b, t, c = hn.shape
+    bt = b * t
+    imp_flat = important.reshape(bt) if important is not None else None
+    gu = bitslice_matmul(hn.reshape(bt, c), p["ff_geglu"]["w"],
+                         important=imp_flat,
+                         interpret=policy.interpret).reshape(b, t, -1) \
+        + p["ff_geglu"]["b"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    mid = jax.nn.gelu(g) * u
+    return bitslice_matmul(mid.reshape(bt, mid.shape[-1]), p["ff_out"]["w"],
+                           interpret=policy.interpret).reshape(b, t, c) \
+        + p["ff_out"]["b"]
+
+
+DISPATCH_TABLE = {
+    "self_attention": {
+        "reference": attention.self_attention_pssa,
+        "fused": attention.self_attention_pssa_fused,
+    },
+    "ffn": {
+        "reference": _ffn_reference,
+        "dbsc": _ffn_dbsc,
+    },
+    "bitmap": {
+        "reference": functools.partial(_patch_bitmap_op, use_kernel=False),
+        "kernel": _patch_bitmap_op,
+    },
+}
+
+
+# ----------------------------------------------------------------------------
+# Dispatch entry points (the call sites model layers use)
+# ----------------------------------------------------------------------------
+def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
+                   threshold: float, prune_scores: bool = True,
+                   stats_rows: int | None = None,
+                   reference_stats: bool = False) -> attention.SelfAttnOut:
+    """PSSA self-attention via the policy's implementation.
+
+    Two combinations force the materializing reference regardless of
+    policy: ``reference_stats`` (the seed's stats oracle, definitionally
+    materializing) and ``prune_scores=False`` (the paper-baseline ablation
+    keeps sub-threshold scores in the value matmul; the fused kernel always
+    prunes).
+    """
+    impl = policy.self_attention
+    if impl == "fused" and (reference_stats or not prune_scores):
+        impl = "reference"
+    if impl == "fused":
+        return attention.self_attention_pssa_fused(
+            q, k, v, patch=patch, threshold=threshold,
+            stats_rows=stats_rows, interpret=policy.interpret,
+            bq=policy.attn_block_q, bk=policy.attn_block_k)
+    return attention.self_attention_pssa(
+        q, k, v, patch=patch, threshold=threshold,
+        prune_scores=prune_scores, stats_rows=stats_rows,
+        reference_stats=reference_stats)
+
+
+def ffn_geglu(policy: KernelPolicy, hn, p, important):
+    """(B, T, C) normed hidden -> (B, T, C) FFN output (pre-residual).
+
+    ``p`` carries ``ff_geglu``/``ff_out`` weights; ``important`` is the
+    TIPS row mask (None -> all rows full precision).
+    """
+    return DISPATCH_TABLE["ffn"][policy.ffn](policy, hn, p, important)
+
+
+def patch_bitmap(policy: KernelPolicy, sas, patch: int, threshold: float):
+    """PSXU payload op: packed XOR bitmap + per-patch popcounts."""
+    if policy.bitmap == "kernel":
+        return _patch_bitmap_op(sas, patch, threshold, use_kernel=True,
+                                interpret=policy.interpret,
+                                br=policy.bitmap_block_rows)
+    return _patch_bitmap_op(sas, patch, threshold, use_kernel=False)
+
+
+def support_matrix() -> list:
+    """op x impl support rows (README kernel-support matrix source)."""
+    rows = []
+    for op, impls in DISPATCH_TABLE.items():
+        for impl in impls:
+            pallas = impl not in ("reference",)
+            rows.append({
+                "op": op, "impl": impl,
+                "pallas": pallas,
+                "cpu": "interpret" if pallas else "native",
+                "tpu": "compiled" if pallas else "native (XLA)",
+            })
+    return rows

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(sas_ref, packed_ref, counts_ref, *, patch: int, threshold: float):
     s = sas_ref[...]                               # (br, Tk)
@@ -47,7 +49,7 @@ def _kernel(sas_ref, packed_ref, counts_ref, *, patch: int, threshold: float):
 @functools.partial(jax.jit, static_argnames=("patch", "threshold", "br",
                                              "interpret"))
 def patch_bitmap_kernel(sas: jax.Array, patch: int, threshold: float,
-                        br: int = 64, interpret: bool = True):
+                        br: int = 64, interpret: bool | None = None):
     """(R, Tk) pruned-SAS slab -> (packed (R, Tk/32) uint32, counts (R, Tk/patch))."""
     rows, tk = sas.shape
     assert tk % patch == 0 and tk % 32 == 0, (tk, patch)
@@ -65,5 +67,5 @@ def patch_bitmap_kernel(sas: jax.Array, patch: int, threshold: float,
             jax.ShapeDtypeStruct((rows, tk // 32), jnp.uint32),
             jax.ShapeDtypeStruct((rows, tk // patch), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(sas)

@@ -1,4 +1,10 @@
-"""Public op: PSXU bitmap/XOR/popcount over arbitrary leading axes."""
+"""Public op: PSXU bitmap/XOR/popcount over arbitrary leading axes.
+
+Row blocking pads the folded row count up to the block multiple and slices
+the outputs back (padded rows are all-zero bitmaps and touch nothing else —
+the op is row-independent), replacing the seed's degenerate halving
+fallback.  ``interpret=None`` auto-selects interpret mode from the backend.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,22 +14,25 @@ import jax.numpy as jnp
 
 from repro.kernels.patch_bitmap.kernel import patch_bitmap_kernel
 from repro.kernels.patch_bitmap.ref import patch_bitmap_ref
+from repro.kernels.runtime import pad_axis_to
 
 
 @functools.partial(jax.jit, static_argnames=("patch", "threshold",
-                                             "use_kernel", "interpret"))
+                                             "use_kernel", "interpret",
+                                             "br"))
 def patch_bitmap(sas: jax.Array, patch: int, threshold: float,
-                 use_kernel: bool = True, interpret: bool = True):
+                 use_kernel: bool = True, interpret: bool | None = None,
+                 br: int = 64):
     """(..., Tq, Tk) SAS -> packed XOR bitmap (..., Tq, Tk/32) + popcounts."""
     *lead, tq, tk = sas.shape
     flat = sas.reshape(-1, tk)
     rows = flat.shape[0]
     if use_kernel:
-        br = 64
-        while rows % br:
-            br //= 2
-        packed, counts = patch_bitmap_kernel(flat, patch, threshold, br=br,
-                                             interpret=interpret)
+        blk = min(br, rows)
+        packed, counts = patch_bitmap_kernel(
+            pad_axis_to(flat, blk, 0), patch, threshold, br=blk,
+            interpret=interpret)
+        packed, counts = packed[:rows], counts[:rows]
     else:
         packed, counts = patch_bitmap_ref(flat, patch, threshold)
     return (packed.reshape(*lead, tq, tk // 32),

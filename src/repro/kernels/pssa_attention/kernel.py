@@ -3,15 +3,26 @@
 Blocked pixel-wise self-attention whose post-softmax scores are pruned at a
 fixed threshold before the value matmul — the on-chip half of PSSA (the SAS
 the attention core would spill to DRAM is exactly the pruned matrix that the
-PSXU compresses).  The kernel additionally emits the per-query-block count of
-surviving scores, which feeds the EMA ledger.
+PSXU compresses).  The kernel additionally emits the per-query count of
+surviving scores and (optionally) the per-query popcount of the patch-XOR'd
+sparsity bitmap — together the exact integer counters the PSSA byte
+accounting needs, so the fused serving path never materializes the SAS.
 
 Pruning on normalized scores inside a *blocked* softmax needs the final row
 max/sum, so the kernel is two-pass (FlashAttention-2 style):
 
   pass 1: stream K blocks, maintain running (m, l) per query row;
   pass 2: stream K blocks again, p = exp(s - m)/l, zero p < tau, accumulate
-          p @ V and popcount(p >= tau).
+          p @ V, popcount(p >= tau), and — when ``patch`` is set — the
+          PSXU delta-bitmap popcount.  The XOR between horizontally-adjacent
+          bitmap patches crosses K-block boundaries, so the last patch of
+          each block rides the loop carry into the next iteration; the first
+          patch overall XORs against zeros, i.e. is counted verbatim,
+          matching ``core.pssa.patch_xor``.
+
+``kv_len`` supports block-padded operands: key columns >= kv_len are masked
+to -inf before the softmax statistics and excluded from every counter, so
+padding to the block multiple (see ops.py) is exact.
 
 Grid: (batch*heads, Tq/bq); the full K/V stripe of one (batch, head) lives
 in VMEM (T x d x 2 operands — <= 4 MB for T=4096, d=64, fp32; half that in
@@ -25,20 +36,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, nnz_ref, *, bk: int, sm_scale: float,
-            threshold: float):
+def _kernel(q_ref, k_ref, v_ref, o_ref, nnz_ref, *rest, bk: int,
+            sm_scale: float, threshold: float, kv_len: int,
+            patch: int | None):
+    xor_ref = rest[0] if rest else None
     q = q_ref[0] * sm_scale                       # (bq, d)
     kdim = k_ref.shape[1]
     nk = kdim // bk
     bq = q.shape[0]
+    padded = kv_len < kdim                        # static: mask the tail
+
+    def kv_valid(s):                              # (1, bk) bool, col < kv_len
+        col = s * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        return col < kv_len
 
     def pass1(s, carry):
         m_prev, l_prev = carry
         kblk = k_ref[0, pl.dslice(s * bk, bk), :]           # (bk, d)
         scores = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32)
+        if padded:
+            scores = jnp.where(kv_valid(s), scores, NEG_INF)
         m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
         l_cur = l_prev * jnp.exp(m_prev - m_cur) + jnp.sum(
             jnp.exp(scores - m_cur[:, None]), axis=-1)
@@ -50,52 +72,98 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, nnz_ref, *, bk: int, sm_scale: float,
     l = jnp.maximum(l, 1e-30)
 
     def pass2(s, carry):
-        acc, nnz = carry
+        if patch is None:
+            acc, nnz = carry
+        else:
+            acc, nnz, xor_cnt, prev = carry
         kblk = k_ref[0, pl.dslice(s * bk, bk), :]
         vblk = v_ref[0, pl.dslice(s * bk, bk), :]
         scores = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32)
+        if padded:
+            scores = jnp.where(kv_valid(s), scores, NEG_INF)
         p = jnp.exp(scores - m[:, None]) / l[:, None]
         keep = p >= threshold
+        if padded:                     # threshold == 0 keeps p == 0 columns
+            keep = jnp.logical_and(keep, kv_valid(s))
         p = jnp.where(keep, p, 0.0)                # PSSA step 1: prune
         acc = acc + jnp.dot(p, vblk, preferred_element_type=jnp.float32)
         nnz = nnz + jnp.sum(keep.astype(jnp.int32), axis=-1)
-        return acc, nnz
+        if patch is None:
+            return acc, nnz
+        # PSXU accounting: XOR each bitmap patch against its left neighbour
+        # (carried across blocks); patches past kv_len are padding.
+        npb = bk // patch
+        kb = keep.reshape(bq, npb, patch)
+        shifted = jnp.concatenate([prev[:, None, :], kb[:, :-1, :]], axis=1)
+        delta = jnp.logical_xor(kb, shifted)
+        if padded:
+            gidx = s * npb + jax.lax.broadcasted_iota(
+                jnp.int32, (1, npb, 1), 1)
+            delta = jnp.logical_and(delta, gidx < kv_len // patch)
+        xor_cnt = xor_cnt + jnp.sum(delta.astype(jnp.int32), axis=(1, 2))
+        return acc, nnz, xor_cnt, kb[:, -1, :]
 
     acc0 = jnp.zeros_like(o_ref[0])
     nnz0 = jnp.zeros((bq,), jnp.int32)
-    acc, nnz = jax.lax.fori_loop(0, nk, pass2, (acc0, nnz0))
+    if patch is None:
+        acc, nnz = jax.lax.fori_loop(0, nk, pass2, (acc0, nnz0))
+    else:
+        prev0 = jnp.zeros((bq, patch), jnp.bool_)
+        acc, nnz, xor_cnt, _ = jax.lax.fori_loop(
+            0, nk, pass2, (acc0, nnz0, jnp.zeros((bq,), jnp.int32), prev0))
+        xor_ref[0] = xor_cnt
     o_ref[0] = acc
     nnz_ref[0] = nnz
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "threshold",
-                                             "interpret"))
+                                             "interpret", "kv_len", "patch"))
 def pssa_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                           threshold: float,
                           bq: int = 128, bk: int = 128,
-                          interpret: bool = True):
-    """(BH, T, d) q/k/v -> ((BH, T, d) out, (BH, T) surviving-score counts)."""
-    bh, t, d = q.shape
-    assert t % bq == 0 and t % bk == 0, (t, bq, bk)
+                          interpret: bool | None = None,
+                          kv_len: int | None = None,
+                          patch: int | None = None):
+    """(BH, Tq, d) q x (BH, Tk, d) k/v -> (out, nnz[, xor_ones]) per query.
+
+    ``kv_len``: true key count when Tk is block-padded (default: Tk).
+    ``patch``: PSXU patch width; when set, a third (BH, Tq) int32 output
+    carries the per-query patch-XOR bitmap popcount (``kv_len`` and ``bk``
+    must be patch multiples).  ``interpret=None`` auto-selects from the
+    backend (interpret only where Pallas has no real lowering).
+    """
+    bh, tq, d = q.shape
+    tk = k.shape[1]
+    kv_len = tk if kv_len is None else kv_len
+    assert tq % bq == 0 and tk % bk == 0, (tq, tk, bq, bk)
+    assert 0 < kv_len <= tk, (kv_len, tk)
+    if patch is not None:
+        assert bk % patch == 0 and kv_len % patch == 0, (bk, kv_len, patch)
     sm_scale = 1.0 / (d ** 0.5)
 
-    out, nnz = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, tq, d), jnp.float32),
+        jax.ShapeDtypeStruct((bh, tq), jnp.int32),
+    ]
+    if patch is not None:
+        out_specs.append(pl.BlockSpec((1, bq), lambda b, i: (b, i)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, tq), jnp.int32))
+
+    res = pl.pallas_call(
         functools.partial(_kernel, bk=bk, sm_scale=sm_scale,
-                          threshold=threshold),
-        grid=(bh, t // bq),
+                          threshold=threshold, kv_len=kv_len, patch=patch),
+        grid=(bh, tq // bq),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, tk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, tk, d), lambda b, i: (b, 0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
-            jax.ShapeDtypeStruct((bh, t), jnp.int32),
-        ],
-        interpret=interpret,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
-    return out, nnz
+    return tuple(res)

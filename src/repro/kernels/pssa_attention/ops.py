@@ -1,4 +1,17 @@
-"""Public op: PSSA attention over (B, H, T, d) with head folding + padding."""
+"""Public op: PSSA attention over (B, H, T, d) with head folding + padding.
+
+Block handling: instead of the seed's degenerate fallback (halving the block
+until it divides T — which collapses to 1-wide blocks for non-power-of-two
+T), operands are zero-padded up to the block multiple and the outputs sliced
+back; the kernel masks padded key columns out of the softmax statistics and
+every counter (``kv_len``), so padding is exact.
+
+``patch`` switches on the fused PSSA accounting: a third (B, H, T) int32
+output with the per-query patch-XOR bitmap popcount, accumulated inside the
+kernel — the SAS never exists in memory.  The key block is rounded down to a
+patch multiple (and floored at ``patch``) so the XOR carry stays
+block-aligned; ``patch`` must divide T.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,25 +20,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.pssa_attention.kernel import pssa_attention_kernel
-from repro.kernels.pssa_attention.ref import pssa_attention_ref
+from repro.kernels.pssa_attention.ref import (pssa_attention_ref,
+                                              pssa_attention_stats_ref)
+from repro.kernels.runtime import pad_axis_to
 
 
-@functools.partial(jax.jit, static_argnames=("threshold", "use_kernel",
-                                             "interpret", "bq", "bk"))
+@functools.partial(jax.jit, static_argnames=("threshold", "patch",
+                                             "use_kernel", "interpret",
+                                             "bq", "bk"))
 def pssa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    threshold: float,
-                   use_kernel: bool = True, interpret: bool = True,
+                   patch: int | None = None,
+                   use_kernel: bool = True, interpret: bool | None = None,
                    bq: int = 128, bk: int = 128):
-    """(B, H, T, d) q/k/v -> ((B, H, T, d) out, (B, H, T) nnz counts)."""
+    """(B, H, T, d) q/k/v -> ((B, H, T, d) out, (B, H, T) nnz counts).
+
+    With ``patch`` set, returns a third (B, H, T) array of per-query
+    patch-XOR bitmap popcounts (see ``core.pssa``).  ``interpret=None``
+    auto-selects interpret mode from the backend.
+    """
     b, h, t, d = q.shape
+    if patch is not None:
+        assert t % patch == 0, (t, patch)
     fold = lambda x: x.reshape(b * h, t, x.shape[-1])
     qf, kf, vf = fold(q), fold(k), fold(v)
     if use_kernel:
-        blk = min(bq, t)
-        while t % blk:
-            blk //= 2
-        out, nnz = pssa_attention_kernel(qf, kf, vf, threshold,
-                                         bq=blk, bk=blk, interpret=interpret)
+        blk_q = min(bq, t)
+        blk_k = min(bk, t)
+        if patch is not None:
+            blk_k = max(patch, blk_k - blk_k % patch)
+        res = pssa_attention_kernel(
+            pad_axis_to(qf, blk_q, 1), pad_axis_to(kf, blk_k, 1),
+            pad_axis_to(vf, blk_k, 1), threshold,
+            bq=blk_q, bk=blk_k, interpret=interpret, kv_len=t, patch=patch)
+        res = tuple(x[:, :t] for x in res)          # drop padded query rows
+    elif patch is None:
+        res = pssa_attention_ref(qf, kf, vf, threshold)
     else:
-        out, nnz = pssa_attention_ref(qf, kf, vf, threshold)
-    return out.reshape(b, h, t, d), nnz.reshape(b, h, t)
+        res = pssa_attention_stats_ref(qf, kf, vf, threshold, patch)
+    out, counts = res[0], res[1:]
+    return (out.reshape(b, h, t, d),) + tuple(
+        c.reshape(b, h, t) for c in counts)

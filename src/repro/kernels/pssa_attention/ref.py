@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import pssa
+
 
 def pssa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                        threshold: float):
@@ -16,3 +18,21 @@ def pssa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     out = jnp.einsum("bts,bsd->btd", p, v)
     nnz = jnp.sum(keep.astype(jnp.int32), axis=-1)
     return out, nnz
+
+
+def pssa_attention_stats_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                             threshold: float, patch: int):
+    """(BH, T, d) -> (out, nnz, xor_ones): materializing stats oracle.
+
+    ``xor_ones`` is the per-query popcount of the patch-XOR'd sparsity
+    bitmap (``core.pssa.patch_xor`` over the pruned-score bitmap) — the
+    counter the blocked kernel accumulates without building the SAS.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(float(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    keep = p >= threshold
+    out = jnp.einsum("bts,bsd->btd", jnp.where(keep, p, 0.0), v)
+    nnz = jnp.sum(keep.astype(jnp.int32), axis=-1)
+    xor_ones = jnp.sum(pssa.patch_xor(keep, patch).astype(jnp.int32), axis=-1)
+    return out, nnz, xor_ones

@@ -1,0 +1,49 @@
+"""Shared runtime policy helpers for the Pallas op wrappers.
+
+Two concerns every ``ops.py`` wrapper has in common:
+
+* **interpret selection** — the kernels must run in Pallas interpret mode on
+  CPU (the test/CI container) and compiled on a real accelerator.  The seed
+  wrappers hardcoded ``interpret=True``, which made the "TPU-native" path
+  permanently interpreted.  ``resolve_interpret(None)`` derives the right
+  value from ``jax.default_backend()`` at trace time, so the same call site
+  is TPU-real and CPU-testable.
+* **block padding** — grids need block-divisible extents.  The seed
+  fallback (``while t % blk: blk //= 2``) collapses to degenerate 1-wide
+  blocks for non-power-of-two extents; ``pad_axis_to`` pads the operand up
+  to the block multiple instead (callers slice the result back), matching
+  what ``bitslice_matmul/ops.py`` always did.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode iff the default backend has no real lowering.
+
+    These kernels are written against the TPU lowering (pltpu memory
+    spaces, MXU-shaped blocks), so every other backend — CPU *and* GPU —
+    runs the interpreter; only TPU compiles.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> backend-derived default; explicit values pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def pad_axis_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult`` (no-op if even)."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -28,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -74,7 +76,7 @@ def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, state_out_ref, state_scr,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan_kernel(x, dA, B, C, chunk: int = 128, interpret: bool = True):
+def ssd_scan_kernel(x, dA, B, C, chunk: int = 128, interpret: bool | None = None):
     """Fused SSD over folded heads.
 
     x (BH, T, p) float32 — pre-multiplied by dt;
@@ -105,6 +107,6 @@ def ssd_scan_kernel(x, dA, B, C, chunk: int = 128, interpret: bool = True):
             jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dA, B, C)
     return y, state

@@ -13,7 +13,7 @@ from repro.kernels.ssd_scan.ref import ssd_scan_ref
 @functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
                                              "interpret"))
 def ssd_scan_fused(x, dt, A, B, C, chunk: int = 128,
-                   use_kernel: bool = True, interpret: bool = True):
+                   use_kernel: bool = True, interpret: bool | None = None):
     """Drop-in for models.ssm.ssd_scan (single B/C group).
 
     x (b,t,h,p); dt (b,t,h) post-softplus; A (h,)<0; B,C (b,t,n).

@@ -1,7 +1,8 @@
 """Text-to-image serving front-end over the jitted DiffusionEngine.
 
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
-      --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] [--full]
+      --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
+      [--kernels fused]
 
 Micro-batching: incoming prompts are queued and packed into fixed-size
 micro-batches (padding the tail with repeats), each served by ONE compiled
@@ -12,6 +13,12 @@ the first call every shape is compile-free.
 
 Reports imgs/s, per-iteration wall time, and (with ``--ledger``) the
 full-geometry energy headline driven by the measured stats trajectory.
+
+``--kernels`` selects the per-op kernel routing (``KernelPolicy``):
+``reference`` (materializing pure-JAX), ``fused`` (blocked Pallas
+attention — the SAS never materializes; stats bit-identical), or per-op
+overrides like ``self_attention=fused,ffn=dbsc``.  Interpret mode is
+auto-selected per backend, so the same flag works on CPU and TPU.
 """
 from __future__ import annotations
 
@@ -26,14 +33,19 @@ import jax.numpy as jnp
 from repro.diffusion.engine import DiffusionEngine
 from repro.diffusion.pipeline import PipelineConfig, energy_report
 from repro.diffusion.sampler import DDIMConfig
+from repro.kernels.dispatch import KernelPolicy
 
 
 def make_config(args) -> PipelineConfig:
     cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
-    return dataclasses.replace(cfg, ddim=DDIMConfig(
-        num_inference_steps=args.steps,
-        guidance_scale=args.guidance,
-        tips_active_iters=max(1, args.steps * 20 // 25)))
+    policy = KernelPolicy.parse(args.kernels)
+    return dataclasses.replace(
+        cfg,
+        unet=dataclasses.replace(cfg.unet, kernel_policy=policy),
+        ddim=DDIMConfig(
+            num_inference_steps=args.steps,
+            guidance_scale=args.guidance,
+            tips_active_iters=max(1, args.steps * 20 // 25)))
 
 
 def synthetic_requests(cfg: PipelineConfig, n: int, seed: int = 7):
@@ -86,6 +98,7 @@ def serve(cfg: PipelineConfig, requests, micro_batch: int,
     steps = cfg.ddim.num_inference_steps
     metrics = {
         "requests": int(requests.shape[0]),
+        "kernel_policy": cfg.unet.effective_kernel_policy().describe(),
         "micro_batch": micro_batch,
         "engine_calls": len(batches),
         "steps_per_image": steps,
@@ -112,6 +125,10 @@ def main():
     ap.add_argument("--guidance", type=float, default=1.0)
     ap.add_argument("--ledger", action="store_true",
                     help="print the full-geometry energy headline")
+    ap.add_argument("--kernels", default="reference",
+                    help="kernel policy: 'reference', 'fused', or per-op "
+                         "overrides like 'self_attention=fused,ffn=dbsc' "
+                         "(see repro.kernels.dispatch.KernelPolicy)")
     args = ap.parse_args()
     if args.steps < 1:
         ap.error("--steps must be >= 1")
@@ -124,7 +141,7 @@ def main():
     print(f"engine: latent {cfg.unet.latent_size}^2, {args.steps} steps, "
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
-          f"micro-batch {args.micro_batch}")
+          f"micro-batch {args.micro_batch}, kernels {args.kernels}")
     reqs = synthetic_requests(cfg, args.requests)
     metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger)
     print(json.dumps(metrics, indent=2))
