@@ -79,7 +79,12 @@ def pipeline_run() -> dict:
                               0, cfg.text.vocab_size)
     _, stats = pipe.generate(toks, jax.random.PRNGKey(2))
     ratios = [pipe.measured_tips_ratio(s) for s in stats]
+    # the workload fraction follows THIS run's DDIM schedule (3 steps, 2
+    # active on smoke) — not the paper's hardcoded 20/25 operating point
+    frac = float(tips.workload_low_precision_fraction(
+        jnp.asarray(ratios), ddim=cfg.ddim))
     return {"ratios_per_iter": ratios,
+            "workload_low_fraction": frac,
             "active_iters": cfg.ddim.tips_active_iters,
             "n_iters": cfg.ddim.num_inference_steps}
 

@@ -8,6 +8,9 @@
   bench_engine        — jitted scan/fused-CFG engine vs seed Python loop
   bench_fused_attention — Pallas fused-attention path vs materializing
                         reference: peak temp bytes, wall, imgs/s, parity
+  bench_sharded_engine — data-parallel mesh serving: imgs/s at
+                        dp ∈ {1,2,4,8} on simulated host devices + the
+                        dp-vs-unsharded parity contract
   roofline            — §Roofline table from the dry-run records
 
 Each section prints measured vs paper numbers; exit code 1 if any section
@@ -45,7 +48,7 @@ def main() -> None:
     from benchmarks import (bench_dbsc, bench_ema_breakdown,
                             bench_energy_iter, bench_engine,
                             bench_fused_attention, bench_pssa,
-                            bench_tips, roofline)
+                            bench_sharded_engine, bench_tips, roofline)
 
     ok = True
     ok &= _section("ema_breakdown", bench_ema_breakdown.run)
@@ -55,6 +58,7 @@ def main() -> None:
     ok &= _section("energy_iter", bench_energy_iter.run)
     ok &= _section("engine", bench_engine.run)
     ok &= _section("fused_attention", bench_fused_attention.run)
+    ok &= _section("sharded_engine", bench_sharded_engine.run)
 
     def _roof():
         rows = roofline.run()

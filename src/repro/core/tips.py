@@ -92,12 +92,29 @@ def apply_precision_mask(x: jax.Array, important: jax.Array,
 
 
 def workload_low_precision_fraction(ratios_per_iter: jax.Array,
-                                    active_iters: int = TIPS_ACTIVE_ITERS,
-                                    total_iters: int = TOTAL_ITERS) -> jax.Array:
+                                    active_iters: int | None = None,
+                                    total_iters: int | None = None,
+                                    *, ddim=None) -> jax.Array:
     """Fraction of total FFN workload eligible for INT6 across the run.
 
     Paper Fig. 9(b): per-iteration low-precision ratio, zero for the last
     ``total - active`` iterations; overall claim is 44.8 %.
+
+    The schedule is a property of the RUN, not of the paper: pass the
+    run's ``DDIMConfig`` via ``ddim`` (any object with
+    ``tips_active_iters`` / ``num_inference_steps``) — or the two counts
+    explicitly — so e.g. a ``--steps 5`` serving run reports the fraction
+    of ITS 5-iteration workload.  The paper's 20/25 operating point is
+    only the fallback when neither is given.
     """
+    if ddim is not None:
+        if active_iters is None:
+            active_iters = ddim.tips_active_iters
+        if total_iters is None:
+            total_iters = ddim.num_inference_steps
+    if active_iters is None:
+        active_iters = TIPS_ACTIVE_ITERS
+    if total_iters is None:
+        total_iters = TOTAL_ITERS
     r = ratios_per_iter[:active_iters]
     return jnp.sum(r) / total_iters

@@ -16,6 +16,17 @@ the scanned DDIM loop with fused-CFG batched UNet calls, and the VAE decode
 Compiled executables are cached per input signature, so a serving front-end
 (``repro.launch.serve_diffusion``) pays compilation once per micro-batch
 shape and then streams generations through it.
+
+Data-parallel mesh mode (DESIGN.md §6): pass ``mesh`` (a
+``jax.sharding.Mesh`` with a ``data`` axis, e.g. from
+``repro.launch.mesh.make_elastic_mesh`` / ``make_smoke_mesh`` /
+``make_data_mesh``) and the engine replicates the UNet/text/VAE parameters
+across the mesh while sharding prompt tokens and latents along the data
+axes.  The executable cache is keyed on the mesh signature, so an elastic
+relaunch onto a different mesh (``place_on_mesh``) retraces instead of
+reusing stale executables.  The stacked stats pytree comes back with its
+per-row leaves still batch-sharded; only the scalar ledger counters are
+pulled to host, once, when the energy report reads them.
 """
 from __future__ import annotations
 
@@ -25,11 +36,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.diffusion.sampler import sample_scan
 from repro.diffusion.text_encoder import encode_text, init_text_encoder_params
 from repro.diffusion.unet import init_unet_params, unet_forward
 from repro.diffusion.vae import decode, init_vae_params
+from repro.launch.mesh import dp_axes_of, dp_size_of, mesh_signature
 
 
 @dataclasses.dataclass
@@ -40,19 +53,44 @@ class EngineOutput:
     stats: object                # UNetStats, leaves (num_steps, ...)
 
 
+def _check_cfg_inputs(guidance_scale: float, uncond_tokens) -> bool:
+    """CFG contract: ``uncond_tokens`` iff ``guidance_scale != 1.0``.
+
+    The seed engine silently disabled CFG when ``guidance_scale != 1.0``
+    but no unconditional prompt was supplied — a guidance-7.5 run would
+    quietly produce unguided images.  Both mismatch directions now raise.
+    """
+    wants_cfg = guidance_scale != 1.0
+    has_uncond = uncond_tokens is not None
+    if wants_cfg and not has_uncond:
+        raise ValueError(
+            f"guidance_scale={guidance_scale} requires classifier-free "
+            "guidance but uncond_tokens is None — pass the unconditional "
+            "prompt tokens (or set ddim.guidance_scale=1.0)")
+    if has_uncond and not wants_cfg:
+        raise ValueError(
+            "uncond_tokens were passed but ddim.guidance_scale == 1.0 "
+            "disables classifier-free guidance — drop uncond_tokens or "
+            "set a guidance_scale != 1.0")
+    return wants_cfg
+
+
 class DiffusionEngine:
     """Holds params; jits the whole generate path once per signature.
 
     ``cfg`` is a ``repro.diffusion.pipeline.PipelineConfig``.  Use
     ``generate(prompt_tokens, key, uncond_tokens=...)``; pass
-    ``uncond_tokens`` iff ``cfg.ddim.guidance_scale != 1.0``.
+    ``uncond_tokens`` iff ``cfg.ddim.guidance_scale != 1.0`` (a mismatch
+    raises ``ValueError``).
     ``kernel_policy`` (a ``repro.kernels.dispatch.KernelPolicy``) overrides
     the UNet's per-op kernel routing — e.g. ``KernelPolicy.fused()`` runs
     self-attention through the blocked Pallas kernel so the score matrix
     never materializes; stats stay bit-identical to the reference policy.
+    ``mesh`` switches on data-parallel sharded execution (see module
+    docstring); ``None`` keeps the seed single-device behaviour untouched.
     """
 
-    def __init__(self, cfg, key=None, kernel_policy=None):
+    def __init__(self, cfg, key=None, kernel_policy=None, mesh=None):
         if kernel_policy is not None:
             # route the UNet hot path per the policy (kernels.dispatch)
             cfg = dataclasses.replace(
@@ -66,13 +104,44 @@ class DiffusionEngine:
         self.text_params = init_text_encoder_params(k1, cfg.text)
         self.unet_params = init_unet_params(k2, cfg.unet)
         self.vae_params = init_vae_params(k3, cfg.vae)
-        # jitted executables keyed by (batch, use_cfg); geometry is fixed
-        # per engine so the signature is just the leading dims.
+        # jitted executables keyed by (batch, use_cfg, stats_rows, mesh
+        # signature); geometry is fixed per engine so the signature is the
+        # leading dims plus the placement.
         self._compiled: dict = {}
         self.last_wall_s: Optional[float] = None
+        self.mesh = None
+        self.dp_size = 1
+        self._data_sharding = None
+        if mesh is not None:
+            self.place_on_mesh(mesh)
 
     # ------------------------------------------------------------------
-    def _run(self, prompt_tokens, uncond_tokens, latents):
+    # Mesh placement
+    # ------------------------------------------------------------------
+    def place_on_mesh(self, mesh) -> "DiffusionEngine":
+        """Place params on ``mesh``: replicated weights, data-sharded batch.
+
+        Callable again after an elastic resize — executables compiled for
+        the previous mesh stay cached under the old signature and new
+        signatures retrace against the new placement.
+        """
+        replicated = NamedSharding(mesh, P())
+        self.mesh = mesh
+        self.dp_size = dp_size_of(mesh)
+        self._data_sharding = NamedSharding(mesh, P(dp_axes_of(mesh)))
+        self.text_params = jax.device_put(self.text_params, replicated)
+        self.unet_params = jax.device_put(self.unet_params, replicated)
+        self.vae_params = jax.device_put(self.vae_params, replicated)
+        return self
+
+    def _shard_batch(self, x):
+        """Commit a batch-leading array to the data axes (no-op unsharded)."""
+        if x is None or self._data_sharding is None:
+            return x
+        return jax.device_put(x, self._data_sharding)
+
+    # ------------------------------------------------------------------
+    def _run(self, prompt_tokens, uncond_tokens, latents, stats_rows=None):
         """Traced end-to-end path; ``uncond_tokens`` may be None (static)."""
         cfg = self.cfg
         context = encode_text(self.text_params, prompt_tokens, cfg.text)
@@ -86,19 +155,20 @@ class DiffusionEngine:
                                 cfg_dup=cfg_dup)
 
         latents, stats = sample_scan(unet_apply, latents, context, uncond,
-                                     cfg.ddim)
+                                     cfg.ddim, stats_rows=stats_rows)
         images = decode(self.vae_params, latents, cfg.vae)
         return images, latents, stats
 
-    def _get_compiled(self, batch: int, use_cfg: bool):
-        key = (batch, use_cfg)
+    def _get_compiled(self, batch: int, use_cfg: bool,
+                      stats_rows: Optional[int] = None):
+        key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh))
         fn = self._compiled.get(key)
         if fn is None:
             if use_cfg:
-                fn = jax.jit(lambda p, u, l: self._run(p, u, l),
+                fn = jax.jit(lambda p, u, l: self._run(p, u, l, stats_rows),
                              donate_argnums=(2,))
             else:
-                fn = jax.jit(lambda p, l: self._run(p, None, l),
+                fn = jax.jit(lambda p, l: self._run(p, None, l, stats_rows),
                              donate_argnums=(1,))
             self._compiled[key] = fn
         return fn
@@ -110,20 +180,32 @@ class DiffusionEngine:
                                        self.cfg.unet.in_channels))
 
     def generate(self, prompt_tokens, key, uncond_tokens=None,
-                 latents=None) -> EngineOutput:
+                 latents=None, stats_rows=None) -> EngineOutput:
         """(B, text_len) int32 tokens -> EngineOutput.
 
         The initial ``latents`` buffer (drawn from ``key`` unless given) is
         donated to the compiled call.  Wall time of the call (device sync
         included) lands in ``self.last_wall_s``.
+
+        ``stats_rows`` (static) restricts the PSSA/TIPS accounting to the
+        first N rows — serving sets it to the valid row count of a padded
+        tail micro-batch.  Under a mesh, ``batch`` must be a multiple of
+        the data-parallel degree (the serving front-end pads to it).
         """
         cfg = self.cfg
-        use_cfg = (cfg.ddim.guidance_scale != 1.0
-                   and uncond_tokens is not None)
+        use_cfg = _check_cfg_inputs(cfg.ddim.guidance_scale, uncond_tokens)
         batch = prompt_tokens.shape[0]
+        if self.mesh is not None and batch % self.dp_size:
+            raise ValueError(
+                f"batch {batch} must be a multiple of the data-parallel "
+                f"degree {self.dp_size} under mesh "
+                f"{dict(self.mesh.shape)} — pad the micro-batch")
         if latents is None:
             latents = self.init_latents(batch, key)
-        fn = self._get_compiled(batch, use_cfg)
+        prompt_tokens = self._shard_batch(prompt_tokens)
+        uncond_tokens = self._shard_batch(uncond_tokens)
+        latents = self._shard_batch(latents)
+        fn = self._get_compiled(batch, use_cfg, stats_rows)
         t0 = time.perf_counter()
         if use_cfg:
             images, latents, stats = fn(prompt_tokens, uncond_tokens,
@@ -135,9 +217,14 @@ class DiffusionEngine:
         return EngineOutput(images=images, latents=latents, stats=stats)
 
     # ------------------------------------------------------------------
-    def warmup(self, batch: int, use_cfg: Optional[bool] = None) -> float:
+    def warmup(self, batch: int, use_cfg: Optional[bool] = None,
+               stats_rows: Optional[int] = None) -> float:
         """Compile (and discard) one call for the given signature.
 
+        ``use_cfg`` defaults to what the config demands
+        (``guidance_scale != 1.0``); forcing it AGAINST the config raises
+        the same ``ValueError`` as ``generate`` — a warmed-up signature
+        the engine would refuse to serve is a bug, not a cache entry.
         Returns the wall seconds the warmup call took (compile + run).
         """
         cfg = self.cfg
@@ -147,5 +234,6 @@ class DiffusionEngine:
         un = jnp.zeros((batch, cfg.text.max_len), jnp.int32) if use_cfg \
             else None
         t0 = time.perf_counter()
-        self.generate(toks, jax.random.PRNGKey(0), uncond_tokens=un)
+        self.generate(toks, jax.random.PRNGKey(0), uncond_tokens=un,
+                      stats_rows=stats_rows)
         return time.perf_counter() - t0

@@ -124,11 +124,13 @@ class StableDiffusionPipeline:
                              full_geometry=full_geometry)
 
 
-def measured_sas_ratios(stats_one_iter) -> dict:
-    """Per-resolution (compressed/dense) SAS ratio from PSSAStats.
+def _sas_ratio_terms(stats_one_iter) -> dict:
+    """Per-resolution (numerator, denominator) byte sums for the SAS ratio.
 
-    Accepts a single-step ``UNetStats`` pytree or the legacy
-    ``{"pssa": {"tag@res": PSSAStats}}`` dict view.
+    Returned separately from the ratio so multi-batch serving can aggregate
+    the terms across engine calls before dividing: the byte counters scale
+    with the accounted row count (``stats_rows``), which makes the sums
+    self-weighting by valid rows.
     """
     by_res: dict = {}
     for res, st in _iter_layer_stats(stats_one_iter, "pssa"):
@@ -136,17 +138,41 @@ def measured_sas_ratios(stats_one_iter) -> dict:
         base = float(st.bytes_baseline)
         num, den = by_res.get(res, (0.0, 0.0))
         by_res[res] = (num + comp, den + base)
+    return by_res
+
+
+def _tips_ratio_terms(stats_one_iter) -> tuple:
+    """(numerator, denominator) of the workload-weighted INT6 fraction.
+
+    The per-layer ``low_precision_ratio`` is a mean over the accounted
+    batch rows, so the workload weight carries the row count (read from
+    the ``important`` mask's static shape — no device transfer): batches
+    with more valid rows count proportionally more when the terms are
+    summed across engine calls.
+    """
+    num = den = 0.0
+    for res, tr in _iter_layer_stats(stats_one_iter, "tips"):
+        rows = float(tr.important.shape[0]) \
+            if getattr(tr.important, "ndim", 0) >= 2 else 1.0
+        work = float(res * res) * rows     # FFN MACs scale with token count
+        num += float(tr.low_precision_ratio) * work
+        den += work
+    return num, den
+
+
+def measured_sas_ratios(stats_one_iter) -> dict:
+    """Per-resolution (compressed/dense) SAS ratio from PSSAStats.
+
+    Accepts a single-step ``UNetStats`` pytree or the legacy
+    ``{"pssa": {"tag@res": PSSAStats}}`` dict view.
+    """
     return {res: num / max(den, 1e-12)
-            for res, (num, den) in by_res.items()}
+            for res, (num, den) in _sas_ratio_terms(stats_one_iter).items()}
 
 
 def measured_tips_ratio(stats_one_iter) -> float:
     """Workload-weighted INT6 fraction across the iteration's FFNs."""
-    num = den = 0.0
-    for res, tr in _iter_layer_stats(stats_one_iter, "tips"):
-        work = float(res * res)            # FFN MACs scale with token count
-        num += float(tr.low_precision_ratio) * work
-        den += work
+    num, den = _tips_ratio_terms(stats_one_iter)
     return num / max(den, 1e-12)
 
 
@@ -159,12 +185,38 @@ def energy_report(cfg: "PipelineConfig", stats_per_iter,
     per-iteration stats.  The reduced run's measured ratios drive the
     FULL BK-SDM-Tiny ledger (hardware adaptation note: patch locality is
     resolution-dependent, so per-resolution ratios transfer; DESIGN.md §2).
+    A single-batch aggregation: delegates to :func:`energy_report_multi`.
     """
-    stats_per_iter = coerce_per_step_stats(stats_per_iter)
+    return energy_report_multi(cfg, [stats_per_iter],
+                               full_geometry=full_geometry)
+
+
+def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
+                        full_geometry: bool = True) -> "PipelineEnergyReport":
+    """Aggregate energy report across SEVERAL engine calls (serving).
+
+    ``stats_per_batch``: one stats trajectory per engine call (stacked
+    ``UNetStats`` or per-iteration list), each already restricted to its
+    valid rows (``stats_rows`` masks padded tail rows out at the source).
+    Per DDIM iteration, the SAS byte terms and the row-weighted TIPS terms
+    are summed across batches BEFORE dividing, so every valid image row in
+    the run — and no padded duplicate — contributes with equal weight.
+    With a single entry this reduces exactly to :func:`energy_report`.
+    """
+    fetched = []
+    for s in stats_per_batch:
+        if isinstance(s, UNetStats):
+            s = s.ledger_fetch()        # one host transfer per engine call
+        fetched.append(coerce_per_step_stats(s))
+    if not fetched:
+        raise ValueError("stats_per_batch is empty")
+    n = cfg.ddim.num_inference_steps
+    for s in fetched:
+        if len(s) != n:
+            raise ValueError(
+                f"stats trajectory has {len(s)} iterations, config says {n}")
+
     geom = UNetConfig() if full_geometry else cfg.unet
-    # attention lives at latent_size / {1, 2, 4} in both geometries;
-    # remap measured per-resolution ratios by rank (largest -> largest)
-    # when the reduced run's resolutions differ from the full ones.
     geom_res = sorted({geom.latent_size >> s
                        for s, a in enumerate(geom.down_attn) if a},
                       reverse=True)
@@ -174,13 +226,22 @@ def energy_report(cfg: "PipelineConfig", stats_per_iter,
         return {g: ratios[m] for g, m in zip(geom_res, meas)}
 
     opts_per_iter = []
-    n = cfg.ddim.num_inference_steps
-    for i, stats in enumerate(stats_per_iter):
+    for i in range(n):
+        sas_terms: dict = {}
+        tnum = tden = 0.0
+        for s in fetched:
+            for res, (num, den) in _sas_ratio_terms(s[i]).items():
+                a, b = sas_terms.get(res, (0.0, 0.0))
+                sas_terms[res] = (a + num, b + den)
+            num, den = _tips_ratio_terms(s[i])
+            tnum, tden = tnum + num, tden + den
+        sas_ratio = {res: num / max(den, 1e-12)
+                     for res, (num, den) in sas_terms.items()}
         opts_per_iter.append(L.LedgerOptions(
             pssa=cfg.unet.pssa,
             tips=cfg.unet.tips and i < cfg.ddim.tips_active_iters,
-            sas_ratio=remap(measured_sas_ratios(stats)),
-            tips_low_ratio=measured_tips_ratio(stats),
+            sas_ratio=remap(sas_ratio),
+            tips_low_ratio=tnum / max(tden, 1e-12),
         ))
     baseline_opts = [L.LedgerOptions()] * n
     return PipelineEnergyReport(
@@ -188,6 +249,26 @@ def energy_report(cfg: "PipelineConfig", stats_per_iter,
         baseline=L.generation_report(geom, baseline_opts),
         iterations=n,
     )
+
+
+def aggregated_tips_ratios_per_iter(cfg: "PipelineConfig",
+                                    stats_per_batch) -> list:
+    """Row-weighted per-iteration TIPS low-precision ratios across calls.
+
+    Feeds ``tips.workload_low_precision_fraction(..., ddim=cfg.ddim)`` so
+    a serving run reports the INT6 workload fraction of ITS schedule.
+    """
+    fetched = [coerce_per_step_stats(
+        s.ledger_fetch() if isinstance(s, UNetStats) else s)
+        for s in stats_per_batch]
+    out = []
+    for i in range(cfg.ddim.num_inference_steps):
+        num = den = 0.0
+        for s in fetched:
+            a, b = _tips_ratio_terms(s[i])
+            num, den = num + a, den + b
+        out.append(num / max(den, 1e-12))
+    return out
 
 
 @dataclasses.dataclass

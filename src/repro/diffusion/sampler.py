@@ -108,7 +108,7 @@ def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
 
 
 def sample_scan(unet_apply, latents, context, uncond_context,
-                cfg: DDIMConfig):
+                cfg: DDIMConfig, stats_rows=None):
     """Run all denoising steps inside one ``jax.lax.scan``.
 
     Per-step traced inputs (xs): the DDIM timestep and the TIPS activity
@@ -117,6 +117,10 @@ def sample_scan(unet_apply, latents, context, uncond_context,
     ``unet_apply`` must accept static ``stats_rows`` and ``cfg_dup``
     keywords (``repro.diffusion.unet.unet_forward`` does) — stats
     restricted to the cond rows, latents carrying only the cond half.
+    ``stats_rows`` (static) further restricts the PSSA/TIPS accounting to
+    the first N batch rows — the serving front-end sets it to the valid
+    (non-padded) row count of a tail micro-batch so padded duplicate rows
+    never leak into the energy ledger.
     Returns ``(latents,
     stacked_stats)`` where ``stacked_stats`` is a ``UNetStats`` whose
     leaves carry a leading ``num_inference_steps`` axis; reconstruct the
@@ -132,6 +136,8 @@ def sample_scan(unet_apply, latents, context, uncond_context,
     if use_cfg:
         ctx_fused = jnp.concatenate([context, uncond_context], axis=0)
     b = latents.shape[0]
+    if stats_rows is not None and not (0 < stats_rows <= b):
+        raise ValueError(f"stats_rows={stats_rows} outside [1, {b}]")
 
     def body(lat, xs):
         t, active = xs
@@ -139,16 +145,18 @@ def sample_scan(unet_apply, latents, context, uncond_context,
             tvec = jnp.full((b,), t, jnp.int32)
             # cfg_dup: latents stay at b rows — the UNet tiles the hidden
             # state to [cond | uncond] at the first cross-attention (the
-            # halves are identical before it).  stats_rows=b accounts
-            # PSSA/TIPS on the cond half only — the ledger never consumes
-            # uncond stats (the two-call reference path computes and
-            # discards them; the fused path skips them).
+            # halves are identical before it).  stats_rows defaults to b:
+            # PSSA/TIPS accounted on the cond half only — the ledger never
+            # consumes uncond stats (the two-call reference path computes
+            # and discards them; the fused path skips them).
+            rows = b if stats_rows is None else stats_rows
             eps_fused, stats = unet_apply(lat, tvec, ctx_fused, active,
-                                          stats_rows=b, cfg_dup=True)
+                                          stats_rows=rows, cfg_dup=True)
             eps = guided_eps(eps_fused, cfg.guidance_scale)
         else:
             tvec = jnp.full((b,), t, jnp.int32)
-            eps, stats = unet_apply(lat, tvec, context, active)
+            eps, stats = unet_apply(lat, tvec, context, active,
+                                    stats_rows=stats_rows)
         lat = ddim_step(lat, eps, t, t - step, acp)
         return lat, stats
 

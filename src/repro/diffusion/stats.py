@@ -121,6 +121,29 @@ class UNetStats:
             "tips": {k.name: t for k, t in zip(self.layers, self.tips)},
         }
 
+    # -- host transfer ---------------------------------------------------
+    def ledger_fetch(self) -> "UNetStats":
+        """Pull ONLY the scalar ledger leaves to host, in one transfer.
+
+        A sharded engine keeps the stacked stats pytree on device — the
+        per-row leaves (``TIPSResult.important`` / ``.cas``) batch-sharded
+        across the mesh — until the energy ledger reads it.  The ledger
+        consumes just the PSSA byte counters and the TIPS low-precision
+        ratios, all scalars per (step, layer): this fetches exactly those
+        in a single ``jax.device_get`` (instead of one device round-trip
+        per ``float(...)`` in the ledger loops) and leaves the per-row
+        leaves where they are.  Values are unchanged — host copies of the
+        same arrays — so every report is bit-identical to an on-device
+        read.
+        """
+        pssa_np, low_np = jax.device_get(
+            (self.pssa, tuple(t.low_precision_ratio for t in self.tips)))
+        tips_np = tuple(
+            t._replace(low_precision_ratio=low)
+            for t, low in zip(self.tips, low_np))
+        return UNetStats(layers=self.layers, pssa=tuple(pssa_np),
+                         tips=tips_np)
+
     # -- construction ----------------------------------------------------
     @classmethod
     def from_layer_list(cls, layers, pssa, tips) -> "UNetStats":

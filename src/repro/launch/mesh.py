@@ -1,11 +1,63 @@
-"""Mesh construction (production + elastic variants).
+"""Mesh construction (production + elastic variants) and version compat.
 
 All constructors are FUNCTIONS so importing this module never touches jax
 device state (the dry-run must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+import math
+import os
+
 import jax
+
+
+def use_mesh(mesh):
+    """Version-portable "active mesh" context manager.
+
+    jax >= 0.6 exposes ``jax.set_mesh`` (usable as a context manager);
+    earlier versions (the container floor is 0.4.37) activate a mesh by
+    entering the ``Mesh`` object itself.  Everything in this repo annotates
+    shardings explicitly with ``NamedSharding``, which works under either —
+    the context only matters for code that resolves bare axis names.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def simulate_host_devices(count: int) -> None:
+    """Expose ``count`` fake host devices (CPU) to this process.
+
+    Same ``XLA_FLAGS`` trick as the dry-run: must be called BEFORE the
+    first jax backend init, so callers (``serve_diffusion --mesh N``,
+    ``benchmarks/bench_sharded_engine``) invoke it from their entrypoint
+    prior to any jax device use.  A pre-existing flag with a DIFFERENT
+    count (e.g. exported by an earlier recipe) is replaced, not silently
+    kept — the caller asked for ``count`` devices.
+    """
+    import re
+    flag = f"--xla_force_host_platform_device_count={count}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in cur:
+        cur = re.sub(r"--xla_force_host_platform_device_count=\d+", flag,
+                     cur)
+        os.environ["XLA_FLAGS"] = cur
+    else:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
+
+
+def mesh_signature(mesh) -> tuple | None:
+    """Hashable identity of a mesh: axis names, sizes, and device ids.
+
+    Used to key compiled-executable caches (``DiffusionEngine``): two
+    meshes with the same signature shard a program identically, and an
+    elastic relaunch onto different devices (or a reshaped mesh) must not
+    reuse executables compiled for the old placement.
+    """
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
 
 
 def make_production_mesh(*, multi_pod: bool = False, tp_size: int = 16):
@@ -24,6 +76,27 @@ def make_production_mesh(*, multi_pod: bool = False, tp_size: int = 16):
 
 def dp_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size_of(mesh) -> int:
+    """Total data-parallel degree (product of the pod/data axis sizes)."""
+    return math.prod(int(mesh.shape[a]) for a in dp_axes_of(mesh))
+
+
+def make_data_mesh(dp: int):
+    """(dp, 1) pure data-parallel mesh over the first ``dp`` live devices.
+
+    Unlike ``make_elastic_mesh`` this does not insist on using every
+    device — serving picks its dp degree (``serve_diffusion --mesh N``)
+    and leaves the rest to other replicas.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < dp:
+        raise ValueError(f"--mesh {dp} needs {dp} devices, "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:dp]).reshape(dp, 1),
+                             ("data", "model"))
 
 
 def make_elastic_mesh(tp_size: int = 16):

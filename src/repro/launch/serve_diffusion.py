@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
-      [--kernels fused]
+      [--kernels fused] [--mesh 4] [--ledger]
 
 Micro-batching: incoming prompts are queued and packed into fixed-size
 micro-batches (padding the tail with repeats), each served by ONE compiled
@@ -11,8 +11,22 @@ XLA computation, with cond+uncond CFG fused into one batched UNet call per
 step.  The engine caches one executable per micro-batch signature, so after
 the first call every shape is compile-free.
 
-Reports imgs/s, per-iteration wall time, and (with ``--ledger``) the
-full-geometry energy headline driven by the measured stats trajectory.
+Mesh mode (``--mesh N``): data-parallel sharded execution over N devices
+(DESIGN.md §6).  On a CPU host the N devices are simulated with the
+dry-run's ``XLA_FLAGS`` trick (set before jax initializes); on TPU the
+first N real devices are used.  The scheduler rounds the micro-batch up to
+a multiple of the dp degree, shards prompt tokens and latents along the
+``data`` axis (params replicated), and masks padded tail rows out of every
+reported metric: ``stats_rows`` restricts the PSSA/TIPS accounting to the
+valid rows at the source, so the energy ledger never sees a padded
+duplicate.
+
+Reports aggregate imgs/s (valid images only), per-iteration wall time, and
+(with ``--ledger``) the full-geometry energy headline driven by the stats
+of EVERY micro-batch — the per-iteration SAS/TIPS terms are summed across
+engine calls before dividing (``pipeline.energy_report_multi``), with the
+stats pytrees staying on device (batch-sharded under a mesh) until that
+single host read.
 
 ``--kernels`` selects the per-op kernel routing (``KernelPolicy``):
 ``reference`` (materializing pure-JAX), ``fused`` (blocked Pallas
@@ -25,18 +39,15 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.diffusion.engine import DiffusionEngine
-from repro.diffusion.pipeline import PipelineConfig, energy_report
-from repro.diffusion.sampler import DDIMConfig
-from repro.kernels.dispatch import KernelPolicy
+def make_config(args):
+    from repro.diffusion.pipeline import PipelineConfig
+    from repro.diffusion.sampler import DDIMConfig
+    from repro.kernels.dispatch import KernelPolicy
 
-
-def make_config(args) -> PipelineConfig:
     cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
     policy = KernelPolicy.parse(args.kernels)
     return dataclasses.replace(
@@ -48,8 +59,9 @@ def make_config(args) -> PipelineConfig:
             tips_active_iters=max(1, args.steps * 20 // 25)))
 
 
-def synthetic_requests(cfg: PipelineConfig, n: int, seed: int = 7):
+def synthetic_requests(cfg, n: int, seed: int = 7):
     """n prompt token rows (no tokenizer offline; semantics don't matter)."""
+    import jax
     return jax.random.randint(jax.random.PRNGKey(seed),
                               (n, cfg.text.max_len), 0, cfg.text.vocab_size)
 
@@ -58,8 +70,11 @@ def micro_batches(requests, batch: int):
     """Pack request rows into fixed-size batches, padding the tail.
 
     Returns (batched_tokens, valid_count) pairs; padded rows repeat the
-    first request so every call hits the same compiled signature.
+    first request so every call hits the same compiled signature.  Padded
+    rows are masked out downstream: ``valid`` drives both the imgs/s
+    accounting and the ``stats_rows`` ledger restriction.
     """
+    import jax.numpy as jnp
     n = requests.shape[0]
     out = []
     for i in range(0, n, batch):
@@ -73,34 +88,69 @@ def micro_batches(requests, batch: int):
     return out
 
 
-def serve(cfg: PipelineConfig, requests, micro_batch: int,
-          key=None, ledger: bool = False) -> dict:
-    """Drain the request queue through the engine; return serving metrics."""
+def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
+          mesh=None) -> dict:
+    """Drain the request queue through the engine; return serving metrics.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` for data-parallel execution;
+    the effective micro-batch is rounded up to a multiple of its dp size.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tips
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.diffusion.pipeline import (aggregated_tips_ratios_per_iter,
+                                          energy_report_multi)
+    from repro.launch.mesh import dp_size_of
+
     key = key if key is not None else jax.random.PRNGKey(0)
-    eng = DiffusionEngine(cfg, key=key)
+    eng = DiffusionEngine(cfg, key=key, mesh=mesh)
+    dp = dp_size_of(mesh) if mesh is not None else 1
+    # micro-batches must tile evenly over the data axis
+    micro_batch = -(-micro_batch // dp) * dp
     use_cfg = cfg.ddim.guidance_scale != 1.0
     uncond = (jnp.zeros((micro_batch, cfg.text.max_len), jnp.int32)
               if use_cfg else None)
 
-    compile_s = eng.warmup(micro_batch, use_cfg)
+    # warm exactly the signatures the loop will run: the full-batch one
+    # (skipped when every request fits in one padded tail) and the tail's
+    # stats_rows one — compiles land in compile_s, not the serving wall
+    n_requests = int(requests.shape[0])
+    tail = n_requests % micro_batch
+    compile_s = 0.0
+    if n_requests >= micro_batch:
+        compile_s += eng.warmup(micro_batch, use_cfg)
+    if tail:
+        compile_s += eng.warmup(micro_batch, use_cfg, stats_rows=tail)
     batches = micro_batches(requests, micro_batch)
 
     images = 0
+    padded = 0
     wall = 0.0
-    last_stats = None
+    stats_per_batch = []        # (stacked UNetStats, valid rows) per call
     for i, (toks, valid) in enumerate(batches):
+        # a padded tail batch compiles its own stats_rows signature once
+        rows = valid if valid < micro_batch else None
         out = eng.generate(toks, jax.random.fold_in(key, i),
-                           uncond_tokens=uncond)
+                           uncond_tokens=uncond, stats_rows=rows)
         wall += eng.last_wall_s
         images += valid
-        last_stats = out.stats
+        padded += micro_batch - valid
+        stats_per_batch.append(out.stats)
 
     steps = cfg.ddim.num_inference_steps
     metrics = {
         "requests": int(requests.shape[0]),
         "kernel_policy": cfg.unet.effective_kernel_policy().describe(),
         "micro_batch": micro_batch,
+        "mesh": None if mesh is None else {
+            "dp": dp,
+            "shape": {k: int(v) for k, v in mesh.shape.items()},
+            "devices": int(mesh.devices.size),
+        },
         "engine_calls": len(batches),
+        "padded_rows": padded,
         "steps_per_image": steps,
         "guidance_fused_cfg": use_cfg,
         "compile_s": compile_s,
@@ -108,9 +158,16 @@ def serve(cfg: PipelineConfig, requests, micro_batch: int,
         "imgs_per_s": images / max(wall, 1e-9),
         "iter_wall_ms": 1e3 * wall / max(len(batches) * steps, 1),
     }
-    if ledger and last_stats is not None:
-        rep = energy_report(cfg, last_stats)
+    if ledger and stats_per_batch:
+        # ONE host read per call of the scalar ledger leaves; per-row
+        # leaves never leave the mesh (stats stay batch-sharded)
+        fetched = [s.ledger_fetch() for s in stats_per_batch]
+        rep = energy_report_multi(cfg, fetched)
         metrics["energy"] = {k: float(v) for k, v in rep.summary().items()}
+        ratios = aggregated_tips_ratios_per_iter(cfg, fetched)
+        metrics["tips_workload_low_fraction"] = float(
+            tips.workload_low_precision_fraction(jnp.asarray(ratios),
+                                                 ddim=cfg.ddim))
     return metrics
 
 
@@ -125,6 +182,10 @@ def main():
     ap.add_argument("--guidance", type=float, default=1.0)
     ap.add_argument("--ledger", action="store_true",
                     help="print the full-geometry energy headline")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="data-parallel degree: shard micro-batches over N "
+                         "devices (simulated host devices on CPU, real on "
+                         "TPU); 0 = single-device")
     ap.add_argument("--kernels", default="reference",
                     help="kernel policy: 'reference', 'fused', or per-op "
                          "overrides like 'self_attention=fused,ffn=dbsc' "
@@ -136,14 +197,30 @@ def main():
         ap.error("--micro-batch must be >= 1")
     if args.requests < 1:
         ap.error("--requests must be >= 1")
+    if args.mesh < 0:
+        ap.error("--mesh must be >= 0")
 
+    if args.mesh > 1:
+        # must run before the first jax backend init; only meaningful for
+        # host (CPU) platforms — TPU/GPU expose their real devices
+        plat = (os.environ.get("JAX_PLATFORMS")
+                or os.environ.get("JAX_PLATFORM_NAME") or "cpu")
+        if "tpu" not in plat and "gpu" not in plat and "cuda" not in plat:
+            from repro.launch.mesh import simulate_host_devices
+            simulate_host_devices(args.mesh)
+
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(args.mesh) if args.mesh > 1 else None
     cfg = make_config(args)
     print(f"engine: latent {cfg.unet.latent_size}^2, {args.steps} steps, "
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
-          f"micro-batch {args.micro_batch}, kernels {args.kernels}")
+          f"micro-batch {args.micro_batch}, kernels {args.kernels}, "
+          f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
     reqs = synthetic_requests(cfg, args.requests)
-    metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger)
+    metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
+                    mesh=mesh)
     print(json.dumps(metrics, indent=2))
 
 

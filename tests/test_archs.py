@@ -73,8 +73,23 @@ def test_decode_step_matches_cache_semantics(arch):
                  cache, new_cache)
 
 
-@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-130m", "hymba-1.5b"])
-def test_prefill_then_decode_consistent(arch):
+@pytest.mark.parametrize("arch,tol", [
+    ("llama3-8b", 2e-2),
+    # mamba2 runs the full sequence through the CHUNKED SSD path but decodes
+    # through the O(1) f32 recurrence — two mathematically-equal programs
+    # whose summation orders differ everywhere (quadratic intra-chunk einsum
+    # vs state update; shifted-add causal conv vs window einsum).  With
+    # bf16 activations that reassociation costs ~1 bf16 ulp per layer at the
+    # hidden-state magnitude (|h| ~ 4 -> ulp = 2^-8 * 2^2 = 0.03125); the
+    # measured logit drift is 0.031-0.033 over the 2 smoke layers, and an
+    # all-f32 intra-chunk run still drifts 0.027 (so this is activation-
+    # dtype rounding, not the bf16 einsum operands; root-caused in PR 3).
+    # 6e-2 = two bf16 ulps at |h|=4 of headroom; a real divergence bug (like
+    # a mis-rolled conv window) shows up at O(1), far above it.
+    ("mamba2-130m", 6e-2),
+    ("hymba-1.5b", 2e-2),
+])
+def test_prefill_then_decode_consistent(arch, tol):
     """Greedy continuation: prefill cache + decode next token == running
     forward on the extended sequence (teacher forcing)."""
     # vanilla path: TIPS fake-quant uses a full-tensor scale in prefill but a
@@ -98,7 +113,7 @@ def test_prefill_then_decode_consistent(arch):
                                 jnp.asarray(7, jnp.int32), cfg, None)
     np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
                                np.asarray(logits_full[:, 7]),
-                               rtol=2e-2, atol=2e-2)
+                               rtol=tol, atol=tol)
 
 
 def test_moe_router_balance_aux_positive():

@@ -118,6 +118,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_arch
+from repro.launch.mesh import use_mesh
 from repro.models import transformer as T
 from repro.models.layers import ShardCtx
 
@@ -135,7 +136,8 @@ ref, _, _ = T.forward(params, cfg, None, tokens=toks, remat=False)
 ctx = ShardCtx(mesh=mesh, dp_axes=("data",))
 specs = T.param_specs(cfg, 4)
 ns = lambda s: NamedSharding(mesh, s)
-with jax.set_mesh(mesh):
+# use_mesh: jax.set_mesh on jax >= 0.6, the Mesh context manager below it
+with use_mesh(mesh):
     psh = jax.tree.map(lambda s: ns(s), specs, is_leaf=lambda x: isinstance(x, P))
     sp = jax.device_put(params, psh)
     st = jax.device_put(toks, ns(P("data", None)))
