@@ -45,6 +45,7 @@ from repro.launch import serve_diffusion as S
 
 class A: pass
 a = A(); a.smoke = True; a.steps = 3; a.guidance = 1.0; a.kernels = "reference"
+a.tips = "fixed"
 cfg = S.make_config(a)
 mesh = make_data_mesh(dp) if dp > 1 else None
 mb = per_dev * dp

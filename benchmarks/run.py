@@ -1,29 +1,76 @@
-"""Benchmark driver: one section per paper table/figure + the roofline.
+"""Benchmark driver: one section per paper table/figure + perf trajectories.
 
-  bench_ema_breakdown — Fig. 1(b): 1.9 GB/iter EMA + stage breakdown
-  bench_pssa          — Fig. 5:   PSSA vs baseline/RLE/CSR + index overhead
-  bench_tips          — Fig. 9(b): TIPS low-precision ratio per iteration
-  bench_dbsc          — Fig. 9(c): DBSC FFN energy efficiency + exactness
-  bench_energy_iter   — Table I:  28.6 / 213.3 mJ per iteration
-  bench_engine        — jitted scan/fused-CFG engine vs seed Python loop
-  bench_fused_attention — Pallas fused-attention path vs materializing
-                        reference: peak temp bytes, wall, imgs/s, parity
-  bench_sharded_engine — data-parallel mesh serving: imgs/s at
-                        dp ∈ {1,2,4,8} on simulated host devices + the
-                        dp-vs-unsharded parity contract
-  roofline            — §Roofline table from the dry-run records
+The section listing is GENERATED from ``BENCHES`` (name -> module), with
+each section's one-line summary pulled from the bench module's own
+docstring — run with ``--list`` to print it, so the listing can never
+drift from the registry the way a hand-maintained docstring table did.
 
 Each section prints measured vs paper numbers; exit code 1 if any section
 errors.  Results also land in benchmarks/results/bench_<name>.json.
 """
 from __future__ import annotations
 
+import argparse
+import ast
+import importlib
 import json
 import os
 import time
 import traceback
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# Registry: section name -> (module, runner attr).  Order is the run
+# order; the roofline has a custom formatter, handled in _runner().
+BENCHES = {
+    "ema_breakdown": "benchmarks.bench_ema_breakdown",
+    "pssa": "benchmarks.bench_pssa",
+    "tips": "benchmarks.bench_tips",
+    "dbsc": "benchmarks.bench_dbsc",
+    "energy_iter": "benchmarks.bench_energy_iter",
+    "engine": "benchmarks.bench_engine",
+    "fused_attention": "benchmarks.bench_fused_attention",
+    "fused_cross_attention": "benchmarks.bench_fused_cross_attention",
+    "sharded_engine": "benchmarks.bench_sharded_engine",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def _summary_line(modname: str) -> str:
+    """First docstring line of a bench module, sans the 'BENCH —' prefix.
+
+    Read from SOURCE (``ast.get_docstring``), not by importing: ``--list``
+    must not pay the jax import cost of ten bench modules, and a bench
+    with a broken import should still be listable.
+    """
+    path = os.path.join(os.path.dirname(__file__),
+                        modname.rsplit(".", 1)[1] + ".py")
+    with open(path) as f:
+        doc = (ast.get_docstring(ast.parse(f.read())) or "").strip()
+    first = doc.splitlines()[0] if doc else ""
+    for prefix in ("BENCH — ", "BENCH -- ", "Paper "):
+        if first.startswith(prefix):
+            first = first[len(prefix):]
+            break
+    return first.rstrip(".")
+
+
+def bench_listing() -> str:
+    """The section listing, generated from the registry (never drifts)."""
+    width = max(len(n) for n in BENCHES)
+    return "\n".join(f"  {name:<{width}}  {_summary_line(modname)}"
+                     for name, modname in BENCHES.items())
+
+
+def _runner(name: str):
+    mod = importlib.import_module(BENCHES[name])
+    if name == "roofline":
+        def _roof():
+            rows = mod.run()
+            print(mod.format_table(rows))
+            return {"cells": len(rows), "worst": rows[:3], "best": rows[-3:]}
+        return _roof
+    return mod.run
 
 
 def _section(name, fn):
@@ -45,28 +92,24 @@ def _section(name, fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_dbsc, bench_ema_breakdown,
-                            bench_energy_iter, bench_engine,
-                            bench_fused_attention, bench_pssa,
-                            bench_sharded_engine, bench_tips, roofline)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print the generated section listing and exit")
+    ap.add_argument("--only", default=None,
+                    help="run a single section by name")
+    args = ap.parse_args()
+    if args.list:
+        print(bench_listing())
+        raise SystemExit(0)
+    names = list(BENCHES)
+    if args.only is not None:
+        if args.only not in BENCHES:
+            ap.error(f"--only {args.only!r}: expected one of {names}")
+        names = [args.only]
 
     ok = True
-    ok &= _section("ema_breakdown", bench_ema_breakdown.run)
-    ok &= _section("pssa", bench_pssa.run)
-    ok &= _section("tips", bench_tips.run)
-    ok &= _section("dbsc", bench_dbsc.run)
-    ok &= _section("energy_iter", bench_energy_iter.run)
-    ok &= _section("engine", bench_engine.run)
-    ok &= _section("fused_attention", bench_fused_attention.run)
-    ok &= _section("sharded_engine", bench_sharded_engine.run)
-
-    def _roof():
-        rows = roofline.run()
-        print(roofline.format_table(rows))
-        return {"cells": len(rows),
-                "worst": rows[:3], "best": rows[-3:]}
-    ok &= _section("roofline", _roof)
-
+    for name in names:
+        ok &= _section(name, _runner(name))
     raise SystemExit(0 if ok else 1)
 
 

@@ -37,15 +37,21 @@ def main():
     ap.add_argument("--kernels", default="reference",
                     help="kernel policy: 'reference', 'fused', or per-op "
                          "overrides (see repro.kernels.dispatch)")
+    ap.add_argument("--tips", default="fixed",
+                    help="precision policy: 'fixed', 'adaptive', or field "
+                         "overrides like 'adaptive,target=0.5,mid=true' "
+                         "(see repro.core.precision)")
     args = ap.parse_args()
 
+    from repro.core.precision import PrecisionPolicy
     from repro.kernels.dispatch import KernelPolicy
     cfg = PipelineConfig.smoke()
     cfg = dataclasses.replace(
         cfg,
         unet=dataclasses.replace(cfg.unet,
                                  kernel_policy=KernelPolicy.parse(
-                                     args.kernels)),
+                                     args.kernels),
+                                 precision=PrecisionPolicy.parse(args.tips)),
         ddim=DDIMConfig(
             num_inference_steps=args.steps,
             guidance_scale=args.guidance,
@@ -53,7 +59,7 @@ def main():
     print(f"pipeline: latent {cfg.unet.latent_size}^2, "
           f"{args.steps} DDIM steps, guidance {args.guidance}, "
           f"{'python loop' if args.python_loop else 'jitted engine'}, "
-          f"kernels {args.kernels}")
+          f"kernels {args.kernels}, tips {args.tips}")
 
     # "a toy raccoon standing on a pile of broccoli" — tokens are synthetic
     # (no tokenizer offline); semantics don't affect the energy evaluation.

@@ -7,6 +7,7 @@ benchmarks.  See ``repro.diffusion`` for the model itself.
 """
 import dataclasses
 
+from repro.core.precision import PrecisionPolicy
 from repro.diffusion.pipeline import PipelineConfig
 from repro.diffusion.sampler import DDIMConfig
 from repro.diffusion.text_encoder import TextEncoderConfig
@@ -31,7 +32,22 @@ def with_kernel_policy(cfg: PipelineConfig,
         cfg, unet=dataclasses.replace(cfg.unet, kernel_policy=policy))
 
 
-# Serving path: blocked Pallas attention + PSXU kernel — the SAS never
-# materializes (interpret auto-selected per backend; see kernels.dispatch).
+def with_precision(cfg: PipelineConfig,
+                   policy: PrecisionPolicy) -> PipelineConfig:
+    """Pipeline config with the TIPS/DBSC precision runtime set."""
+    return dataclasses.replace(
+        cfg, unet=dataclasses.replace(cfg.unet, precision=policy))
+
+
+# Serving path: blocked Pallas attention (self + cross) + PSXU kernel —
+# neither the SAS nor the cross-attention probability tensor materializes
+# (interpret auto-selected per backend; see kernels.dispatch).
 FUSED = with_kernel_policy(CONFIG, KernelPolicy.fused())
 SMOKE_FUSED = with_kernel_policy(SMOKE, KernelPolicy.fused())
+
+# Paper operating point for the precision runtime: whole-FFN TIPS coverage
+# ("INT12 through the whole following FFN stack", §IV-A) at the measured
+# 44.8 % workload target via per-sample adaptive spotting.
+ADAPTIVE = with_precision(CONFIG, PrecisionPolicy.adaptive())
+PAPER_PRECISION = with_precision(
+    CONFIG, PrecisionPolicy(spotting="fixed", ffn_mid=True))

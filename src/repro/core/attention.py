@@ -13,6 +13,12 @@ exists in memory, and the PSSA byte accounting is assembled from integer
 counters the kernel accumulates per query row.  Selection between the two
 lives in ``repro.kernels.dispatch`` (``KernelPolicy``).
 
+``cross_attention_tips_fused`` — cross-attention through the blocked
+Pallas kernel (``repro.kernels.cross_attention_tips``): the (B, H, Tq, Tk)
+probability tensor never exists in memory; the per-head CAS rides out of
+the kernel and importance spotting happens on it downstream, shared with
+the reference path (``core.precision.spot_cas``).
+
 ``self_attention_pssa`` is deliberately materializing — that is the paper's
 *baseline* dataflow (SAS spills to DRAM) and the thing PSSA compresses; it
 stays the stats oracle the fused path is tested against.
@@ -24,7 +30,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pssa, tips
+from repro.core import pssa, precision as precision_mod, tips
+from repro.kernels.cross_attention_tips.ops import cross_attention_cas
 from repro.kernels.pssa_attention.ops import pssa_attention
 
 
@@ -101,27 +108,91 @@ class CrossAttnOut(NamedTuple):
     important_full: jax.Array      # full-batch mask for the FFN precision
 
 
-def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
-                         threshold: float,
-                         cls_index: int = 0,
-                         stats_rows: int | None = None) -> CrossAttnOut:
-    """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS.
+def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None):
+    """Shared spotting tail of both cross-attention implementations.
 
-    The returned ``tips_result.important`` always covers the FULL batch
-    (the FFN precision mask needs every row); with ``stats_rows`` set, the
-    *reported* CAS / low-precision ratio are restricted to the first N
-    rows — the cond half under fused CFG — matching a cond-only call.
+    ``cas`` is the head-averaged (B, Tq) CLS score; spotting (fixed or
+    per-sample adaptive, per the ``PrecisionPolicy``) runs on it
+    identically for the reference and fused paths, so routing parity
+    reduces to CAS parity.  Returns (reported TIPSResult, full-batch
+    importance mask) — with ``stats_rows`` the reported stats cover the
+    first N rows only (the cond half under fused CFG), which commutes
+    with spotting because both modes decide per sample.
     """
-    d = q.shape[-1]
-    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_text) / jnp.sqrt(float(d))
-    probs = jax.nn.softmax(scores, axis=-1)
-    spotted = tips.spot(probs, threshold, cls_index)
+    spotted = precision_mod.spot_cas(cas, precision)
     important_full = spotted.important
     if stats_rows is not None:
         imp = spotted.important[:stats_rows]
         spotted = tips.TIPSResult(
             important=imp, cas=spotted.cas[:stats_rows],
             low_precision_ratio=1.0 - jnp.mean(imp.astype(jnp.float32)))
+    return spotted, important_full
+
+
+def _as_precision_policy(precision, threshold, cls_index):
+    """Legacy-call shim: a bare ``threshold`` means fixed spotting."""
+    if precision is not None:
+        if threshold is not None:
+            raise ValueError(
+                "pass either precision= or the legacy threshold=, not both "
+                "(the policy carries the threshold)")
+        return precision
+    if threshold is None:
+        raise ValueError("pass either precision= or threshold=")
+    return precision_mod.PrecisionPolicy(threshold=threshold,
+                                         cls_index=cls_index)
+
+
+def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
+                         threshold: float | None = None,
+                         cls_index: int = 0,
+                         stats_rows: int | None = None,
+                         precision=None) -> CrossAttnOut:
+    """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS.
+
+    ``precision`` (a ``core.precision.PrecisionPolicy``) selects the
+    spotting mode; passing only ``threshold`` keeps the legacy
+    fixed-threshold behaviour.  The returned ``tips_result.important``
+    always covers the FULL batch (the FFN precision mask needs every row);
+    with ``stats_rows`` set, the *reported* CAS / low-precision ratio are
+    restricted to the first N rows — the cond half under fused CFG —
+    matching a cond-only call.
+    """
+    precision = _as_precision_policy(precision, threshold, cls_index)
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_text) / jnp.sqrt(float(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    cas = jnp.mean(probs[..., :, precision.cls_index], axis=-2)   # (B, Tq)
+    spotted, important_full = _spot_and_slice(cas, precision, stats_rows)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_text)
+    return CrossAttnOut(out=out, tips_result=spotted,
+                        important_full=important_full)
+
+
+def cross_attention_tips_fused(q: jax.Array, k_text: jax.Array,
+                               v_text: jax.Array,
+                               threshold: float | None = None,
+                               cls_index: int = 0,
+                               stats_rows: int | None = None,
+                               precision=None,
+                               interpret: bool | None = None,
+                               bq: int = 128) -> CrossAttnOut:
+    """``cross_attention_tips`` through the blocked Pallas kernel.
+
+    The (B, H, Tq, Tk) probability tensor is never materialized: the
+    kernel streams query blocks against the (small) text-key stripe and
+    emits the per-head CAS directly (``repro.kernels.cross_attention_tips``).
+    Spotting runs on the head-averaged CAS downstream, shared with the
+    reference — the importance mask, low-precision ratio, and every ledger
+    term derived from them are bit-identical to the reference path; the
+    raw CAS is ulp-identical (the reference itself is not bitwise stable
+    across jit contexts — DESIGN.md §7).
+    """
+    precision = _as_precision_policy(precision, threshold, cls_index)
+    out, cas_bh = cross_attention_cas(q, k_text, v_text,
+                                      cls_index=precision.cls_index,
+                                      interpret=interpret, bq=bq)
+    cas = jnp.mean(cas_bh, axis=-2)                               # (B, Tq)
+    spotted, important_full = _spot_and_slice(cas, precision, stats_rows)
     return CrossAttnOut(out=out, tips_result=spotted,
                         important_full=important_full)

@@ -1,0 +1,160 @@
+"""PrecisionPolicy — the single source of TIPS/DBSC precision truth.
+
+The paper's text-based mixed precision has three knobs that were scattered
+across the codebase: the fixed CAS threshold (``UNetConfig.tips_threshold``),
+the activity schedule (``tips_schedule`` / ``DDIMConfig.tips_active_iters``)
+and an *unwired* target-ratio mode (``tips.adaptive_threshold`` — the offline
+tuning helper the silicon's predefined threshold comes from).  This module
+folds the spotting decision into one frozen, hashable policy object that
+lives inside ``UNetConfig`` (next to ``KernelPolicy``), participates in the
+``DiffusionEngine`` executable-cache key, and backs the ``--tips`` serving
+flag.
+
+Two spotting modes (``spotting``):
+
+``fixed``     — the silicon's datapath: a predefined CAS threshold marks a
+                pixel important (``cas < threshold``), tuned offline.
+``adaptive``  — the offline tuning run *inside* the loop: each sample's CAS
+                distribution is thresholded at the quantile that realizes
+                ``target_low_ratio`` of its tokens at INT6.  The quantile is
+                PER SAMPLE (reduced over the token axis only), for the same
+                reason ``tips.apply_precision_mask`` scales per sample: one
+                image's precision map must not depend on what else shares
+                the batch, so a fused cond+uncond CFG batch spots exactly
+                like two separate calls and ``stats_rows`` row slicing
+                commutes with spotting.
+
+``ffn_mid`` extends the TIPS mask to the SECOND FFN matmul (``ff_out``):
+unimportant rows' mid activations (GEGLU output) are re-quantized to INT6
+too — the paper's "INT12 through the whole following FFN stack" reading.
+Off by default: the seed datapath only covered the first matmul, and the
+energy ledger's MAC precision split follows this flag
+(``diffusion.ledger.LedgerOptions.tips_mid``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import tips
+
+_SPOTTING = ("fixed", "adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Which TIPS/DBSC precision decisions the runtime makes.
+
+    Frozen + hashable so it can live inside ``UNetConfig``, flow through
+    jit closures, and key the engine's executable cache (a policy change
+    retraces instead of reusing a stale executable).
+    """
+    spotting: str = "fixed"
+    threshold: float = 0.05          # fixed mode: important <=> CAS < this
+    target_low_ratio: float = 0.448  # adaptive mode: INT6 fraction to realize
+    ffn_mid: bool = False            # TIPS mask also covers ff_out (INT6 mid)
+    cls_index: int = 0               # CLS position in the text keys
+
+    def __post_init__(self):
+        if self.spotting not in _SPOTTING:
+            raise ValueError(
+                f"PrecisionPolicy.spotting={self.spotting!r}: expected one "
+                f"of {_SPOTTING}")
+        if not 0.0 <= self.target_low_ratio <= 1.0:
+            raise ValueError(
+                f"PrecisionPolicy.target_low_ratio={self.target_low_ratio}: "
+                f"expected a fraction in [0, 1]")
+        if not 0.0 < self.threshold <= 1.0:
+            raise ValueError(
+                f"PrecisionPolicy.threshold={self.threshold}: CAS is a "
+                f"softmax probability — expected a cut in (0, 1]")
+        if self.cls_index < 0:
+            raise ValueError(
+                f"PrecisionPolicy.cls_index={self.cls_index}: must be >= 0")
+
+    # -- presets ---------------------------------------------------------
+    @classmethod
+    def fixed(cls, threshold: float = 0.05) -> "PrecisionPolicy":
+        """The silicon's predefined-threshold operating point."""
+        return cls(spotting="fixed", threshold=threshold)
+
+    @classmethod
+    def adaptive(cls, target_low_ratio: float = 0.448) -> "PrecisionPolicy":
+        """Per-sample quantile spotting that realizes a target INT6 ratio."""
+        return cls(spotting="adaptive", target_low_ratio=target_low_ratio)
+
+    @classmethod
+    def parse(cls, spec: str) -> "PrecisionPolicy":
+        """Build a policy from a CLI spec (the ``--tips`` flag).
+
+        ``spec`` is a comma-separated list where a bare ``fixed`` /
+        ``adaptive`` item selects the spotting mode and ``key=value`` items
+        override fields, e.g. ``"adaptive,target=0.5,mid=true"`` or
+        ``"threshold=0.02"``.  Keys: ``threshold``, ``target``
+        (target_low_ratio), ``mid`` (ffn_mid), ``cls`` (cls_index).
+        """
+        fields = {}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            if item in _SPOTTING:
+                fields["spotting"] = item
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"tips policy spec {item!r}: expected a spotting mode "
+                    f"in {_SPOTTING} or key=value")
+            key, val = (s.strip() for s in item.split("=", 1))
+            if key == "threshold":
+                fields["threshold"] = float(val)
+            elif key == "target":
+                fields["target_low_ratio"] = float(val)
+            elif key == "mid":
+                if val.lower() not in ("true", "false"):
+                    raise ValueError(
+                        f"tips policy spec: mid={val!r} (expected true or "
+                        f"false)")
+                fields["ffn_mid"] = val.lower() == "true"
+            elif key == "cls":
+                fields["cls_index"] = int(val)
+            elif key == "spotting":
+                fields["spotting"] = val
+            else:
+                raise ValueError(
+                    f"tips policy spec: unknown key {key!r} (expected "
+                    f"threshold, target, mid, cls or spotting)")
+        return cls(**fields)
+
+    # -- views -----------------------------------------------------------
+    def describe(self) -> dict:
+        """JSON-friendly view for serving metrics / benchmark records."""
+        return {
+            "spotting": self.spotting,
+            "threshold": self.threshold,
+            "target_low_ratio": self.target_low_ratio,
+            "ffn_mid": self.ffn_mid,
+            "cls_index": self.cls_index,
+        }
+
+
+def spot_cas(cas, policy: PrecisionPolicy) -> tips.TIPSResult:
+    """Importance spotting from head-averaged CAS per the policy.
+
+    ``cas``: (..., Tq) CLS attention score per query (already averaged over
+    heads — both attention implementations produce this identically, so
+    spotting downstream of it is implementation-agnostic and reference-vs-
+    fused parity reduces to CAS parity).
+
+    ``fixed``: important <=> CAS < threshold.  ``adaptive``: important <=>
+    CAS < the sample's ``1 - target_low_ratio`` CAS quantile — per sample
+    (token-axis reduction only), so batch composition never changes a
+    sample's precision map and row slicing (``stats_rows``) commutes.
+    """
+    if policy.spotting == "adaptive":
+        thr = jnp.quantile(cas, 1.0 - policy.target_low_ratio,
+                           axis=-1, keepdims=True)
+        important = cas < thr
+    else:
+        important = cas < policy.threshold
+    low_ratio = 1.0 - jnp.mean(important.astype(jnp.float32))
+    return tips.TIPSResult(important=important, cas=cas,
+                           low_precision_ratio=low_ratio)

@@ -42,13 +42,18 @@ def quantize_act(x: jax.Array, bits: int = ACT_BITS_HIGH,
 
     Activations after the non-negative nonlinearity path (paper feeds
     unsigned INT12 into the PE).  Negative inputs are clipped at 0, matching
-    an unsigned datapath.
+    an unsigned datapath — and for the same reason the scale comes from the
+    POSITIVE range only (``max(x, 0)``): a large negative pre-activation
+    can never be represented, so letting it inflate ``amax`` (as the seed's
+    ``|x|`` reduction did) just wastes INT12/INT6 codes on headroom no
+    value occupies and coarsens every representable positive.
     """
     qmax = (1 << bits) - 1
+    pos = jnp.maximum(x, 0.0)
     if axis is None:
-        amax = jnp.max(jnp.abs(x))
+        amax = jnp.max(pos)
     else:
-        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+        amax = jnp.max(pos, axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / qmax
     q = jnp.clip(jnp.round(x / scale), 0, qmax).astype(jnp.int32)
     return QTensor(q, scale.astype(jnp.float32))

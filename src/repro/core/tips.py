@@ -84,7 +84,10 @@ def apply_precision_mask(x: jax.Array, important: jax.Array,
 
     imp = jnp.logical_or(important, jnp.logical_not(active))
     axes = tuple(range(1, x.ndim))
-    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    # unsigned grid: the scale spans the positive range only (negatives
+    # clip to 0 in quant.mixed_precision_quantize — same rationale as
+    # quant.quantize_act)
+    amax = jnp.max(jnp.maximum(x, 0.0), axis=axes, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / quant.ACT_HIGH_MAX
     q = quant.mixed_precision_quantize(x, imp, scale=scale)
     y = (q.values.astype(jnp.float32) * q.scale).astype(x.dtype)

@@ -86,16 +86,25 @@ class DiffusionEngine:
     the UNet's per-op kernel routing — e.g. ``KernelPolicy.fused()`` runs
     self-attention through the blocked Pallas kernel so the score matrix
     never materializes; stats stay bit-identical to the reference policy.
+    ``precision_policy`` (a ``repro.core.precision.PrecisionPolicy``)
+    overrides the UNet's TIPS/DBSC precision runtime; both policies are
+    part of the executable-cache key, so changing either on a live engine
+    (``set_precision``) retraces instead of reusing a stale executable.
     ``mesh`` switches on data-parallel sharded execution (see module
     docstring); ``None`` keeps the seed single-device behaviour untouched.
     """
 
-    def __init__(self, cfg, key=None, kernel_policy=None, mesh=None):
+    def __init__(self, cfg, key=None, kernel_policy=None, mesh=None,
+                 precision_policy=None):
         if kernel_policy is not None:
             # route the UNet hot path per the policy (kernels.dispatch)
             cfg = dataclasses.replace(
                 cfg, unet=dataclasses.replace(cfg.unet,
                                               kernel_policy=kernel_policy))
+        if precision_policy is not None:
+            cfg = dataclasses.replace(
+                cfg, unet=dataclasses.replace(cfg.unet,
+                                              precision=precision_policy))
         self.cfg = cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         k1, k2, k3 = jax.random.split(key, 3)
@@ -159,9 +168,25 @@ class DiffusionEngine:
         images = decode(self.vae_params, latents, cfg.vae)
         return images, latents, stats
 
+    def set_precision(self, policy) -> "DiffusionEngine":
+        """Switch the TIPS/DBSC precision runtime on a live engine.
+
+        The policy participates in the executable-cache key, so the next
+        ``generate`` retraces against the new policy; executables compiled
+        for the previous policy stay cached under their own key.
+        """
+        self.cfg = dataclasses.replace(
+            self.cfg, unet=dataclasses.replace(self.cfg.unet,
+                                               precision=policy))
+        return self
+
     def _get_compiled(self, batch: int, use_cfg: bool,
                       stats_rows: Optional[int] = None):
-        key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh))
+        # positions 0-3 are load-bearing (tests introspect them); the two
+        # policy objects are appended so a policy change retraces
+        key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh),
+               self.cfg.unet.effective_kernel_policy(),
+               self.cfg.unet.effective_precision())
         fn = self._compiled.get(key)
         if fn is None:
             if use_cfg:

@@ -42,6 +42,12 @@ class LedgerOptions:
     sas_ratio: Optional[dict] = None
     # measured fraction of tokens at INT6 in the FFN this iteration
     tips_low_ratio: float = 0.0
+    # whether the TIPS mask covers the second FFN matmul too (the paper's
+    # "INT12 through the whole FFN stack" reading, and this ledger's
+    # historical accounting).  The functional datapath exposes the same
+    # switch as PrecisionPolicy.ffn_mid; energy_report passes it through so
+    # the MAC precision split matches what the datapath actually does.
+    tips_mid: bool = True
     batch: int = 1
 
     def sas_factor(self, res: int) -> float:
@@ -107,8 +113,15 @@ def _transformer_traffic(tag, res, c, cfg: UNetConfig,
     ))
 
     # --- FFN (GEGLU) with TIPS mixed precision ---
-    ffn_macs = t * (2 * dff * c + dff * c)        # geglu up(2f) + down
+    # The GEGLU runs as one fused layer (mid activations stay on-chip, so
+    # there is no mid byte term); the MAC precision split is per matmul:
+    # the up projection always follows the TIPS row mask, the down
+    # projection (ff_out) only when the datapath's mask coverage extends
+    # to it (``tips_mid`` <-> PrecisionPolicy.ffn_mid).
+    macs_up = t * 2 * dff * c                     # geglu up (2f)
+    macs_down = t * dff * c                       # down (ff_out)
     low = opts.tips_low_ratio if opts.tips else 0.0
+    low_down = low if opts.tips_mid else 0.0
     ffn_w = 2 * dff * c + dff * c
     # TIPS also halves the *activation* bytes of INT6 rows (12 -> 6 bits)
     act_in = t * c * (1.0 - 0.5 * low) * ACT_BYTES
@@ -117,8 +130,8 @@ def _transformer_traffic(tag, res, c, cfg: UNetConfig,
         weight_bytes=ffn_w * WEIGHT_BYTES,
         act_in_bytes=act_in,
         act_out_bytes=t * c * ACT_BYTES,
-        macs_high=ffn_macs * (1.0 - low),
-        macs_low=ffn_macs * low,
+        macs_high=macs_up * (1.0 - low) + macs_down * (1.0 - low_down),
+        macs_low=macs_up * low + macs_down * low_down,
     ))
     return out
 

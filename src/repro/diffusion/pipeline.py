@@ -217,6 +217,7 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
                 f"stats trajectory has {len(s)} iterations, config says {n}")
 
     geom = UNetConfig() if full_geometry else cfg.unet
+    precision = cfg.unet.effective_precision()
     geom_res = sorted({geom.latent_size >> s
                        for s, a in enumerate(geom.down_attn) if a},
                       reverse=True)
@@ -242,6 +243,8 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
             tips=cfg.unet.tips and i < cfg.ddim.tips_active_iters,
             sas_ratio=remap(sas_ratio),
             tips_low_ratio=tnum / max(tden, 1e-12),
+            # MAC split mirrors the datapath's actual FFN mask coverage
+            tips_mid=precision.ffn_mid,
         ))
     baseline_opts = [L.LedgerOptions()] * n
     return PipelineEnergyReport(

@@ -34,7 +34,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import cross_attention_tips
+from repro.core.precision import PrecisionPolicy
 from repro.diffusion.stats import UNetStats, attn_layer_order
 from repro.kernels import dispatch
 from repro.kernels.dispatch import KernelPolicy
@@ -66,13 +66,20 @@ class UNetConfig:
     # by effective_kernel_policy() — prefer setting kernel_policy directly
     use_dbsc_kernel: bool = False
     pssa_threshold: float = 1.0 / 8192.0
+    # legacy fixed CAS threshold; folded into `precision` by
+    # effective_precision() — prefer setting the policy directly
     tips_threshold: float = 0.05
     # route PSSA accounting through the seed's materializing reference
     # implementation (benchmark baseline / oracle; see core.pssa)
     pssa_stats_reference: bool = False
     # per-op kernel routing (repro.kernels.dispatch): which implementation
-    # self-attention / FFN / bitmap use, interpret auto-selection, blocks
+    # self-attention / cross-attention / FFN / bitmap use, interpret
+    # auto-selection, blocks
     kernel_policy: KernelPolicy = KernelPolicy()
+    # TIPS/DBSC precision runtime (repro.core.precision): spotting mode,
+    # thresholds, second-matmul coverage — the single source of precision
+    # truth the engine keys its executable cache on
+    precision: PrecisionPolicy = PrecisionPolicy()
 
     dtype: str = "float32"
 
@@ -85,6 +92,22 @@ class UNetConfig:
         pol = self.kernel_policy
         if self.use_dbsc_kernel and pol.ffn == "reference":
             pol = dataclasses.replace(pol, ffn="dbsc")
+        return pol
+
+    def effective_precision(self) -> PrecisionPolicy:
+        """``precision`` with the legacy ``tips_threshold`` folded in.
+
+        A non-default ``tips_threshold`` on an otherwise-default
+        fixed-spotting policy overrides the policy threshold (mirrors the
+        ``use_dbsc_kernel`` fold); an explicitly-configured policy wins.
+        """
+        pol = self.precision
+        legacy_default = next(f.default for f in dataclasses.fields(self)
+                              if f.name == "tips_threshold")
+        if (self.tips_threshold != legacy_default
+                and pol.spotting == "fixed"
+                and pol.threshold == PrecisionPolicy().threshold):
+            pol = dataclasses.replace(pol, threshold=self.tips_threshold)
         return pol
 
     def smoke(self) -> "UNetConfig":
@@ -304,12 +327,14 @@ def _merge_heads(x):
 
 def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                        stats_rows=None, dup_after_self: bool = False,
-                       policy: KernelPolicy | None = None):
+                       policy: KernelPolicy | None = None,
+                       precision: PrecisionPolicy | None = None):
     """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult).
 
     ``policy`` selects the per-op kernel implementation (reference vs
-    Pallas) via ``repro.kernels.dispatch``; None falls back to the config's
-    effective policy.
+    Pallas) via ``repro.kernels.dispatch``; ``precision`` the TIPS
+    spotting mode / FFN coverage; None falls back to the config's
+    effective policies.
 
     ``stats_rows`` (static) restricts the returned stats to the first N
     batch rows — the cond half under a fused-CFG batch.
@@ -328,6 +353,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     heads = cfg.num_heads
     if policy is None:
         policy = cfg.effective_kernel_policy()
+    if precision is None:
+        precision = cfg.effective_precision()
 
     h = group_norm(x2d, p["norm_in"]["scale"], p["norm_in"]["bias"],
                    cfg.groups)
@@ -362,8 +389,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     q = _attn_heads(hn, p["ca_q"]["w"], heads)
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
     vt = _attn_heads(context, p["ca_v"]["w"], heads)
-    ca = cross_attention_tips(q, kt, vt, threshold=cfg.tips_threshold,
-                              stats_rows=stats_rows)
+    ca = dispatch.cross_attention(policy, q, kt, vt, precision=precision,
+                                  stats_rows=stats_rows)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
                             p["ca_o"]["w"]) + p["ca_o"]["b"])
 
@@ -375,7 +402,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                    jnp.logical_not(tips_active))
     else:
         important = None
-    h = resid + dispatch.ffn_geglu(policy, hn, p, important)
+    h = resid + dispatch.ffn_geglu(policy, hn, p, important,
+                                   precision=precision)
 
     h = jnp.einsum("btc,cd->btd", h, p["proj_out"]["w"]) + p["proj_out"]["b"]
     return x2d + h.reshape(b, hgt, wid, c), sa.stats, ca.tips_result
@@ -417,6 +445,7 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     tips_stats: list = []
     tips_active = jnp.asarray(tips_active)
     policy = cfg.effective_kernel_policy()
+    precision = cfg.effective_precision()
     needs_dup = cfg_dup
     if cfg_dup:
         assert context.shape[0] == 2 * latents.shape[0], \
@@ -432,7 +461,7 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
         nonlocal temb, needs_dup
         h, sa, ca = _transformer_block(h, bp, context, cfg, tips_active,
                                        stats_rows, dup_after_self=needs_dup,
-                                       policy=policy)
+                                       policy=policy, precision=precision)
         if needs_dup:
             # downstream resnets now see [cond | uncond] rows
             temb = jnp.concatenate([temb, temb], axis=0)

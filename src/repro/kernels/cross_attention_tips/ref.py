@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the cross-attention TIPS kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_attention_tips_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                             cls_index: int = 0):
+    """(BH, Tq, d) x (BH, Tk, d) -> (out, cas): materializing reference.
+
+    Builds the full (BH, Tq, Tk) probability tensor and reads its CLS
+    column — the dataflow the blocked kernel avoids.  Same arithmetic
+    order as ``core.attention.cross_attention_tips``.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(float(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, v)
+    return out, p[..., cls_index]

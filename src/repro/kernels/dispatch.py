@@ -11,9 +11,10 @@ select reference vs. fused per-op with one config knob instead of scattered
 
 Ops and implementations (``DISPATCH_TABLE``):
 
-  self_attention  reference | fused    PSSA-pruned self-attention + stats
-  ffn             reference | dbsc     GEGLU FFN (TIPS mixed precision)
-  bitmap          reference | kernel   PSXU bitmap / patch-XOR / popcount
+  self_attention   reference | fused    PSSA-pruned self-attention + stats
+  cross_attention  reference | fused    text cross-attention + TIPS CAS
+  ffn              reference | dbsc     GEGLU FFN (TIPS mixed precision)
+  bitmap           reference | kernel   PSXU bitmap / patch-XOR / popcount
 
 ``interpret=None`` (the default) resolves per backend at trace time —
 interpret mode only where Pallas has no real lowering (CPU) — so the same
@@ -37,6 +38,7 @@ from repro.kernels.runtime import resolve_interpret
 
 _CHOICES = {
     "self_attention": ("reference", "fused"),
+    "cross_attention": ("reference", "fused"),
     "ffn": ("reference", "dbsc"),
     "bitmap": ("reference", "kernel"),
 }
@@ -53,11 +55,13 @@ class KernelPolicy:
     geometry is legal).
     """
     self_attention: str = "reference"
+    cross_attention: str = "reference"
     ffn: str = "reference"
     bitmap: str = "reference"
     interpret: bool | None = None
     attn_block_q: int = 128
     attn_block_k: int = 128
+    cross_block_q: int = 128
     bitmap_block_rows: int = 64
 
     def __post_init__(self):
@@ -75,14 +79,16 @@ class KernelPolicy:
 
     @classmethod
     def fused(cls) -> "KernelPolicy":
-        """Blocked Pallas attention + PSXU kernel; the SAS never hits HBM.
+        """Blocked Pallas attention (self + cross) + PSXU kernel: neither
+        the SAS nor the cross-attention probability tensor ever hits HBM.
 
         The FFN stays on the float reference — the DBSC integer datapath is
         a *precision* feature (INT12/INT6), selected per-op via ``ffn``
         (or the legacy ``UNetConfig.use_dbsc_kernel``), not a prerequisite
         of the fused memory path.
         """
-        return cls(self_attention="fused", bitmap="kernel")
+        return cls(self_attention="fused", cross_attention="fused",
+                   bitmap="kernel")
 
     @classmethod
     def parse(cls, spec: str) -> "KernelPolicy":
@@ -134,19 +140,41 @@ class KernelPolicy:
 # ----------------------------------------------------------------------------
 # Dispatch targets
 # ----------------------------------------------------------------------------
-def _ffn_reference(policy: KernelPolicy, hn, p, important):
-    """GEGLU FFN, float matmuls; TIPS rows fake-quantized on entry."""
+def _ffn_mid_covered(precision, important):
+    """Whether the TIPS mask also covers the second FFN matmul (ff_out)."""
+    return (important is not None and precision is not None
+            and precision.ffn_mid)
+
+
+def _ffn_reference(policy: KernelPolicy, hn, p, important, precision=None):
+    """GEGLU FFN, float matmuls; TIPS rows fake-quantized on entry.
+
+    With ``precision.ffn_mid`` the mid activations (GEGLU output) of
+    unimportant rows also round-trip the INT6 grid before the second
+    matmul — the paper's "INT12 through the whole following FFN stack"
+    coverage.
+    """
     if important is not None:
         hn = tips.apply_precision_mask(hn, important)
     gu = jnp.einsum("btc,cd->btd", hn, p["ff_geglu"]["w"]) \
         + p["ff_geglu"]["b"]
     g, u = jnp.split(gu, 2, axis=-1)
-    return jnp.einsum("btd,dc->btc", jax.nn.gelu(g) * u,
+    mid = jax.nn.gelu(g) * u
+    if _ffn_mid_covered(precision, important):
+        mid = tips.apply_precision_mask(mid, important)
+    return jnp.einsum("btd,dc->btc", mid,
                       p["ff_out"]["w"]) + p["ff_out"]["b"]
 
 
-def _ffn_dbsc(policy: KernelPolicy, hn, p, important):
-    """Both FFN matmuls through the DBSC bit-slice integer datapath."""
+def _ffn_dbsc(policy: KernelPolicy, hn, p, important, precision=None):
+    """Both FFN matmuls through the DBSC bit-slice integer datapath.
+
+    ``precision.ffn_mid`` extends the TIPS row mask to the second matmul:
+    unimportant rows' mid activations enter the bit-slice PEs on the INT6
+    grid (low 6 bits dropped on the shared scale), matching the
+    reference's mid-activation fake-quant and the ledger's
+    ``LedgerOptions.tips_mid`` MAC split.
+    """
     b, t, c = hn.shape
     bt = b * t
     imp_flat = important.reshape(bt) if important is not None else None
@@ -156,7 +184,9 @@ def _ffn_dbsc(policy: KernelPolicy, hn, p, important):
         + p["ff_geglu"]["b"]
     g, u = jnp.split(gu, 2, axis=-1)
     mid = jax.nn.gelu(g) * u
+    mid_imp = imp_flat if _ffn_mid_covered(precision, important) else None
     return bitslice_matmul(mid.reshape(bt, mid.shape[-1]), p["ff_out"]["w"],
+                           important=mid_imp,
                            interpret=policy.interpret).reshape(b, t, c) \
         + p["ff_out"]["b"]
 
@@ -165,6 +195,10 @@ DISPATCH_TABLE = {
     "self_attention": {
         "reference": attention.self_attention_pssa,
         "fused": attention.self_attention_pssa_fused,
+    },
+    "cross_attention": {
+        "reference": attention.cross_attention_tips,
+        "fused": attention.cross_attention_tips_fused,
     },
     "ffn": {
         "reference": _ffn_reference,
@@ -206,13 +240,35 @@ def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
         reference_stats=reference_stats)
 
 
-def ffn_geglu(policy: KernelPolicy, hn, p, important):
+def cross_attention(policy: KernelPolicy, q, k_text, v_text, *,
+                    precision, stats_rows: int | None = None
+                    ) -> attention.CrossAttnOut:
+    """Cross-attention + TIPS spotting via the policy's implementation.
+
+    ``precision`` (a ``core.precision.PrecisionPolicy``) drives the
+    spotting mode; it runs on the head-averaged CAS identically for both
+    implementations, so routing never changes a precision decision (the
+    importance mask / low ratio / ledger terms are bit-identical across
+    ``reference`` and ``fused`` — DESIGN.md §7).
+    """
+    if policy.cross_attention == "fused":
+        return attention.cross_attention_tips_fused(
+            q, k_text, v_text, precision=precision, stats_rows=stats_rows,
+            interpret=policy.interpret, bq=policy.cross_block_q)
+    return attention.cross_attention_tips(
+        q, k_text, v_text, precision=precision, stats_rows=stats_rows)
+
+
+def ffn_geglu(policy: KernelPolicy, hn, p, important, precision=None):
     """(B, T, C) normed hidden -> (B, T, C) FFN output (pre-residual).
 
     ``p`` carries ``ff_geglu``/``ff_out`` weights; ``important`` is the
-    TIPS row mask (None -> all rows full precision).
+    TIPS row mask (None -> all rows full precision); ``precision`` (a
+    ``PrecisionPolicy``) extends the mask to the second matmul when its
+    ``ffn_mid`` flag is set.
     """
-    return DISPATCH_TABLE["ffn"][policy.ffn](policy, hn, p, important)
+    return DISPATCH_TABLE["ffn"][policy.ffn](policy, hn, p, important,
+                                             precision)
 
 
 def patch_bitmap(policy: KernelPolicy, sas, patch: int, threshold: float):

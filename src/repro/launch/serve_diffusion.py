@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
-      [--kernels fused] [--mesh 4] [--ledger]
+      [--kernels fused] [--tips adaptive] [--mesh 4] [--ledger]
 
 Micro-batching: incoming prompts are queued and packed into fixed-size
 micro-batches (padding the tail with repeats), each served by ONE compiled
@@ -30,9 +30,16 @@ single host read.
 
 ``--kernels`` selects the per-op kernel routing (``KernelPolicy``):
 ``reference`` (materializing pure-JAX), ``fused`` (blocked Pallas
-attention — the SAS never materializes; stats bit-identical), or per-op
+attention, self AND cross — neither the SAS nor the cross-attention
+probability tensor materializes; stats bit-identical), or per-op
 overrides like ``self_attention=fused,ffn=dbsc``.  Interpret mode is
 auto-selected per backend, so the same flag works on CPU and TPU.
+
+``--tips`` selects the precision runtime (``PrecisionPolicy``): ``fixed``
+(the silicon's predefined CAS threshold), ``adaptive`` (per-sample
+quantile spotting realizing a target INT6 ratio), or field overrides like
+``adaptive,target=0.5,mid=true``.  The ``--ledger`` report names the
+active policy and its per-iteration realized low-precision ratios.
 """
 from __future__ import annotations
 
@@ -44,15 +51,18 @@ import time
 
 
 def make_config(args):
+    from repro.core.precision import PrecisionPolicy
     from repro.diffusion.pipeline import PipelineConfig
     from repro.diffusion.sampler import DDIMConfig
     from repro.kernels.dispatch import KernelPolicy
 
     cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
     policy = KernelPolicy.parse(args.kernels)
+    precision = PrecisionPolicy.parse(args.tips)
     return dataclasses.replace(
         cfg,
-        unet=dataclasses.replace(cfg.unet, kernel_policy=policy),
+        unet=dataclasses.replace(cfg.unet, kernel_policy=policy,
+                                 precision=precision),
         ddim=DDIMConfig(
             num_inference_steps=args.steps,
             guidance_scale=args.guidance,
@@ -143,6 +153,7 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
     metrics = {
         "requests": int(requests.shape[0]),
         "kernel_policy": cfg.unet.effective_kernel_policy().describe(),
+        "precision_policy": cfg.unet.effective_precision().describe(),
         "micro_batch": micro_batch,
         "mesh": None if mesh is None else {
             "dp": dp,
@@ -165,6 +176,9 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
         rep = energy_report_multi(cfg, fetched)
         metrics["energy"] = {k: float(v) for k, v in rep.summary().items()}
         ratios = aggregated_tips_ratios_per_iter(cfg, fetched)
+        # realized (not target) INT6 row fraction, per DDIM iteration —
+        # the number the active PrecisionPolicy actually delivered
+        metrics["tips_low_ratio_per_iter"] = [float(r) for r in ratios]
         metrics["tips_workload_low_fraction"] = float(
             tips.workload_low_precision_fraction(jnp.asarray(ratios),
                                                  ddim=cfg.ddim))
@@ -190,6 +204,10 @@ def main():
                     help="kernel policy: 'reference', 'fused', or per-op "
                          "overrides like 'self_attention=fused,ffn=dbsc' "
                          "(see repro.kernels.dispatch.KernelPolicy)")
+    ap.add_argument("--tips", default="fixed",
+                    help="precision policy: 'fixed', 'adaptive', or field "
+                         "overrides like 'adaptive,target=0.5,mid=true' "
+                         "(see repro.core.precision.PrecisionPolicy)")
     args = ap.parse_args()
     if args.steps < 1:
         ap.error("--steps must be >= 1")
@@ -217,6 +235,7 @@ def main():
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
           f"micro-batch {args.micro_batch}, kernels {args.kernels}, "
+          f"tips {args.tips}, "
           f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
     reqs = synthetic_requests(cfg, args.requests)
     metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
