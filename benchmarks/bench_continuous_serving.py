@@ -1,0 +1,128 @@
+"""BENCH — Continuous batching vs fixed micro-batching under bursty traffic.
+
+A request arriving while a fixed micro-batch is mid-scan waits the batch's
+whole generation before it can start, so its enqueue->image latency
+approaches 2x the generation time.  The slot-based continuous scheduler
+(DESIGN.md §8) admits it at the next STEP boundary instead.  This bench
+drives the SAME bursty arrival trace through both schedulers on the same
+engine config and records enqueue->image latency percentiles, goodput, and
+the two bit-identity contracts (per-request images; energy headline from
+the integer accumulator vs the one-shot batch aggregation).
+
+The burst gap is calibrated against the measured one-shot generation wall
+so the trace stresses the same regime on any machine: bursts land
+mid-generation for the fixed scheduler while the queue stays deep enough
+that continuous slots run near-full occupancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def run() -> dict:
+    import jax
+
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.diffusion.pipeline import PipelineConfig
+    from repro.diffusion.sampler import DDIMConfig
+    from repro.launch.scheduler import (ContinuousScheduler,
+                                        FixedBatchScheduler, apply_trace,
+                                        bursty_trace, make_requests)
+
+    steps = 5
+    n_requests = 16
+    slots = 4
+    burst = 2
+
+    # paper-default thresholds: the committed headline must be
+    # reproducible on ANY machine (the bench-regression gate compares it
+    # exactly), so the bench runs the saturation-stable operating point;
+    # the knife-edge input-sensitivity proofs live in
+    # tests/test_continuous.py where reference and candidate run on the
+    # same host
+    cfg = PipelineConfig.smoke()
+    cfg = dataclasses.replace(
+        cfg,
+        ddim=DDIMConfig(num_inference_steps=steps, guidance_scale=1.0,
+                        tips_active_iters=max(1, steps * 20 // 25)))
+
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    cont = ContinuousScheduler(eng, num_slots=slots)
+    fixed = FixedBatchScheduler(eng, micro_batch=slots)
+    compile_s = cont.warmup() + fixed.warmup()
+
+    # calibrate: one generation's wall at the serving batch size
+    out = eng.generate(
+        jax.random.randint(jax.random.PRNGKey(1),
+                           (slots, cfg.text.max_len), 0,
+                           cfg.text.vocab_size), jax.random.PRNGKey(2))
+    del out
+    gen_wall = eng.last_wall_s
+    # half-batch bursts spaced just under one generation: every burst
+    # leaves the fixed scheduler short of a full batch, so each request
+    # pays wait-to-fill (up to a full gap) on top of wait-for-engine and
+    # the generation itself; the slot runtime admits the same burst at
+    # the next step boundary and its tail service is a fraction of a
+    # generation, so it wins BOTH tail latency and makespan-goodput
+    gap_s = 0.9 * gen_wall
+
+    def fresh_requests():
+        reqs = make_requests(cfg, n_requests, seed=7)
+        return apply_trace(reqs, bursty_trace(n_requests, burst, gap_s))
+
+    reqs_fixed = fresh_requests()
+    m_fixed = fixed.run(reqs_fixed, ledger=True)
+    reqs_cont = fresh_requests()
+    m_cont = cont.run(reqs_cont, ledger=True)
+    m_cont.pop("state")
+
+    images_bit_identical = all(
+        np.array_equal(rc.image, rf.image)
+        for rc, rf in zip(reqs_cont, reqs_fixed))
+    stats_bit_identical = (m_cont["energy"] == m_fixed["energy"])
+
+    def view(m):
+        return {
+            "latency_s": m["latency_s"],
+            "queue_wait_s": m["queue_wait_s"],
+            "goodput_imgs_per_s": m["goodput_imgs_per_s"],
+            "makespan_s": m["makespan_s"],
+        }
+
+    p95_fixed = m_fixed["latency_s"]["p95"]
+    p95_cont = m_cont["latency_s"]["p95"]
+    goodput_ratio = (m_cont["goodput_imgs_per_s"]
+                     / m_fixed["goodput_imgs_per_s"])
+    return {
+        "config": {"steps": steps, "requests": n_requests, "slots": slots,
+                   "micro_batch": slots, "burst": burst,
+                   "latent": cfg.unet.latent_size},
+        "trace": {"kind": "bursty", "burst": burst, "gap_s": gap_s,
+                  "gen_wall_s": gen_wall},
+        "compile_s": compile_s,
+        "fixed_micro_batch": view(m_fixed),
+        "continuous": {**view(m_cont),
+                       "mean_occupancy": m_cont["mean_occupancy"],
+                       "engine_steps": m_cont["engine_steps"]},
+        "p95_latency_improvement": p95_fixed / max(p95_cont, 1e-9),
+        "p50_latency_improvement": (m_fixed["latency_s"]["p50"]
+                                    / max(m_cont["latency_s"]["p50"], 1e-9)),
+        "goodput_ratio_vs_fixed": goodput_ratio,
+        "images_bit_identical": images_bit_identical,
+        "stats_bit_identical": stats_bit_identical,
+        "energy_headline_mj_per_iter": {
+            "continuous": m_cont["energy"]["mj_per_iter_with_ema"],
+            "fixed": m_fixed["energy"]["mj_per_iter_with_ema"],
+        },
+        "meets_target": bool(p95_fixed / max(p95_cont, 1e-9) > 1.0
+                             and goodput_ratio >= 0.97
+                             and images_bit_identical
+                             and stats_bit_identical),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,173 @@
+"""Bench-regression gate: re-run smoke benches, diff against committed JSON.
+
+The committed ``benchmarks/results/*.json`` are the repo's performance
+memory — without a gate they rot silently: a refactor can break the
+stats-parity contract or shift the energy headline and nothing fails until
+a human re-reads the numbers.  This script re-runs benches through the
+``benchmarks/run.py`` registry and classifies every leaf of the fresh
+record against the committed one:
+
+  hard-fail (exact equality required)
+    * ``*_bit_identical`` booleans — the kernel/sharding/serving parity
+      contracts.  A committed ``false`` stays allowed (e.g. dp>2 image
+      tiling); a ``true`` may never regress.
+    * energy-ledger numbers (any leaf under an ``energy*`` key, or named
+      ``mj_per_iter*`` / ``*ema_reduction*``) — integer-counter exactness
+      means these are deterministic on a fixed jax/platform; ANY drift is
+      an accounting change and must ship with regenerated results.
+
+  tolerance band (ratio within [1/tol, tol], default tol=4)
+    * wall-clock-derived leaves (``*wall*``, ``imgs_per_s``, ``speedup``,
+      ``latency``, ``goodput``, ``scaling``, ...) — CI machines differ
+      from the box that committed the numbers; only collapse-scale drift
+      fails.
+
+  structure (presence) — every committed leaf must exist in the fresh
+    record and vice versa, so a bench schema change forces regenerated
+    results; all other values are informational.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/check_regression.py [--only NAME]...
+      [--wall-tolerance 4.0]
+  PYTHONPATH=src:. python benchmarks/run.py --check      # same default set
+
+The default set covers the fast smoke benches; ``--only sharded_engine``
+adds the (slower) dp-sweep when wanted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# fast enough for a CI gate; sharded_engine's fake-device dp sweep is
+# opt-in via --only
+DEFAULT_BENCHES = ("engine", "fused_attention", "fused_cross_attention",
+                   "continuous_serving")
+
+_WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
+                 "goodput", "makespan", "scaling", "efficiency",
+                 "peak_temp", "occupancy", "queue_wait", "improvement",
+                 "ratio_vs", "step_s")
+_HEADLINE_MARKERS = ("mj_per_iter", "ema_reduction", "ema_gb_per_iter")
+
+
+def _is_wall_key(key: str) -> bool:
+    return any(m in key for m in _WALL_MARKERS)
+
+
+def _is_headline(path: str, key: str) -> bool:
+    if any(m in key for m in _HEADLINE_MARKERS):
+        return True
+    return any(part.startswith("energy")
+               for part in path.split(".") if part)
+
+
+def _leaves(rec, path=""):
+    if isinstance(rec, dict):
+        for k, v in rec.items():
+            yield from _leaves(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(rec, list):
+        for i, v in enumerate(rec):
+            yield from _leaves(v, f"{path}[{i}]")
+    else:
+        yield path, rec
+
+
+def compare_records(name: str, committed, fresh,
+                    wall_tolerance: float = 4.0) -> list:
+    """Classify every leaf; return a list of problem strings (empty = ok)."""
+    problems = []
+    com = dict(_leaves(committed))
+    new = dict(_leaves(fresh))
+    for path in com.keys() - new.keys():
+        problems.append(f"{name}: {path} missing from fresh run "
+                        "(bench schema drifted — regenerate results)")
+    for path in new.keys() - com.keys():
+        problems.append(f"{name}: {path} not in committed results "
+                        "(bench schema drifted — regenerate results)")
+    for path in com.keys() & new.keys():
+        c, f = com[path], new[path]
+        key = path.rsplit(".", 1)[-1]
+        if key.endswith("_bit_identical"):
+            if bool(f) != bool(c):
+                problems.append(
+                    f"{name}: {path} flipped {c} -> {f} (parity contract)")
+        elif isinstance(c, bool) or isinstance(f, bool):
+            continue                       # other booleans: informational
+        elif isinstance(c, (int, float)) and isinstance(f, (int, float)):
+            if _is_wall_key(key):
+                lo, hi = min(abs(c), abs(f)), max(abs(c), abs(f))
+                if hi > 0 and (lo == 0 or hi / lo > wall_tolerance):
+                    problems.append(
+                        f"{name}: {path} wall-clock ratio {c} -> {f} "
+                        f"outside x{wall_tolerance} band")
+            elif _is_headline(path, key):
+                same = (f == c) or (math.isnan(f) and math.isnan(c))
+                if not same:
+                    problems.append(
+                        f"{name}: {path} energy headline drifted "
+                        f"{c!r} -> {f!r} (must be bit-identical)")
+        # strings / None / mixed types: presence-checked only
+    return problems
+
+
+def check(names, wall_tolerance: float = 4.0, rerun: bool = True) -> int:
+    """Run the gate for ``names``; prints a report, returns the exit code."""
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    import benchmarks.run as R
+
+    failures = []
+    for name in names:
+        if name not in R.BENCHES:
+            failures.append(f"{name}: not in the bench registry "
+                            f"{list(R.BENCHES)}")
+            continue
+        committed_path = os.path.join(RESULTS, f"bench_{name}.json")
+        if not os.path.exists(committed_path):
+            failures.append(f"{name}: no committed results at "
+                            f"{committed_path}")
+            continue
+        with open(committed_path) as fh:
+            committed = json.load(fh)
+        print(f"[check_regression] re-running {name} ...", flush=True)
+        fresh = R._runner(name)()
+        # round-trip through JSON so both sides see identical coercions
+        fresh = json.loads(json.dumps(fresh, default=str))
+        probs = compare_records(name, committed, fresh,
+                                wall_tolerance=wall_tolerance)
+        if probs:
+            failures.extend(probs)
+            print(f"[check_regression] {name}: "
+                  f"{len(probs)} problem(s)")
+        else:
+            print(f"[check_regression] {name}: ok")
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:")
+        for p in failures:
+            print(f"  - {p}")
+        return 1
+    print(f"\nbench-regression gate passed for {list(names)}")
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", default=None,
+                    help="bench name to check (repeatable); default: "
+                         f"{DEFAULT_BENCHES}")
+    ap.add_argument("--wall-tolerance", type=float, default=4.0,
+                    help="allowed wall-clock ratio between committed and "
+                         "fresh (CI machines differ; default 4x)")
+    args = ap.parse_args(argv)
+    names = tuple(args.only) if args.only else DEFAULT_BENCHES
+    raise SystemExit(check(names, wall_tolerance=args.wall_tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ BENCHES = {
     "fused_attention": "benchmarks.bench_fused_attention",
     "fused_cross_attention": "benchmarks.bench_fused_cross_attention",
     "sharded_engine": "benchmarks.bench_sharded_engine",
+    "continuous_serving": "benchmarks.bench_continuous_serving",
     "roofline": "benchmarks.roofline",
 }
 
@@ -97,10 +98,19 @@ def main() -> None:
                     help="print the generated section listing and exit")
     ap.add_argument("--only", default=None,
                     help="run a single section by name")
+    ap.add_argument("--check", action="store_true",
+                    help="bench-regression gate: re-run the smoke benches "
+                         "and diff against the committed results "
+                         "(delegates to benchmarks/check_regression.py; "
+                         "combine with --only to gate one section)")
     args = ap.parse_args()
     if args.list:
         print(bench_listing())
         raise SystemExit(0)
+    if args.check:
+        from benchmarks.check_regression import DEFAULT_BENCHES, check
+        names = (args.only,) if args.only is not None else DEFAULT_BENCHES
+        raise SystemExit(check(names))
     names = list(BENCHES)
     if args.only is not None:
         if args.only not in BENCHES:

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Tier-1 test sharding: single source of truth + collection-drift guard.
+
+CI runs the tier-1 suite as two parallel pytest jobs (the known balanced
+chunk split).  The shard file lists live HERE — the workflow asks this
+script for them (``--files A``), so the split cannot silently diverge
+between jobs.  ``--verify`` is the drift guard: it collects the full suite
+and each shard with ``pytest --collect-only`` and fails unless the shard
+union EQUALS the full collection (a new test file that lands in no shard,
+or a file listed twice, breaks the build instead of silently skipping
+tests).
+
+Usage:
+  python scripts/check_shards.py --files A      # print shard A's files
+  python scripts/check_shards.py --verify       # collection-drift guard
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the balanced two-way split (roughly equal wall time on a 2-core runner);
+# every tests/test_*.py file MUST appear in exactly one shard — --verify
+# enforces it against the real collection
+SHARDS = {
+    "A": [
+        "tests/test_archs.py",
+        "tests/test_system.py",
+        "tests/test_train_infra.py",
+        "tests/test_perf_features.py",
+        "tests/test_ssd_kernel.py",
+        "tests/test_sharded_engine.py",
+        "tests/test_continuous.py",
+        "tests/test_serving.py",
+    ],
+    "B": [
+        "tests/test_diffusion.py",
+        "tests/test_engine.py",
+        "tests/test_dispatch.py",
+        "tests/test_precision.py",
+        "tests/test_kernels.py",
+        "tests/test_pssa.py",
+        "tests/test_tips_quant.py",
+        "tests/test_ledger_properties.py",
+    ],
+}
+
+
+def _collect(args: list) -> set:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "--no-header", *args],
+        cwd=ROOT, env=env, capture_output=True, text=True)
+    if r.returncode not in (0, 5):          # 5 = no tests collected
+        print(r.stdout + r.stderr, file=sys.stderr)
+        raise SystemExit(f"pytest --collect-only {args} failed "
+                         f"({r.returncode})")
+    return {line.strip() for line in r.stdout.splitlines()
+            if "::" in line and not line.startswith(("=", "warning"))}
+
+
+def verify() -> int:
+    full = _collect([])
+    union: set = set()
+    overlap_ok = True
+    for name, files in SHARDS.items():
+        got = _collect(files)
+        dup = union & got
+        if dup:
+            overlap_ok = False
+            print(f"shard {name} overlaps another shard on "
+                  f"{len(dup)} test(s), e.g. {sorted(dup)[:3]}")
+        union |= got
+        print(f"shard {name}: {len(got)} tests from {len(files)} files")
+    missing = full - union
+    extra = union - full
+    print(f"full collection: {len(full)} tests; shard union: {len(union)}")
+    if missing:
+        print(f"COLLECTION DRIFT: {len(missing)} test(s) in no shard "
+              f"(add their file to scripts/check_shards.py):")
+        for t in sorted(missing)[:20]:
+            print(f"  - {t}")
+    if extra:
+        print(f"COLLECTION DRIFT: {len(extra)} shard test(s) not in the "
+              f"full collection:")
+        for t in sorted(extra)[:20]:
+            print(f"  - {t}")
+    if missing or extra or not overlap_ok:
+        return 1
+    print("shard union == full collection; shards disjoint — ok")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--files", choices=sorted(SHARDS),
+                   help="print the given shard's file list (one line)")
+    g.add_argument("--verify", action="store_true",
+                   help="fail unless the shard union equals the full "
+                        "pytest collection and shards are disjoint")
+    args = ap.parse_args()
+    if args.files:
+        print(" ".join(SHARDS[args.files]))
+        raise SystemExit(0)
+    raise SystemExit(verify())
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ from repro.kernels.pssa_attention.ops import pssa_attention
 
 class SelfAttnOut(NamedTuple):
     out: jax.Array
-    stats: pssa.PSSAStats
+    stats: pssa.PSSAStats       # PSSARowCounters under ``row_stats``
 
 
 def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -45,7 +45,8 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
                         threshold: float = pssa.DEFAULT_THRESHOLD,
                         prune_scores: bool = True,
                         stats_rows: int | None = None,
-                        reference_stats: bool = False) -> SelfAttnOut:
+                        reference_stats: bool = False,
+                        row_stats: bool = False) -> SelfAttnOut:
     """(B, H, T, d) q/k/v -> (B, H, T, d); scores pruned at `threshold`.
 
     ``stats_rows`` limits the compression accounting to the first N batch
@@ -53,6 +54,12 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
     energy ledger only ever consumes cond-prompt statistics, so skipping
     the uncond half keeps stats bit-identical to a cond-only call while
     halving the accounting cost per step.
+
+    ``row_stats`` keeps the integer counters PER ROW instead of folding
+    them: ``stats`` becomes a ``pssa.PSSARowCounters`` with (B,) leaves —
+    the slot-serving runtime scatters them into per-iteration ledger
+    buckets (rows sit at heterogeneous denoising steps).  Summing rows
+    reproduces the folded counters bit-for-bit.
     """
     d = q.shape[-1]
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d))
@@ -62,9 +69,12 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
     else:
         probs_used = probs
     probs_stat = probs if stats_rows is None else probs[:stats_rows]
-    compress = (pssa.compress_stats_reference if reference_stats
-                else pssa.compress_stats)
-    stats = compress(probs_stat, patch, threshold)
+    if row_stats:
+        stats = pssa.row_counters(probs_stat, patch, threshold)
+    else:
+        compress = (pssa.compress_stats_reference if reference_stats
+                    else pssa.compress_stats)
+        stats = compress(probs_stat, patch, threshold)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs_used, v)
     return SelfAttnOut(out=out, stats=stats)
 
@@ -74,7 +84,8 @@ def self_attention_pssa_fused(q: jax.Array, k: jax.Array, v: jax.Array,
                               threshold: float = pssa.DEFAULT_THRESHOLD,
                               stats_rows: int | None = None,
                               interpret: bool | None = None,
-                              bq: int = 128, bk: int = 128) -> SelfAttnOut:
+                              bq: int = 128, bk: int = 128,
+                              row_stats: bool = False) -> SelfAttnOut:
     """``self_attention_pssa`` through the blocked Pallas kernel.
 
     The (B, H, T, T) score matrix is never materialized: the kernel streams
@@ -95,6 +106,12 @@ def self_attention_pssa_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     rows = b if stats_rows is None else stats_rows
     x64 = bool(jax.config.read("jax_enable_x64"))
     int_dtype = jnp.int64 if x64 else jnp.int32
+    if row_stats:
+        # fold heads + query rows only: (B, H, T) -> (B,) per-row counters
+        stats = pssa.PSSARowCounters(
+            nnz=jnp.sum(nnz_rows[:rows], axis=(1, 2), dtype=int_dtype),
+            ones_xor=jnp.sum(xor_rows[:rows], axis=(1, 2), dtype=int_dtype))
+        return SelfAttnOut(out=out, stats=stats)
     nnz = jnp.sum(nnz_rows[:rows], dtype=int_dtype)
     ones_xor = jnp.sum(xor_rows[:rows], dtype=int_dtype)
     stats = pssa.stats_from_counters(nnz, ones_xor, lead=rows * h,
@@ -104,11 +121,13 @@ def self_attention_pssa_fused(q: jax.Array, k: jax.Array, v: jax.Array,
 
 class CrossAttnOut(NamedTuple):
     out: jax.Array
-    tips_result: tips.TIPSResult   # reported stats (cond rows under CFG)
+    tips_result: tips.TIPSResult   # reported stats (cond rows under CFG);
+    #                                TIPSRowCounters under ``row_stats``
     important_full: jax.Array      # full-batch mask for the FFN precision
 
 
-def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None):
+def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None,
+                    row_stats: bool = False):
     """Shared spotting tail of both cross-attention implementations.
 
     ``cas`` is the head-averaged (B, Tq) CLS score; spotting (fixed or
@@ -118,9 +137,18 @@ def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None):
     importance mask) — with ``stats_rows`` the reported stats cover the
     first N rows only (the cond half under fused CFG), which commutes
     with spotting because both modes decide per sample.
+
+    ``row_stats``: report a ``tips.TIPSRowCounters`` instead — the (B,)
+    integer count of spotted-important tokens per row (slot-serving
+    scatters these into per-iteration ledger buckets).
     """
     spotted = precision_mod.spot_cas(cas, precision)
     important_full = spotted.important
+    if row_stats:
+        imp = (spotted.important if stats_rows is None
+               else spotted.important[:stats_rows])
+        return tips.TIPSRowCounters(
+            important=jnp.sum(imp, axis=-1, dtype=jnp.int32)), important_full
     if stats_rows is not None:
         imp = spotted.important[:stats_rows]
         spotted = tips.TIPSResult(
@@ -147,7 +175,8 @@ def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
                          threshold: float | None = None,
                          cls_index: int = 0,
                          stats_rows: int | None = None,
-                         precision=None) -> CrossAttnOut:
+                         precision=None,
+                         row_stats: bool = False) -> CrossAttnOut:
     """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS.
 
     ``precision`` (a ``core.precision.PrecisionPolicy``) selects the
@@ -163,7 +192,8 @@ def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_text) / jnp.sqrt(float(d))
     probs = jax.nn.softmax(scores, axis=-1)
     cas = jnp.mean(probs[..., :, precision.cls_index], axis=-2)   # (B, Tq)
-    spotted, important_full = _spot_and_slice(cas, precision, stats_rows)
+    spotted, important_full = _spot_and_slice(cas, precision, stats_rows,
+                                              row_stats)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_text)
     return CrossAttnOut(out=out, tips_result=spotted,
                         important_full=important_full)
@@ -176,7 +206,8 @@ def cross_attention_tips_fused(q: jax.Array, k_text: jax.Array,
                                stats_rows: int | None = None,
                                precision=None,
                                interpret: bool | None = None,
-                               bq: int = 128) -> CrossAttnOut:
+                               bq: int = 128,
+                               row_stats: bool = False) -> CrossAttnOut:
     """``cross_attention_tips`` through the blocked Pallas kernel.
 
     The (B, H, Tq, Tk) probability tensor is never materialized: the
@@ -193,6 +224,7 @@ def cross_attention_tips_fused(q: jax.Array, k_text: jax.Array,
                                       cls_index=precision.cls_index,
                                       interpret=interpret, bq=bq)
     cas = jnp.mean(cas_bh, axis=-2)                               # (B, Tq)
-    spotted, important_full = _spot_and_slice(cas, precision, stats_rows)
+    spotted, important_full = _spot_and_slice(cas, precision, stats_rows,
+                                              row_stats)
     return CrossAttnOut(out=out, tips_result=spotted,
                         important_full=important_full)

@@ -169,6 +169,45 @@ def compress_stats(sas: jax.Array, patch: int,
     return _assemble_stats(nnz, ones_xor, sas.shape, patch, value_bits)
 
 
+class PSSARowCounters(NamedTuple):
+    """Per-batch-row integer PSSA counters (continuous-batching stats).
+
+    ``nnz`` / ``ones_xor`` have shape (B,): each row's surviving-score
+    count and patch-XOR bitmap population, heads and query rows folded.
+    Summing any subset of rows reproduces ``compress_stats``' folded
+    counters for that subset EXACTLY (integer addition is associative), so
+    a slot-serving runtime can scatter rows into per-iteration buckets at
+    heterogeneous denoising steps and still assemble byte stats that are
+    bit-identical to a one-shot batch — see ``stats_from_counters``.
+    """
+    nnz: jax.Array
+    ones_xor: jax.Array
+
+
+def row_counters(sas: jax.Array, patch: int,
+                 threshold: float = DEFAULT_THRESHOLD) -> PSSARowCounters:
+    """Per-row integer counters for one SAS of shape (B, ..., Tq, Tk).
+
+    The per-row partition of :func:`compress_stats`' fused counter math:
+    identical pruning/bitmap/XOR arithmetic, reduced over every axis but
+    the leading batch axis.
+    """
+    bm = bitmap(prune(sas, threshold))
+    tk = sas.shape[-1]
+    assert tk % patch == 0, (tk, patch)
+
+    x64 = bool(jax.config.read("jax_enable_x64"))
+    int_dtype = jnp.int64 if x64 else jnp.int32
+
+    r = bm.reshape(*bm.shape[:-1], tk // patch, patch)
+    nnz = jnp.sum(bm, axis=tuple(range(1, bm.ndim)), dtype=int_dtype)
+    first = jnp.sum(r[..., 0, :], axis=tuple(range(1, bm.ndim)),
+                    dtype=int_dtype)
+    delta = jnp.sum(jnp.logical_xor(r[..., 1:, :], r[..., :-1, :]),
+                    axis=tuple(range(1, r.ndim)), dtype=int_dtype)
+    return PSSARowCounters(nnz=nnz, ones_xor=first + delta)
+
+
 def compress_stats_reference(sas: jax.Array, patch: int,
                              threshold: float = DEFAULT_THRESHOLD,
                              value_bits: int = 12) -> PSSAStats:

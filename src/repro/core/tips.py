@@ -33,6 +33,20 @@ class TIPSResult(NamedTuple):
     low_precision_ratio: jax.Array  # scalar in [0, 1]
 
 
+class TIPSRowCounters(NamedTuple):
+    """Per-batch-row integer TIPS accounting (continuous-batching stats).
+
+    ``important`` has shape (B,): the count of spotted-important tokens in
+    each row's CAS (before the tips-active OR — spotting always runs; the
+    activity schedule is applied per iteration by the ledger).  Summing a
+    subset of rows and dividing by ``rows * Tq`` reproduces the folded
+    ``low_precision_ratio`` of that subset exactly whenever the division
+    is exact (power-of-two ``rows * Tq`` — always true for the model's
+    power-of-two resolutions and slot counts).
+    """
+    important: jax.Array
+
+
 def spot(cross_attn_probs: jax.Array, threshold: float,
          cls_index: int = 0) -> TIPSResult:
     """Spot important pixels from post-softmax cross-attention scores.

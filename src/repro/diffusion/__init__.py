@@ -1,4 +1,5 @@
 from repro.diffusion.unet import UNetConfig, init_unet_params, unet_forward  # noqa: F401
 from repro.diffusion.pipeline import StableDiffusionPipeline, PipelineConfig  # noqa: F401
-from repro.diffusion.engine import DiffusionEngine, EngineOutput  # noqa: F401
-from repro.diffusion.stats import UNetStats, attn_layer_order  # noqa: F401
+from repro.diffusion.engine import DiffusionEngine, EngineOutput, SlotState  # noqa: F401
+from repro.diffusion.stats import (LedgerAccum, SlotStats, UNetStats,  # noqa: F401
+                                   attn_layer_order)

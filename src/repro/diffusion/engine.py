@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.diffusion.sampler import sample_scan
+from repro.diffusion.sampler import denoise_step, sample_scan
+from repro.diffusion.stats import LedgerAccum, attn_layer_order
 from repro.diffusion.text_encoder import encode_text, init_text_encoder_params
 from repro.diffusion.unet import init_unet_params, unet_forward
 from repro.diffusion.vae import decode, init_vae_params
@@ -51,6 +52,40 @@ class EngineOutput:
     images: jax.Array            # (B, 8S, 8S, 3) in [-1, 1]
     latents: jax.Array           # (B, S, S, 4) final denoised latents
     stats: object                # UNetStats, leaves (num_steps, ...)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SlotState:
+    """Persistent in-flight batch for continuous serving (DESIGN.md §8).
+
+    One row per slot.  ``step_idx`` is the next DDIM iteration each slot
+    will execute; ``active`` marks occupied slots (inactive rows still run
+    through the fixed-shape UNet step, their results discarded and their
+    stats masked).  ``accum`` holds the per-iteration integer ledger
+    buckets each executed step scatters into.  ``uncond_context`` is
+    ``None`` (static, via the treedef) when the engine's config disables
+    CFG.  The whole state is donated to the jitted ``slot_step``
+    executable, so a serving loop updates it in place.
+    """
+    latents: jax.Array                     # (S, s, s, C)
+    context: jax.Array                     # (S, Tk, d) encoded cond text
+    uncond_context: Optional[jax.Array]    # (S, Tk, d) or None
+    step_idx: jax.Array                    # (S,) int32
+    active: jax.Array                      # (S,) bool
+    accum: LedgerAccum
+
+    def tree_flatten(self):
+        return ((self.latents, self.context, self.uncond_context,
+                 self.step_idx, self.active, self.accum), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.step_idx.shape[0])
 
 
 def _check_cfg_inputs(guidance_scale: float, uncond_tokens) -> bool:
@@ -117,6 +152,13 @@ class DiffusionEngine:
         # signature); geometry is fixed per engine so the signature is the
         # leading dims plus the placement.
         self._compiled: dict = {}
+        # slot-mode executables: step per (slots, use_cfg, policies), plus
+        # the encode/decode stages cached separately (admission and
+        # retirement run them outside the per-step computation)
+        self._slot_compiled: dict = {}
+        self._encode_fn = None
+        self._decode_fn = None
+        self._admit_fn = None
         self.last_wall_s: Optional[float] = None
         self.mesh = None
         self.dp_size = 1
@@ -262,3 +304,177 @@ class DiffusionEngine:
         self.generate(toks, jax.random.PRNGKey(0), uncond_tokens=un,
                       stats_rows=stats_rows)
         return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # Slot-state mode: continuous batching (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def init_slots(self, num_slots: int) -> SlotState:
+        """Fresh all-inactive slot state for ``num_slots`` in-flight rows.
+
+        The slot count is the step executable's batch signature — pick it
+        once per serving run (every ``slot_step`` reuses the same compiled
+        program regardless of occupancy).  Single-device only: slot
+        admission rewrites individual batch rows between steps, which
+        would thrash a data-sharded placement.
+        """
+        if self.mesh is not None:
+            raise ValueError(
+                "slot-state mode is single-device: per-slot admission "
+                "rewrites batch rows between steps (use micro-batch "
+                "serving for mesh execution)")
+        if num_slots < 1:
+            raise ValueError(f"num_slots={num_slots} must be >= 1")
+        cfg = self.cfg
+        s, c = cfg.unet.latent_size, cfg.unet.in_channels
+        ctx_shape = (num_slots, cfg.text.max_len, cfg.text.d_model)
+        use_cfg = cfg.ddim.guidance_scale != 1.0
+        return SlotState(
+            latents=jnp.zeros((num_slots, s, s, c)),
+            # cond and uncond context must be DISTINCT buffers: the state
+            # is donated to the admit/step executables, and XLA rejects
+            # donating one buffer twice
+            context=jnp.zeros(ctx_shape),
+            uncond_context=jnp.zeros(ctx_shape) if use_cfg else None,
+            step_idx=jnp.zeros((num_slots,), jnp.int32),
+            active=jnp.zeros((num_slots,), bool),
+            accum=LedgerAccum.zeros(cfg.ddim.num_inference_steps,
+                                    len(attn_layer_order(cfg.unet))))
+
+    def _encode_compiled(self):
+        if self._encode_fn is None:
+            self._encode_fn = jax.jit(
+                lambda toks: encode_text(self.text_params, toks,
+                                         self.cfg.text))
+        return self._encode_fn
+
+    def admit(self, state: SlotState, slot: int, prompt_tokens, key,
+              uncond_tokens=None, latents=None) -> SlotState:
+        """Occupy one slot with a new request (between steps).
+
+        ``prompt_tokens`` is (1, text_len); the initial latent row is
+        drawn from ``key`` (or passed explicitly — the oracle tests hand
+        the same per-request draw to the one-shot engine).  Text encoding
+        runs through its own cached executable; the step executable never
+        retraces on admission.  The same CFG contract as ``generate``
+        applies, plus the slot state itself must have been built for the
+        same CFG mode.
+        """
+        use_cfg = _check_cfg_inputs(self.cfg.ddim.guidance_scale,
+                                    uncond_tokens)
+        if use_cfg != (state.uncond_context is not None):
+            raise ValueError(
+                "slot state CFG mode does not match the admit call — "
+                "rebuild the state with init_slots() for this config")
+        enc = self._encode_compiled()
+        ctx = enc(prompt_tokens)
+        if latents is None:
+            latents = self.init_latents(1, key)
+        if self._admit_fn is None:
+            # one fused dispatch per admission (slot index traced, so any
+            # slot reuses the same executable); state donated
+            def _adm(state, slot, ctx_row, lat_row, un_row):
+                new = dataclasses.replace(
+                    state,
+                    latents=state.latents.at[slot].set(lat_row),
+                    context=state.context.at[slot].set(ctx_row),
+                    step_idx=state.step_idx.at[slot].set(0),
+                    active=state.active.at[slot].set(True))
+                if un_row is not None:
+                    new = dataclasses.replace(
+                        new, uncond_context=state.uncond_context
+                        .at[slot].set(un_row))
+                return new
+            self._admit_fn = jax.jit(_adm, donate_argnums=(0,))
+        un_row = enc(uncond_tokens)[0] if use_cfg else None
+        return self._admit_fn(state, jnp.int32(slot), ctx[0], latents[0],
+                              un_row)
+
+    def _slot_step_traced(self, state: SlotState) -> SlotState:
+        cfg = self.cfg
+
+        def unet_apply(lat, tvec, ctx, act, stats_rows=None, cfg_dup=False,
+                       row_stats=False):
+            return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
+                                tips_active=act, stats_rows=stats_rows,
+                                cfg_dup=cfg_dup, row_stats=row_stats)
+
+        lat, stats = denoise_step(unet_apply, state.latents, state.context,
+                                  state.uncond_context, state.step_idx,
+                                  cfg.ddim, active=state.active,
+                                  row_stats=True)
+        # stats masking invariant: inactive rows are zeroed BEFORE the
+        # scatter, and each active row lands in ITS iteration's bucket —
+        # integer adds, so any occupancy pattern reproduces the one-shot
+        # folded counters exactly
+        accum = state.accum.scatter(state.step_idx, state.active, stats)
+        return dataclasses.replace(
+            state, latents=lat, accum=accum,
+            step_idx=state.step_idx + state.active.astype(jnp.int32))
+
+    def slot_step(self, state: SlotState) -> SlotState:
+        """Advance every active slot by ONE denoising iteration (jitted).
+
+        One executable per (slot count, CFG mode, policies) — compiled on
+        first use, donated state, reused for the whole serving run.  Wall
+        seconds land in ``self.last_wall_s``.
+        """
+        key = (state.num_slots, state.uncond_context is not None,
+               self.cfg.unet.effective_kernel_policy(),
+               self.cfg.unet.effective_precision())
+        fn = self._slot_compiled.get(key)
+        if fn is None:
+            fn = jax.jit(self._slot_step_traced, donate_argnums=(0,))
+            self._slot_compiled[key] = fn
+        t0 = time.perf_counter()
+        state = fn(state)
+        jax.block_until_ready(state.latents)
+        self.last_wall_s = time.perf_counter() - t0
+        return state
+
+    def finished_slots(self, state: SlotState) -> list:
+        """Active slots whose step counter has run off the schedule."""
+        n = self.cfg.ddim.num_inference_steps
+        idx, act = jax.device_get((state.step_idx, state.active))
+        return [i for i in range(len(idx)) if act[i] and idx[i] >= n]
+
+    def decode_slots(self, state: SlotState, slots=None) -> jax.Array:
+        """VAE-decode slot latents through a cached executable.
+
+        ``slots=None`` decodes the whole buffer in one batch-S call;
+        passing the finished slot list decodes ONLY those rows, one
+        batch-1 call each — a retirement event typically frees one or two
+        slots, so this is the serving path (decoding the full buffer
+        would spend a multiple of the per-step wall on unfinished rows).
+        Both shapes hit one cached executable each, and a decoded row is
+        bit-identical whichever path produced it (and bit-identical to
+        the decode fused inside ``generate`` — tests pin this), so the
+        choice is pure wall time.
+        """
+        if self._decode_fn is None:
+            self._decode_fn = jax.jit(
+                lambda lat: decode(self.vae_params, lat, self.cfg.vae))
+        if slots is None:
+            return self._decode_fn(state.latents)
+        # power-of-two chunking bounds the executable count to log2(S)+1
+        # while keeping retirement decodes near the per-row optimum; a
+        # scheduler warms those sizes off the clock (see
+        # ContinuousScheduler.warmup)
+        slots = list(slots)
+        if not slots:
+            raise ValueError(
+                "decode_slots: empty slot list — guard on "
+                "finished_slots() (or pass slots=None for the whole "
+                "buffer)")
+        out, i = [], 0
+        while i < len(slots):
+            c = 1 << ((len(slots) - i).bit_length() - 1)
+            sel = jnp.asarray(slots[i:i + c], jnp.int32)
+            out.append(self._decode_fn(state.latents[sel]))
+            i += c
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
+
+    def retire(self, state: SlotState, slots) -> SlotState:
+        """Free finished slots (after decoding); rows become admissible."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        return dataclasses.replace(state,
+                                   active=state.active.at[idx].set(False))

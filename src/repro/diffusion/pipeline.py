@@ -20,7 +20,8 @@ from repro.core import energy, pssa
 from repro.core.tips import TIPS_ACTIVE_ITERS
 from repro.diffusion import ledger as L
 from repro.diffusion.sampler import DDIMConfig, sample
-from repro.diffusion.stats import UNetStats, coerce_per_step_stats
+from repro.diffusion.stats import (UNetStats, attn_layer_order,
+                                   coerce_per_step_stats)
 from repro.diffusion.text_encoder import (TextEncoderConfig,
                                           encode_text,
                                           init_text_encoder_params)
@@ -216,6 +217,37 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
             raise ValueError(
                 f"stats trajectory has {len(s)} iterations, config says {n}")
 
+    per_iter_terms = []
+    for i in range(n):
+        sas_terms: dict = {}
+        tnum = tden = 0.0
+        for s in fetched:
+            for res, (num, den) in _sas_ratio_terms(s[i]).items():
+                a, b = sas_terms.get(res, (0.0, 0.0))
+                sas_terms[res] = (a + num, b + den)
+            num, den = _tips_ratio_terms(s[i])
+            tnum, tden = tnum + num, tden + den
+        per_iter_terms.append((sas_terms, (tnum, tden)))
+    return _report_from_terms(cfg, per_iter_terms,
+                              full_geometry=full_geometry)
+
+
+def _report_from_terms(cfg: "PipelineConfig", per_iter_terms,
+                       full_geometry: bool = True) -> "PipelineEnergyReport":
+    """Per-iteration aggregated terms -> the full-geometry ledger report.
+
+    ``per_iter_terms``: one ``(sas_terms, (tips_num, tips_den))`` per DDIM
+    iteration, where ``sas_terms`` maps resolution to summed
+    (compressed, baseline) byte terms.  Shared tail of the batch-stats
+    aggregation (:func:`energy_report_multi`) and the slot-serving
+    accumulator path (:func:`energy_report_from_accum`) — both reduce to
+    these terms, which is what makes the two serving modes' headlines
+    comparable bit-for-bit.
+    """
+    n = cfg.ddim.num_inference_steps
+    if len(per_iter_terms) != n:
+        raise ValueError(
+            f"{len(per_iter_terms)} iteration terms, config says {n}")
     geom = UNetConfig() if full_geometry else cfg.unet
     precision = cfg.unet.effective_precision()
     geom_res = sorted({geom.latent_size >> s
@@ -227,15 +259,7 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
         return {g: ratios[m] for g, m in zip(geom_res, meas)}
 
     opts_per_iter = []
-    for i in range(n):
-        sas_terms: dict = {}
-        tnum = tden = 0.0
-        for s in fetched:
-            for res, (num, den) in _sas_ratio_terms(s[i]).items():
-                a, b = sas_terms.get(res, (0.0, 0.0))
-                sas_terms[res] = (a + num, b + den)
-            num, den = _tips_ratio_terms(s[i])
-            tnum, tden = tnum + num, tden + den
+    for i, (sas_terms, (tnum, tden)) in enumerate(per_iter_terms):
         sas_ratio = {res: num / max(den, 1e-12)
                      for res, (num, den) in sas_terms.items()}
         opts_per_iter.append(L.LedgerOptions(
@@ -252,6 +276,76 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
         baseline=L.generation_report(geom, baseline_opts),
         iterations=n,
     )
+
+
+def ledger_terms_from_accum(cfg: "PipelineConfig", accum) -> list:
+    """Per-iteration ledger terms from a slot-serving ``LedgerAccum``.
+
+    The continuous-batching runtime accumulates INTEGER counters per DDIM
+    iteration (``repro.diffusion.stats.LedgerAccum``); this assembles the
+    same per-iteration (SAS byte, TIPS workload) terms that
+    :func:`energy_report_multi` derives from per-call ``UNetStats`` —
+    bit-identically, because both reduce the same integer counters through
+    the same byte arithmetic (``pssa.stats_from_counters``) and the same
+    float32 ratio step the device path uses.  Slot count, admission order,
+    and occupancy cannot move a term: integer accumulation is exact.
+    """
+    import numpy as np
+
+    layers = attn_layer_order(cfg.unet)
+    heads = cfg.unet.num_heads
+    nnz, ones_xor, imp, rows = (np.asarray(x) for x in jax.device_get(
+        (accum.nnz, accum.ones_xor, accum.imp, accum.rows)))
+    n = cfg.ddim.num_inference_steps
+    if nnz.shape != (n, len(layers)):
+        raise ValueError(f"accumulator shape {nnz.shape} does not match "
+                         f"({n}, {len(layers)})")
+    per_iter_terms = []
+    for i in range(n):
+        sas_terms: dict = {}
+        tnum = tden = 0.0
+        r = int(rows[i])
+        for li, lk in enumerate(layers):
+            if r == 0:
+                continue                  # nothing accounted yet
+            res = lk.resolution
+            tq = res * res
+            st = pssa.stats_from_counters(
+                jnp.asarray(int(nnz[i, li])), jnp.asarray(int(ones_xor[i, li])),
+                lead=r * heads, tq=tq, tk=tq,
+                patch=cfg.unet.patch_size(res))
+            num, den = sas_terms.get(res, (0.0, 0.0))
+            sas_terms[res] = (num + float(st.bytes_pssa_total),
+                              den + float(st.bytes_baseline))
+            # the one-shot path sums (1 - imp_c/(rows_c*Tq)) * Tq * rows_c
+            # per call; with exact per-call folds (power-of-two
+            # rows_c * Tq) that telescopes to the INTEGER
+            # Tq*rows - imp_total, so the accumulator reproduces the
+            # aggregated term without ever dividing
+            tnum += float(tq * r - int(imp[i, li]))
+            tden += float(tq * r)
+        per_iter_terms.append((sas_terms, (tnum, tden)))
+    return per_iter_terms
+
+
+def energy_report_from_accum(cfg: "PipelineConfig", accum,
+                             full_geometry: bool = True
+                             ) -> "PipelineEnergyReport":
+    """Energy report for a drained slot-serving run (DESIGN.md §8).
+
+    Bit-identical to :func:`energy_report_multi` over the same requests
+    served one-shot whenever the per-call float folds are exact —
+    power-of-two accounted rows per call, always true for the test/bench
+    configurations and trivially true for the single-call oracle.
+    """
+    return _report_from_terms(cfg, ledger_terms_from_accum(cfg, accum),
+                              full_geometry=full_geometry)
+
+
+def tips_ratios_from_accum(cfg: "PipelineConfig", accum) -> list:
+    """Per-iteration realized INT6 row fraction from the accumulator."""
+    return [num / max(den, 1e-12)
+            for _, (num, den) in ledger_terms_from_accum(cfg, accum)]
 
 
 def aggregated_tips_ratios_per_iter(cfg: "PipelineConfig",

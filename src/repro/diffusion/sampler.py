@@ -53,9 +53,19 @@ def timestep_schedule(cfg: DDIMConfig):
 
 
 def ddim_step(latents, eps, t, t_prev, acp):
-    """One deterministic DDIM update (eta = 0)."""
+    """One deterministic DDIM update (eta = 0).
+
+    ``t`` / ``t_prev`` are a scalar timestep (whole batch on one schedule)
+    or (B,) per-row timesteps — continuous batching runs each slot at its
+    own denoising iteration, so the alphas are gathered per row and
+    broadcast over the spatial axes.  Per-row values equal to the scalar
+    produce bit-identical updates (same elementwise arithmetic).
+    """
     a_t = acp[t]
     a_prev = jnp.where(t_prev >= 0, acp[jnp.maximum(t_prev, 0)], 1.0)
+    if jnp.ndim(a_t) == 1:
+        shape = (latents.shape[0],) + (1,) * (latents.ndim - 1)
+        a_t, a_prev = a_t.reshape(shape), a_prev.reshape(shape)
     x0 = (latents - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
     return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
 
@@ -107,18 +117,83 @@ def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
     return latents, all_stats
 
 
+def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
+                cfg: DDIMConfig, stats_rows=None, active=None,
+                row_stats: bool = False):
+    """ONE denoising update at PER-SLOT step indices (the scan body).
+
+    ``step_idx`` is (B,) int32 — each batch row's DDIM iteration in
+    ``[0, num_inference_steps)`` (a scalar is broadcast).  Rows may sit at
+    *different* iterations: the DDIM alphas and the per-row TIPS activity
+    flag are gathered per row, which is what lets a continuous-batching
+    server interleave requests at heterogeneous steps in one batched UNet
+    call.  With every row at the same index the arithmetic is elementwise
+    identical to the homogeneous path, so ``sample_scan`` (whose scan body
+    this is) produces bit-identical latents to the seed loop.
+
+    Under CFG the cond and uncond UNet evaluations are fused into a single
+    batched call with the shared prefix deduplicated; ``unet_apply`` must
+    accept static ``stats_rows`` and ``cfg_dup`` keywords
+    (``repro.diffusion.unet.unet_forward`` does) — stats restricted to the
+    cond rows, latents carrying only the cond half.  ``stats_rows``
+    (static) restricts the PSSA/TIPS accounting to the first N batch rows.
+
+    ``active`` (B,) bool gates slot serving: inactive rows keep their
+    latents unchanged (their UNet work is computed and discarded — the
+    fixed-shape price of slot serving) and their step index is clipped
+    into range; the CALLER must mask their stats out (``LedgerAccum``
+    multiplies counters by the mask before the scatter).  ``row_stats``
+    requests per-row integer counters (``SlotStats``) instead of folded
+    stats; it is forwarded to ``unet_apply`` only when set, so legacy
+    closures without the keyword keep working.
+    """
+    acp = alphas_cumprod(cfg)
+    ts = timestep_schedule(cfg)
+    step = cfg.num_train_steps // cfg.num_inference_steps
+    b = latents.shape[0]
+    step_idx = jnp.asarray(step_idx, jnp.int32)
+    if step_idx.ndim == 0:
+        step_idx = jnp.full((b,), step_idx, jnp.int32)
+    idx = jnp.clip(step_idx, 0, cfg.num_inference_steps - 1)
+    t = ts[idx]                                   # (B,) per-row timesteps
+    tips_vec = idx < cfg.tips_active_iters        # (B,) per-row TIPS flag
+    kw = {"row_stats": True} if row_stats else {}
+
+    use_cfg = cfg.guidance_scale != 1.0 and uncond_context is not None
+    if use_cfg:
+        # cfg_dup: latents stay at b rows — the UNet tiles the hidden
+        # state to [cond | uncond] at the first cross-attention (the
+        # halves are identical before it).  stats_rows defaults to b:
+        # PSSA/TIPS accounted on the cond half only — the ledger never
+        # consumes uncond stats (the two-call reference path computes
+        # and discards them; the fused path skips them).
+        ctx_fused = jnp.concatenate([context, uncond_context], axis=0)
+        rows = b if stats_rows is None else stats_rows
+        eps_fused, stats = unet_apply(latents, t, ctx_fused, tips_vec,
+                                      stats_rows=rows, cfg_dup=True, **kw)
+        eps = guided_eps(eps_fused, cfg.guidance_scale)
+    else:
+        eps, stats = unet_apply(latents, t, context, tips_vec,
+                                stats_rows=stats_rows, **kw)
+    new_lat = ddim_step(latents, eps, t, t - step, acp)
+    if active is not None:
+        keep = active.reshape((b,) + (1,) * (latents.ndim - 1))
+        new_lat = jnp.where(keep, new_lat, latents)
+    return new_lat, stats
+
+
 def sample_scan(unet_apply, latents, context, uncond_context,
                 cfg: DDIMConfig, stats_rows=None):
     """Run all denoising steps inside one ``jax.lax.scan``.
 
-    Per-step traced inputs (xs): the DDIM timestep and the TIPS activity
-    flag.  Under CFG the cond and uncond UNet evaluations are fused into a
-    single batched call per step with the shared prefix deduplicated, and
-    ``unet_apply`` must accept static ``stats_rows`` and ``cfg_dup``
-    keywords (``repro.diffusion.unet.unet_forward`` does) — stats
-    restricted to the cond rows, latents carrying only the cond half.
-    ``stats_rows`` (static) further restricts the PSSA/TIPS accounting to
-    the first N batch rows — the serving front-end sets it to the valid
+    The scan body is :func:`denoise_step` with every row at the same step
+    index — the same executable building block the continuous-batching
+    engine (``DiffusionEngine.slot_step``) runs standalone with
+    heterogeneous per-slot indices, so the two paths cannot drift.
+    Under CFG the cond and uncond UNet evaluations are fused into a
+    single batched call per step with the shared prefix deduplicated.
+    ``stats_rows`` (static) restricts the PSSA/TIPS accounting to the
+    first N batch rows — the serving front-end sets it to the valid
     (non-padded) row count of a tail micro-batch so padded duplicate rows
     never leak into the energy ledger.
     Returns ``(latents,
@@ -126,39 +201,15 @@ def sample_scan(unet_apply, latents, context, uncond_context,
     leaves carry a leading ``num_inference_steps`` axis; reconstruct the
     per-step view with ``stacked_stats.step(i)`` / ``.unstack()``.
     """
-    acp = alphas_cumprod(cfg)
-    ts = timestep_schedule(cfg)
-    step = cfg.num_train_steps // cfg.num_inference_steps
     n = cfg.num_inference_steps
-    tips_flags = jnp.arange(n) < cfg.tips_active_iters
-
-    use_cfg = cfg.guidance_scale != 1.0 and uncond_context is not None
-    if use_cfg:
-        ctx_fused = jnp.concatenate([context, uncond_context], axis=0)
     b = latents.shape[0]
     if stats_rows is not None and not (0 < stats_rows <= b):
         raise ValueError(f"stats_rows={stats_rows} outside [1, {b}]")
 
-    def body(lat, xs):
-        t, active = xs
-        if use_cfg:
-            tvec = jnp.full((b,), t, jnp.int32)
-            # cfg_dup: latents stay at b rows — the UNet tiles the hidden
-            # state to [cond | uncond] at the first cross-attention (the
-            # halves are identical before it).  stats_rows defaults to b:
-            # PSSA/TIPS accounted on the cond half only — the ledger never
-            # consumes uncond stats (the two-call reference path computes
-            # and discards them; the fused path skips them).
-            rows = b if stats_rows is None else stats_rows
-            eps_fused, stats = unet_apply(lat, tvec, ctx_fused, active,
-                                          stats_rows=rows, cfg_dup=True)
-            eps = guided_eps(eps_fused, cfg.guidance_scale)
-        else:
-            tvec = jnp.full((b,), t, jnp.int32)
-            eps, stats = unet_apply(lat, tvec, context, active,
-                                    stats_rows=stats_rows)
-        lat = ddim_step(lat, eps, t, t - step, acp)
-        return lat, stats
+    def body(lat, i):
+        return denoise_step(unet_apply, lat, context, uncond_context,
+                            jnp.full((b,), i, jnp.int32), cfg,
+                            stats_rows=stats_rows)
 
-    latents, stacked = jax.lax.scan(body, latents, (ts, tips_flags))
+    latents, stacked = jax.lax.scan(body, latents, jnp.arange(n))
     return latents, stacked

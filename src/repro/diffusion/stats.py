@@ -153,6 +153,115 @@ class UNetStats:
         return cls(layers=layers, pssa=pssa, tips=tips)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SlotStats:
+    """Per-layer PER-ROW integer counters (continuous-batching stats).
+
+    The slot-serving counterpart of ``UNetStats``: same static layer order,
+    but each layer carries ``pssa.PSSARowCounters`` / ``tips.TIPSRowCounters``
+    whose leaves are (B,) integer vectors — one entry per batch row.  Rows
+    sit at heterogeneous denoising steps under continuous batching, so the
+    runtime scatters them into per-iteration ``LedgerAccum`` buckets
+    instead of folding them at the source.  Integer addition is exact and
+    associative, so any scatter order/occupancy reproduces the one-shot
+    folded counters bit-for-bit (DESIGN.md §8).
+    """
+    layers: Tuple[LayerKey, ...]
+    pssa: Tuple                     # per-layer PSSARowCounters
+    tips: Tuple                     # per-layer TIPSRowCounters
+
+    def tree_flatten(self):
+        return (self.pssa, self.tips), self.layers
+
+    @classmethod
+    def tree_unflatten(cls, layers, children):
+        pssa, tips = children
+        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips))
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def counter_matrices(self):
+        """Stack per-layer row counters: three (B, L) integer arrays.
+
+        Columns follow ``layers`` order — the same order ``LedgerAccum``
+        buckets use.  Returns (nnz, ones_xor, important).
+        """
+        nnz = jnp.stack([c.nnz for c in self.pssa], axis=1)
+        ones_xor = jnp.stack([c.ones_xor for c in self.pssa], axis=1)
+        imp = jnp.stack([t.important for t in self.tips], axis=1)
+        return nnz, ones_xor, imp
+
+    @classmethod
+    def from_layer_list(cls, layers, pssa, tips) -> "SlotStats":
+        layers, pssa, tips = tuple(layers), tuple(pssa), tuple(tips)
+        assert len(layers) == len(pssa) == len(tips), \
+            (len(layers), len(pssa), len(tips))
+        return cls(layers=layers, pssa=pssa, tips=tips)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LedgerAccum:
+    """Per-DDIM-iteration integer ledger buckets for slot serving.
+
+    One row per denoising iteration, one column per transformer block (in
+    ``attn_layer_order``): ``nnz`` / ``ones_xor`` are the PSSA counters,
+    ``imp`` the TIPS important-token counts, ``rows`` the number of
+    accounted (active-slot) request rows that have executed the iteration.
+    All integer — accumulation across steps, slots, and occupancy patterns
+    is exact, so the energy report assembled from a drained accumulator is
+    bit-identical to the same requests served one-shot
+    (``pipeline.energy_report_from_accum``).  Counters are int32 without
+    ``jax_enable_x64`` (exact to 2^31 — the same bound ``pssa.compress_stats``
+    documents); a smoke-geometry serving run sits orders of magnitude below
+    it.
+    """
+    nnz: jax.Array        # (num_steps, L) int
+    ones_xor: jax.Array   # (num_steps, L) int
+    imp: jax.Array        # (num_steps, L) int
+    rows: jax.Array       # (num_steps,) int
+
+    def tree_flatten(self):
+        return (self.nnz, self.ones_xor, self.imp, self.rows), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zeros(cls, num_steps: int, num_layers: int) -> "LedgerAccum":
+        x64 = bool(jax.config.read("jax_enable_x64"))
+        dt = jnp.int64 if x64 else jnp.int32
+        return cls(nnz=jnp.zeros((num_steps, num_layers), dt),
+                   ones_xor=jnp.zeros((num_steps, num_layers), dt),
+                   imp=jnp.zeros((num_steps, num_layers), dt),
+                   rows=jnp.zeros((num_steps,), dt))
+
+    def scatter(self, step_idx: jax.Array, active: jax.Array,
+                slot_stats: SlotStats) -> "LedgerAccum":
+        """Add one slot step's per-row counters into their iteration buckets.
+
+        ``step_idx`` (B,) is each slot's DDIM iteration for the step just
+        executed; ``active`` (B,) masks unoccupied slots: their counters
+        (UNet garbage) are zeroed BEFORE the scatter, so occupancy can
+        never move a bucket.  Out-of-range indices (retired slots) are
+        dropped, belt-and-braces on top of the mask.
+        """
+        nnz, ones_xor, imp = slot_stats.counter_matrices()
+        gate = active.astype(self.nnz.dtype)[:, None]
+        return LedgerAccum(
+            nnz=self.nnz.at[step_idx].add(
+                nnz.astype(self.nnz.dtype) * gate, mode="drop"),
+            ones_xor=self.ones_xor.at[step_idx].add(
+                ones_xor.astype(self.nnz.dtype) * gate, mode="drop"),
+            imp=self.imp.at[step_idx].add(
+                imp.astype(self.nnz.dtype) * gate, mode="drop"),
+            rows=self.rows.at[step_idx].add(
+                active.astype(self.rows.dtype), mode="drop"))
+
+
 def coerce_per_step_stats(stats) -> list:
     """Normalize any supported stats shape to a per-iteration list.
 

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionPolicy
-from repro.diffusion.stats import UNetStats, attn_layer_order
+from repro.diffusion.stats import SlotStats, UNetStats, attn_layer_order
 from repro.kernels import dispatch
 from repro.kernels.dispatch import KernelPolicy
 
@@ -328,8 +328,15 @@ def _merge_heads(x):
 def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                        stats_rows=None, dup_after_self: bool = False,
                        policy: KernelPolicy | None = None,
-                       precision: PrecisionPolicy | None = None):
+                       precision: PrecisionPolicy | None = None,
+                       row_stats: bool = False):
     """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult).
+
+    ``tips_active`` is a scalar flag (whole-batch schedule) or a (B,) row
+    vector — continuous batching runs slots at heterogeneous denoising
+    iterations, so each row carries its own activity bit.  ``row_stats``
+    reports per-row integer counters instead of folded stats (the slot
+    runtime scatters them into per-iteration ledger buckets).
 
     ``policy`` selects the per-op kernel implementation (reference vs
     Pallas) via ``repro.kernels.dispatch``; ``precision`` the TIPS
@@ -373,7 +380,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                  prune_scores=cfg.pssa,
                                  stats_rows=None if dup_after_self
                                  else stats_rows,
-                                 reference_stats=cfg.pssa_stats_reference)
+                                 reference_stats=cfg.pssa_stats_reference,
+                                 row_stats=row_stats)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
                             p["sa_o"]["w"]) + p["sa_o"]["b"])
 
@@ -390,7 +398,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
     vt = _attn_heads(context, p["ca_v"]["w"], heads)
     ca = dispatch.cross_attention(policy, q, kt, vt, precision=precision,
-                                  stats_rows=stats_rows)
+                                  stats_rows=stats_rows,
+                                  row_stats=row_stats)
     h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
                             p["ca_o"]["w"]) + p["ca_o"]["b"])
 
@@ -398,8 +407,15 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     resid = h
     hn = layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
     if cfg.tips:
+        active = tips_active
+        if getattr(active, "ndim", 0) == 1:
+            # per-row activity (continuous batching): broadcast over tokens;
+            # under cfg_dup the rows doubled at the cross-attn, tile to match
+            if active.shape[0] != h.shape[0]:
+                active = jnp.concatenate([active, active], axis=0)
+            active = active[:, None]
         important = jnp.logical_or(ca.important_full,
-                                   jnp.logical_not(tips_active))
+                                   jnp.logical_not(active))
     else:
         important = None
     h = resid + dispatch.ffn_geglu(policy, hn, p, important,
@@ -425,7 +441,8 @@ def _upsample(x, p):
 def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                  tips_active: bool | jax.Array = True,
                  stats_rows: Optional[int] = None,
-                 cfg_dup: bool = False):
+                 cfg_dup: bool = False,
+                 row_stats: bool = False):
     """latents (B, S, S, 4), timesteps (B,), context (B, Ttext, ctx_dim).
 
     Returns (eps-prediction (B, S, S, 4), ``UNetStats`` pytree) with one
@@ -433,6 +450,12 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     ``stats_rows`` (static) restricts stats to the first N batch rows; the
     fused-CFG path sets it to the cond half so accounting matches a
     cond-only call at half the cost.
+
+    ``tips_active`` accepts a scalar (whole batch on one schedule) or a
+    (B,) per-row vector — continuous batching runs each slot at its own
+    denoising iteration.  ``row_stats`` (static) switches the stats
+    container to a ``SlotStats`` of per-row integer counters (same layer
+    order) for scatter into per-iteration ledger buckets.
 
     ``cfg_dup``: fused-CFG prefix deduplication.  ``latents``/``timesteps``
     carry ONLY the cond half (B rows) while ``context`` carries
@@ -461,7 +484,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
         nonlocal temb, needs_dup
         h, sa, ca = _transformer_block(h, bp, context, cfg, tips_active,
                                        stats_rows, dup_after_self=needs_dup,
-                                       policy=policy, precision=precision)
+                                       policy=policy, precision=precision,
+                                       row_stats=row_stats)
         if needs_dup:
             # downstream resnets now see [cond | uncond] rows
             temb = jnp.concatenate([temb, temb], axis=0)
@@ -512,7 +536,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                    cfg.groups)
     eps = conv2d(jax.nn.silu(h), params["conv_out"]["w"],
                  params["conv_out"]["b"])
-    stats = UNetStats.from_layer_list(attn_layer_order(cfg), pssa_stats,
+    stats_cls = SlotStats if row_stats else UNetStats
+    stats = stats_cls.from_layer_list(attn_layer_order(cfg), pssa_stats,
                                       tips_stats)
     return eps, stats
 

@@ -217,14 +217,18 @@ DISPATCH_TABLE = {
 def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
                    threshold: float, prune_scores: bool = True,
                    stats_rows: int | None = None,
-                   reference_stats: bool = False) -> attention.SelfAttnOut:
+                   reference_stats: bool = False,
+                   row_stats: bool = False) -> attention.SelfAttnOut:
     """PSSA self-attention via the policy's implementation.
 
     Two combinations force the materializing reference regardless of
     policy: ``reference_stats`` (the seed's stats oracle, definitionally
     materializing) and ``prune_scores=False`` (the paper-baseline ablation
     keeps sub-threshold scores in the value matmul; the fused kernel always
-    prunes).
+    prunes).  ``row_stats`` reports per-row integer counters
+    (``pssa.PSSARowCounters``) instead of folded byte stats — identical
+    counters either way, so the slot-serving ledger stays bit-exact across
+    implementations.
     """
     impl = policy.self_attention
     if impl == "fused" and (reference_stats or not prune_scores):
@@ -233,30 +237,34 @@ def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
         return attention.self_attention_pssa_fused(
             q, k, v, patch=patch, threshold=threshold,
             stats_rows=stats_rows, interpret=policy.interpret,
-            bq=policy.attn_block_q, bk=policy.attn_block_k)
+            bq=policy.attn_block_q, bk=policy.attn_block_k,
+            row_stats=row_stats)
     return attention.self_attention_pssa(
         q, k, v, patch=patch, threshold=threshold,
         prune_scores=prune_scores, stats_rows=stats_rows,
-        reference_stats=reference_stats)
+        reference_stats=reference_stats, row_stats=row_stats)
 
 
 def cross_attention(policy: KernelPolicy, q, k_text, v_text, *,
-                    precision, stats_rows: int | None = None
-                    ) -> attention.CrossAttnOut:
+                    precision, stats_rows: int | None = None,
+                    row_stats: bool = False) -> attention.CrossAttnOut:
     """Cross-attention + TIPS spotting via the policy's implementation.
 
     ``precision`` (a ``core.precision.PrecisionPolicy``) drives the
     spotting mode; it runs on the head-averaged CAS identically for both
     implementations, so routing never changes a precision decision (the
     importance mask / low ratio / ledger terms are bit-identical across
-    ``reference`` and ``fused`` — DESIGN.md §7).
+    ``reference`` and ``fused`` — DESIGN.md §7).  ``row_stats`` reports
+    per-row important-token counts (``tips.TIPSRowCounters``).
     """
     if policy.cross_attention == "fused":
         return attention.cross_attention_tips_fused(
             q, k_text, v_text, precision=precision, stats_rows=stats_rows,
-            interpret=policy.interpret, bq=policy.cross_block_q)
+            interpret=policy.interpret, bq=policy.cross_block_q,
+            row_stats=row_stats)
     return attention.cross_attention_tips(
-        q, k_text, v_text, precision=precision, stats_rows=stats_rows)
+        q, k_text, v_text, precision=precision, stats_rows=stats_rows,
+        row_stats=row_stats)
 
 
 def ffn_geglu(policy: KernelPolicy, hn, p, important, precision=None):

@@ -1,0 +1,347 @@
+"""Continuous-batching scheduler over the slot-state DiffusionEngine.
+
+The micro-batching front-end (``repro.launch.serve_diffusion.serve``) drains
+a pre-collected request list: a request arriving while a batch is mid-scan
+waits the batch's FULL generation before it can even start, so tail latency
+under bursty traffic approaches 2x the generation time.  The continuous
+scheduler here instead keeps a persistent slot batch in flight
+(``DiffusionEngine.init_slots`` / ``slot_step``): every denoising step
+advances all occupied slots — each at its OWN iteration index — and between
+steps finished rows are decoded + retired and queued requests admitted into
+the freed slots.  A new request therefore starts at the next step boundary
+(one UNet iteration away) instead of the next batch boundary (a whole
+generation away).
+
+The denoising steps are phase-heterogeneous by construction (the paper's
+``tips_active_iters`` schedule: TIPS only active in late iterations), so a
+slot batch legitimately mixes precision regimes across rows — the per-row
+``tips_active`` plumbing in the UNet is what makes the interleaving exact.
+
+Determinism contract: images are bit-identical per request to the one-shot
+engine at the same per-request latents, and the drained ``LedgerAccum``
+yields an energy headline bit-identical to the same requests served
+one-shot (``pipeline.energy_report_from_accum``) — slot count, arrival
+order, and occupancy cannot move a counter.  Tests: tests/test_continuous.py.
+
+Two schedulers share the request/trace vocabulary so benchmarks compare
+them under identical traces:
+
+``ContinuousScheduler``  — slot-based in-flight batching (this module's point)
+``FixedBatchScheduler``  — the micro-batching baseline, same arrival gating
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One text-to-image request flowing through a scheduler."""
+    rid: int
+    tokens: object                  # (1, text_len) int32 prompt tokens
+    arrival_s: float                # seconds after serving start
+    latents: object = None          # (1, S, S, C) initial noise (per-request)
+    uncond_tokens: object = None    # (1, text_len) or None (CFG off)
+    # filled by the scheduler:
+    admitted_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    image: object = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> Optional[float]:
+        if self.admitted_s is None:
+            return None
+        return self.admitted_s - self.arrival_s
+
+
+def make_requests(cfg, n: int, seed: int = 7, key=None,
+                  use_cfg: Optional[bool] = None) -> list:
+    """n requests with per-request prompt tokens and initial latents.
+
+    Latents are drawn PER REQUEST (independent fold of ``seed``), so the
+    same request produces the same image no matter which scheduler, slot,
+    or batch serves it — the property the bit-identity tests lean on.
+    Arrival times start at 0; apply a trace with :func:`apply_trace`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = key if key is not None else jax.random.PRNGKey(seed)
+    toks = jax.random.randint(jax.random.fold_in(key, 0),
+                              (n, cfg.text.max_len), 0, cfg.text.vocab_size)
+    if use_cfg is None:
+        use_cfg = cfg.ddim.guidance_scale != 1.0
+    s, c = cfg.unet.latent_size, cfg.unet.in_channels
+    reqs = []
+    for i in range(n):
+        lat = jax.random.normal(jax.random.fold_in(key, 1 + i),
+                                (1, s, s, c))
+        un = (jnp.zeros((1, cfg.text.max_len), jnp.int32) if use_cfg
+              else None)
+        reqs.append(Request(rid=i, tokens=toks[i:i + 1], arrival_s=0.0,
+                            latents=lat, uncond_tokens=un))
+    return reqs
+
+
+def bursty_trace(n: int, burst: int, gap_s: float, start_s: float = 0.0
+                 ) -> list:
+    """Deterministic bursty arrivals: ``burst`` requests every ``gap_s``."""
+    return [start_s + (i // max(burst, 1)) * gap_s for i in range(n)]
+
+
+def poisson_trace(n: int, rate_per_s: float, seed: int = 0) -> list:
+    """Poisson arrivals at ``rate_per_s`` (cumulative exponential gaps)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate_per_s, 1e-9), size=n)
+    return list(np.cumsum(gaps))
+
+
+def apply_trace(requests: list, arrivals: list) -> list:
+    for r, a in zip(requests, arrivals):
+        r.arrival_s = float(a)
+    return requests
+
+
+def _latency_metrics(requests: list, makespan_s: float) -> dict:
+    lats = np.asarray([r.latency_s for r in requests], dtype=np.float64)
+    queues = np.asarray([r.queue_s for r in requests], dtype=np.float64)
+    return {
+        "requests": len(requests),
+        "makespan_s": makespan_s,
+        "goodput_imgs_per_s": len(requests) / max(makespan_s, 1e-9),
+        "latency_s": {
+            "mean": float(lats.mean()),
+            "p50": float(np.percentile(lats, 50)),
+            "p95": float(np.percentile(lats, 95)),
+            "max": float(lats.max()),
+        },
+        "queue_wait_s": {
+            "mean": float(queues.mean()),
+            "p95": float(np.percentile(queues, 95)),
+        },
+    }
+
+
+class ContinuousScheduler:
+    """Slot-based in-flight scheduler (continuous batching).
+
+    ``engine`` is a ``DiffusionEngine``; ``num_slots`` fixes the step
+    executable's batch signature for the whole run.  ``run`` drives a
+    request list with wall-clock arrival gating: a request becomes
+    admissible once ``now >= arrival_s``, enters the first free slot
+    between steps, and its image is decoded the step its slot finishes.
+    """
+
+    def __init__(self, engine, num_slots: int):
+        self.engine = engine
+        self.num_slots = num_slots
+
+    def warmup(self) -> float:
+        """Compile the step/encode/decode executables off the clock."""
+        import jax
+        import jax.numpy as jnp
+
+        eng = self.engine
+        cfg = eng.cfg
+        t0 = time.perf_counter()
+        state = eng.init_slots(self.num_slots)
+        toks = jnp.zeros((1, cfg.text.max_len), jnp.int32)
+        un = toks if state.uncond_context is not None else None
+        state = eng.admit(state, 0, toks, jax.random.PRNGKey(0),
+                          uncond_tokens=un)
+        state = eng.slot_step(state)
+        # warm every power-of-two retirement-decode size a run can hit
+        k = 1
+        while k <= self.num_slots:
+            jax.block_until_ready(eng.decode_slots(state, list(range(k))))
+            k *= 2
+        return time.perf_counter() - t0
+
+    def run(self, requests: list, ledger: bool = False) -> dict:
+        import jax
+
+        eng = self.engine
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        ready: list = []
+        owner: dict = {}
+        state = eng.init_slots(self.num_slots)
+        completed = 0
+        steps = 0
+        step_wall = 0.0
+        occupancy_rows = 0
+        t0 = time.perf_counter()
+        while completed < len(requests):
+            now = time.perf_counter() - t0
+            while pending and pending[0].arrival_s <= now:
+                ready.append(pending.pop(0))
+            free = [s for s in range(self.num_slots) if s not in owner]
+            for slot in free:
+                if not ready:
+                    break
+                req = ready.pop(0)
+                state = eng.admit(state, slot, req.tokens, None,
+                                  uncond_tokens=req.uncond_tokens,
+                                  latents=req.latents)
+                owner[slot] = req
+                req.admitted_s = time.perf_counter() - t0
+            if not owner:
+                # nothing in flight: sleep to the next arrival
+                if pending:
+                    time.sleep(max(pending[0].arrival_s - now, 0.0))
+                continue
+            state = eng.slot_step(state)
+            steps += 1
+            step_wall += eng.last_wall_s
+            occupancy_rows += len(owner)
+            done = eng.finished_slots(state)
+            if done:
+                images = np.asarray(jax.device_get(
+                    eng.decode_slots(state, done)))
+                now = time.perf_counter() - t0
+                for j, slot in enumerate(done):
+                    req = owner.pop(slot)
+                    req.finished_s = now
+                    req.image = images[j]
+                    completed += 1
+                state = eng.retire(state, done)
+        makespan = time.perf_counter() - t0
+        metrics = {
+            "mode": "continuous",
+            "num_slots": self.num_slots,
+            "engine_steps": steps,
+            "step_wall_s": step_wall,
+            "iter_wall_ms": 1e3 * step_wall / max(steps, 1),
+            "mean_occupancy": occupancy_rows / max(steps * self.num_slots,
+                                                   1),
+            **_latency_metrics(requests, makespan),
+        }
+        if ledger:
+            from repro.core import tips
+            from repro.diffusion.pipeline import (energy_report_from_accum,
+                                                  tips_ratios_from_accum)
+            import jax.numpy as jnp
+
+            cfg = eng.cfg
+            rep = energy_report_from_accum(cfg, state.accum)
+            metrics["energy"] = {k: float(v)
+                                 for k, v in rep.summary().items()}
+            ratios = tips_ratios_from_accum(cfg, state.accum)
+            metrics["tips_low_ratio_per_iter"] = [float(r) for r in ratios]
+            metrics["tips_workload_low_fraction"] = float(
+                tips.workload_low_precision_fraction(jnp.asarray(ratios),
+                                                     ddim=cfg.ddim))
+        metrics["state"] = state
+        return metrics
+
+
+class FixedBatchScheduler:
+    """Micro-batching baseline under the SAME arrival gating.
+
+    Packs admissible requests into fixed-size batches in arrival order; a
+    batch launches when full, or — if the queue has drained and nothing
+    is in flight — as a padded partial (``stats_rows`` masks the padding
+    out of the ledger, exactly like ``serve_diffusion.serve``).  Every
+    request in a batch finishes when the batch's whole scan does, which is
+    precisely the tail-latency failure mode continuous batching removes.
+    """
+
+    def __init__(self, engine, micro_batch: int):
+        self.engine = engine
+        self.micro_batch = micro_batch
+
+    def warmup(self) -> float:
+        eng = self.engine
+        use_cfg = eng.cfg.ddim.guidance_scale != 1.0
+        t0 = time.perf_counter()
+        eng.warmup(self.micro_batch, use_cfg)
+        return time.perf_counter() - t0
+
+    def run(self, requests: list, ledger: bool = False) -> dict:
+        import jax.numpy as jnp
+
+        from repro.launch.serve_diffusion import micro_batches
+
+        eng = self.engine
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        ready: list = []
+        stats_per_batch = []
+        calls = 0
+        call_wall = 0.0
+        t0 = time.perf_counter()
+        completed = 0
+        while completed < len(requests):
+            now = time.perf_counter() - t0
+            while pending and pending[0].arrival_s <= now:
+                ready.append(pending.pop(0))
+            if len(ready) < self.micro_batch and pending:
+                # wait for a full batch while more arrivals are due
+                time.sleep(max(pending[0].arrival_s - now, 0.0))
+                continue
+            if not ready:
+                break
+            batch = [ready.pop(0)
+                     for _ in range(min(self.micro_batch, len(ready)))]
+            valid = len(batch)
+
+            def pack(rows):
+                # one micro_batches chunk: the exact padding semantics
+                # (repeat the first row) serve_diffusion uses and
+                # tests/test_serving.py pins
+                chunk, v = micro_batches(jnp.concatenate(rows, axis=0),
+                                         self.micro_batch)[0]
+                assert v == valid, (v, valid)
+                return chunk
+
+            toks = pack([r.tokens for r in batch])
+            lats = pack([r.latents for r in batch])
+            uncond = (pack([r.uncond_tokens for r in batch])
+                      if batch[0].uncond_tokens is not None else None)
+            admit_t = time.perf_counter() - t0
+            out = eng.generate(toks, None, uncond_tokens=uncond,
+                               latents=lats,
+                               stats_rows=valid if valid < self.micro_batch
+                               else None)
+            calls += 1
+            call_wall += eng.last_wall_s
+            images = np.asarray(out.images)
+            fin = time.perf_counter() - t0
+            for i, req in enumerate(batch):
+                req.admitted_s = admit_t
+                req.finished_s = fin
+                req.image = images[i]
+                completed += 1
+            stats_per_batch.append(out.stats)
+        makespan = time.perf_counter() - t0
+        metrics = {
+            "mode": "fixed_micro_batch",
+            "micro_batch": self.micro_batch,
+            "engine_calls": calls,
+            "call_wall_s": call_wall,
+            **_latency_metrics(requests, makespan),
+        }
+        if ledger and stats_per_batch:
+            from repro.core import tips
+            from repro.diffusion.pipeline import (
+                aggregated_tips_ratios_per_iter, energy_report_multi)
+
+            cfg = eng.cfg
+            fetched = [s.ledger_fetch() for s in stats_per_batch]
+            rep = energy_report_multi(cfg, fetched)
+            metrics["energy"] = {k: float(v)
+                                 for k, v in rep.summary().items()}
+            ratios = aggregated_tips_ratios_per_iter(cfg, fetched)
+            metrics["tips_low_ratio_per_iter"] = [float(r) for r in ratios]
+            metrics["tips_workload_low_fraction"] = float(
+                tips.workload_low_precision_fraction(jnp.asarray(ratios),
+                                                     ddim=cfg.ddim))
+        return metrics

@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
-      [--kernels fused] [--tips adaptive] [--mesh 4] [--ledger]
+      [--kernels fused] [--tips adaptive] [--mesh 4] [--ledger] \
+      [--continuous --slots 4 --arrival-rate 2.0 --burst 2]
 
 Micro-batching: incoming prompts are queued and packed into fixed-size
 micro-batches (padding the tail with repeats), each served by ONE compiled
@@ -10,6 +11,19 @@ engine call — the whole encode -> scanned-denoise -> decode path is a single
 XLA computation, with cond+uncond CFG fused into one batched UNet call per
 step.  The engine caches one executable per micro-batch signature, so after
 the first call every shape is compile-free.
+
+Continuous batching (``--continuous``, DESIGN.md §8): instead of draining
+fixed micro-batches, a persistent ``--slots``-row batch stays in flight and
+every denoising step advances all occupied slots — each at its OWN
+iteration index.  Finished rows are decoded and swapped for queued prompts
+between steps, so a request arriving mid-generation starts one UNet
+iteration later instead of one full generation later.  ``--arrival-rate``
+(requests/s, with ``--burst`` arrivals at a time; 0 = all at once) drives a
+deterministic bursty trace, and the report adds enqueue->image latency
+percentiles (p50/p95), queueing delay, occupancy and goodput.  The
+``--ledger`` headline comes from the integer per-iteration accumulator and
+is bit-identical to the same requests served one-shot, at any slot count
+or occupancy (tests/test_continuous.py pins this).
 
 Mesh mode (``--mesh N``): data-parallel sharded execution over N devices
 (DESIGN.md §6).  On a CPU host the N devices are simulated with the
@@ -185,6 +199,42 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
     return metrics
 
 
+def serve_continuous(cfg, num_requests: int, num_slots: int,
+                     arrival_rate: float = 0.0, burst: int = 1,
+                     key=None, ledger: bool = False, seed: int = 7) -> dict:
+    """Serve a synthetic request trace through the continuous scheduler.
+
+    ``arrival_rate`` is requests/second, arriving ``burst`` at a time
+    (0 = the whole queue is available at t=0).  Compilation happens off
+    the clock (``warmup``), so the latency percentiles measure serving,
+    not tracing.
+    """
+    import jax
+
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.launch.scheduler import (ContinuousScheduler, apply_trace,
+                                        bursty_trace, make_requests)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    eng = DiffusionEngine(cfg, key=key)
+    requests = make_requests(cfg, num_requests, seed=seed)
+    if arrival_rate > 0:
+        gap = burst / arrival_rate
+        apply_trace(requests, bursty_trace(num_requests, burst, gap))
+    sched = ContinuousScheduler(eng, num_slots)
+    compile_s = sched.warmup()
+    metrics = sched.run(requests, ledger=ledger)
+    metrics.pop("state")
+    metrics.update(
+        compile_s=compile_s,
+        kernel_policy=cfg.unet.effective_kernel_policy().describe(),
+        precision_policy=cfg.unet.effective_precision().describe(),
+        steps_per_image=cfg.ddim.num_inference_steps,
+        arrival={"rate_per_s": arrival_rate, "burst": burst},
+    )
+    return metrics
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -208,6 +258,16 @@ def main():
                     help="precision policy: 'fixed', 'adaptive', or field "
                          "overrides like 'adaptive,target=0.5,mid=true' "
                          "(see repro.core.precision.PrecisionPolicy)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching instead of fixed "
+                         "micro-batches (DESIGN.md §8)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="in-flight slot count for --continuous")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="request arrivals per second for --continuous "
+                         "(0 = whole queue available at t=0)")
+    ap.add_argument("--burst", type=int, default=1,
+                    help="arrivals per burst for --arrival-rate")
     args = ap.parse_args()
     if args.steps < 1:
         ap.error("--steps must be >= 1")
@@ -217,6 +277,15 @@ def main():
         ap.error("--requests must be >= 1")
     if args.mesh < 0:
         ap.error("--mesh must be >= 0")
+    if args.slots < 1:
+        ap.error("--slots must be >= 1")
+    if args.burst < 1:
+        ap.error("--burst must be >= 1")
+    if args.arrival_rate < 0:
+        ap.error("--arrival-rate must be >= 0")
+    if args.continuous and args.mesh > 1:
+        ap.error("--continuous is single-device (see DESIGN.md §8); "
+                 "drop --mesh")
 
     if args.mesh > 1:
         # must run before the first jax backend init; only meaningful for
@@ -231,15 +300,22 @@ def main():
 
     mesh = make_data_mesh(args.mesh) if args.mesh > 1 else None
     cfg = make_config(args)
+    batching = (f"continuous slots={args.slots}" if args.continuous
+                else f"micro-batch {args.micro_batch}")
     print(f"engine: latent {cfg.unet.latent_size}^2, {args.steps} steps, "
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
-          f"micro-batch {args.micro_batch}, kernels {args.kernels}, "
+          f"{batching}, kernels {args.kernels}, "
           f"tips {args.tips}, "
           f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
-    reqs = synthetic_requests(cfg, args.requests)
-    metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
-                    mesh=mesh)
+    if args.continuous:
+        metrics = serve_continuous(cfg, args.requests, args.slots,
+                                   arrival_rate=args.arrival_rate,
+                                   burst=args.burst, ledger=args.ledger)
+    else:
+        reqs = synthetic_requests(cfg, args.requests)
+        metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
+                        mesh=mesh)
     print(json.dumps(metrics, indent=2))
 
 

@@ -1,0 +1,297 @@
+"""Continuous-batching (slot-state) serving tests — DESIGN.md §8.
+
+The contract under test:
+
+  * images served through the slot runtime are BIT-IDENTICAL per request
+    to the one-shot engine at the same per-request latents — interleaving
+    requests at heterogeneous step indices in one batched UNet call is a
+    pure scheduling change;
+  * the drained ``LedgerAccum`` yields an energy headline bit-identical
+    to the same requests served one-shot, at ANY slot count, admission
+    order, or occupancy pattern (integer-counter exactness), with
+    knife-edge thresholds keeping every counter input-sensitive;
+  * the active-slot mask is what guarantees that: un-masking it (the
+    positive control) lets the unoccupied rows' garbage move the headline;
+  * admission/retirement swap rows without retracing the step executable;
+  * the CFG contract carries over (fused cond+uncond per step).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import (PipelineConfig,
+                                      energy_report_from_accum,
+                                      energy_report_multi)
+from repro.diffusion.stats import LedgerAccum
+from repro.launch.scheduler import (ContinuousScheduler,
+                                    FixedBatchScheduler, apply_trace,
+                                    bursty_trace, make_requests,
+                                    poisson_trace)
+
+
+def knife_edge(cfg):
+    """Thresholds at the actual smoke-model score scale.
+
+    The untrained model's near-uniform softmax rows saturate the counters
+    at the paper operating point (nothing pruned, nothing spotted) — both
+    sides of every equality would be trivially equal.  ~1/T and
+    ~1/text_len make every counter input-sensitive, so the positive
+    controls below have teeth.
+    """
+    t = cfg.unet.latent_size ** 2
+    return dataclasses.replace(cfg, unet=dataclasses.replace(
+        cfg.unet, pssa_threshold=1.0 / t,
+        tips_threshold=1.0 / cfg.unet.text_len))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return knife_edge(PipelineConfig.smoke())
+
+
+@pytest.fixture(scope="module")
+def eng(cfg):
+    return DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+
+
+def _requests(cfg, n, seed=7):
+    return make_requests(cfg, n, seed=seed)
+
+
+def _drain(eng, requests, num_slots, order=None):
+    """Drive requests through the slot runtime; returns (state, images).
+
+    ``order`` permutes admission (arrival order); default request order.
+    All requests are available immediately — occupancy varies naturally
+    as slots drain at the end of the queue.
+    """
+    queue = list(order if order is not None else range(len(requests)))
+    owner = {}
+    images = {}
+    state = eng.init_slots(num_slots)
+
+    def fill(state):
+        for s in range(num_slots):
+            if s not in owner and queue:
+                r = requests[queue.pop(0)]
+                state = eng.admit(state, s, r.tokens, None,
+                                  uncond_tokens=r.uncond_tokens,
+                                  latents=r.latents)
+                owner[s] = r
+        return state
+
+    state = fill(state)
+    while owner:
+        state = eng.slot_step(state)
+        done = eng.finished_slots(state)
+        if done:
+            decoded = np.asarray(jax.device_get(
+                eng.decode_slots(state, done)))
+            for j, s in enumerate(done):
+                images[owner.pop(s).rid] = decoded[j]
+            state = eng.retire(state, done)
+            state = fill(state)
+    return state, images
+
+
+def _one_shot(eng, requests, batch):
+    """Oracle: the same requests through plain ``generate`` calls."""
+    images, stats = {}, []
+    for i in range(0, len(requests), batch):
+        chunk = requests[i:i + batch]
+        toks = jnp.concatenate([r.tokens for r in chunk], axis=0)
+        lats = jnp.concatenate([r.latents for r in chunk], axis=0)
+        uncond = (jnp.concatenate([r.uncond_tokens for r in chunk], axis=0)
+                  if chunk[0].uncond_tokens is not None else None)
+        out = eng.generate(toks, None, uncond_tokens=uncond, latents=lats)
+        arr = np.asarray(out.images)
+        for j, r in enumerate(chunk):
+            images[r.rid] = arr[j]
+        stats.append(out.stats)
+    return images, stats
+
+
+# ----------------------------------------------------------------------------
+# Image bit-identity
+# ----------------------------------------------------------------------------
+def test_images_bit_identical_to_one_shot(cfg, eng):
+    reqs = _requests(cfg, 4)
+    ref, _ = _one_shot(eng, reqs, batch=2)
+    _, imgs = _drain(eng, reqs, num_slots=2)
+    for r in reqs:
+        np.testing.assert_array_equal(imgs[r.rid], ref[r.rid],
+                                      err_msg=f"request {r.rid}")
+
+
+def test_images_bit_identical_under_cfg(cfg):
+    cfg_g = dataclasses.replace(cfg, ddim=dataclasses.replace(
+        cfg.ddim, guidance_scale=7.5))
+    eng = DiffusionEngine(cfg_g, key=jax.random.PRNGKey(0))
+    reqs = make_requests(cfg_g, 4)
+    assert reqs[0].uncond_tokens is not None    # CFG requests carry uncond
+    ref, _ = _one_shot(eng, reqs, batch=2)
+    _, imgs = _drain(eng, reqs, num_slots=2)
+    for r in reqs:
+        np.testing.assert_array_equal(imgs[r.rid], ref[r.rid],
+                                      err_msg=f"request {r.rid}")
+
+
+# ----------------------------------------------------------------------------
+# Ledger bit-identity across slot counts / occupancy patterns
+# ----------------------------------------------------------------------------
+def test_ledger_bit_identical_across_slot_counts(cfg, eng):
+    reqs = _requests(cfg, 4)
+    _, stats = _one_shot(eng, reqs, batch=4)
+    ref = energy_report_multi(cfg, stats).summary()
+    for slots in (2, 3, 4):
+        state, _ = _drain(eng, reqs, num_slots=slots)
+        rep = energy_report_from_accum(cfg, state.accum).summary()
+        assert rep == ref, f"slots={slots}"
+        # every request executed every iteration exactly once
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(state.accum.rows)), len(reqs))
+
+
+def test_ledger_bit_identical_across_occupancy_patterns(cfg, eng):
+    """Admission order staggers which slots sit at which step index —
+    the aggregated headline must not move."""
+    reqs = _requests(cfg, 5)                 # odd count: uneven drain
+    state_a, _ = _drain(eng, reqs, num_slots=2)
+    state_b, _ = _drain(eng, reqs, num_slots=3, order=[4, 2, 0, 3, 1])
+    rep_a = energy_report_from_accum(cfg, state_a.accum).summary()
+    rep_b = energy_report_from_accum(cfg, state_b.accum).summary()
+    assert rep_a == rep_b
+
+
+def test_ledger_headline_is_input_sensitive(cfg, eng):
+    """Positive control for the equality above: at knife-edge thresholds a
+    different request set MUST move the integer counters."""
+    state_a, _ = _drain(eng, _requests(cfg, 4, seed=7), num_slots=2)
+    state_b, _ = _drain(eng, _requests(cfg, 4, seed=23), num_slots=2)
+    assert not np.array_equal(
+        np.asarray(jax.device_get(state_a.accum.nnz)),
+        np.asarray(jax.device_get(state_b.accum.nnz)))
+    rep_a = energy_report_from_accum(cfg, state_a.accum).summary()
+    rep_b = energy_report_from_accum(cfg, state_b.accum).summary()
+    assert rep_a != rep_b
+
+
+def test_unmasked_garbage_moves_the_headline(cfg, monkeypatch):
+    """Positive control for the active-slot mask: scatter WITHOUT the mask
+    and the unoccupied rows' garbage lands in the ledger buckets."""
+    reqs = _requests(cfg, 2)
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    state_good, _ = _drain(eng, reqs, num_slots=4)   # 2 slots always empty
+
+    orig = LedgerAccum.scatter
+    monkeypatch.setattr(
+        LedgerAccum, "scatter",
+        lambda self, step_idx, active, ss:
+            orig(self, step_idx, jnp.ones_like(active), ss))
+    eng_bad = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    state_bad, _ = _drain(eng_bad, reqs, num_slots=4)
+    assert not np.array_equal(
+        np.asarray(jax.device_get(state_good.accum.nnz)),
+        np.asarray(jax.device_get(state_bad.accum.nnz)))
+    # the mask is also what keeps the per-iteration row counts honest
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(state_good.accum.rows)), 2)
+    assert int(np.asarray(jax.device_get(state_bad.accum.rows))[0]) > 2
+
+
+# ----------------------------------------------------------------------------
+# Slot mechanics
+# ----------------------------------------------------------------------------
+def test_step_executable_compiles_once_per_signature(cfg):
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    reqs = _requests(cfg, 5)
+    _drain(eng, reqs, num_slots=2)           # occupancy varies over the run
+    assert len(eng._slot_compiled) == 1      # one step executable reused
+    _drain(eng, reqs, num_slots=3)
+    assert len(eng._slot_compiled) == 2      # new slot count retraces
+
+
+def test_step_counts_and_occupancy(cfg, eng):
+    """2 slots x 4 requests x 3 steps: full occupancy, 6 steps total."""
+    n_steps = cfg.ddim.num_inference_steps
+    reqs = _requests(cfg, 4)
+    state, imgs = _drain(eng, reqs, num_slots=2)
+    assert len(imgs) == 4
+    rows = np.asarray(jax.device_get(state.accum.rows))
+    assert rows.sum() == 4 * n_steps         # every request, every step
+    assert not bool(np.asarray(jax.device_get(state.active)).any())
+
+
+def test_admit_cfg_contract(cfg, eng):
+    state = eng.init_slots(2)
+    toks = jnp.zeros((1, cfg.text.max_len), jnp.int32)
+    with pytest.raises(ValueError, match="guidance_scale == 1.0"):
+        eng.admit(state, 0, toks, jax.random.PRNGKey(0),
+                  uncond_tokens=toks)
+    cfg_g = dataclasses.replace(cfg, ddim=dataclasses.replace(
+        cfg.ddim, guidance_scale=7.5))
+    eng_g = DiffusionEngine(cfg_g, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="requires classifier-free"):
+        eng_g.admit(eng_g.init_slots(2), 0, toks, jax.random.PRNGKey(0))
+    # a non-CFG state from another engine cannot take a CFG admit
+    with pytest.raises(ValueError, match="slot state CFG mode"):
+        eng_g.admit(state, 0, toks, jax.random.PRNGKey(0),
+                    uncond_tokens=toks)
+
+
+def test_init_slots_guards(cfg, smoke_mesh):
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0), mesh=smoke_mesh)
+    with pytest.raises(ValueError, match="single-device"):
+        eng.init_slots(2)
+    eng2 = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="num_slots"):
+        eng2.init_slots(0)
+
+
+# ----------------------------------------------------------------------------
+# Schedulers
+# ----------------------------------------------------------------------------
+def test_scheduler_continuous_matches_fixed_batch_bitwise(cfg):
+    """Same trace through both schedulers: identical images AND identical
+    energy headline (the continuous accumulator vs the one-shot batch
+    stats aggregation)."""
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    reqs_c = make_requests(cfg, 4)
+    reqs_f = make_requests(cfg, 4)
+    cont = ContinuousScheduler(eng, num_slots=2)
+    cont.warmup()
+    m_c = cont.run(reqs_c, ledger=True)
+    m_c.pop("state")
+    fixed = FixedBatchScheduler(eng, micro_batch=2)
+    m_f = fixed.run(reqs_f, ledger=True)
+    for rc, rf in zip(reqs_c, reqs_f):
+        np.testing.assert_array_equal(rc.image, rf.image,
+                                      err_msg=f"request {rc.rid}")
+    assert m_c["energy"] == m_f["energy"]
+    assert m_c["tips_low_ratio_per_iter"] == m_f["tips_low_ratio_per_iter"]
+    assert m_c["latency_s"]["p95"] > 0 and m_f["latency_s"]["p95"] > 0
+
+
+def test_scheduler_respects_arrival_gating(cfg):
+    """A request arriving after the makespan-so-far cannot be admitted
+    before its arrival time."""
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    reqs = make_requests(cfg, 3)
+    apply_trace(reqs, [0.0, 0.0, 0.35])
+    cont = ContinuousScheduler(eng, num_slots=2)
+    cont.warmup()
+    cont.run(reqs)
+    late = reqs[2]
+    assert late.admitted_s >= 0.35
+    assert late.finished_s > late.admitted_s
+    assert all(r.image is not None for r in reqs)
+
+
+def test_traces_are_deterministic():
+    assert bursty_trace(6, 2, 0.5) == [0.0, 0.0, 0.5, 0.5, 1.0, 1.0]
+    assert poisson_trace(5, 4.0, seed=3) == poisson_trace(5, 4.0, seed=3)
+    assert poisson_trace(5, 4.0, seed=3) != poisson_trace(5, 4.0, seed=4)

@@ -1,0 +1,148 @@
+"""Serving-helper + benchmark-registry coverage (previously untested).
+
+``micro_batches`` is the padding/accounting keystone of the fixed
+micro-batch front-end — its ``valid`` counts drive both imgs/s and the
+``stats_rows`` ledger masking, so exactness here is load-bearing.  The
+``benchmarks/run.py`` registry is what CI and the bench-regression gate
+drive; every entry must resolve and unknown names must error cleanly.
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve_diffusion as S
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ----------------------------------------------------------------------------
+# micro_batches: tail padding + valid-count exactness
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize("n,batch", [(1, 1), (1, 4), (3, 2), (4, 2),
+                                     (5, 4), (7, 3), (8, 8)])
+def test_micro_batches_exact(n, batch):
+    reqs = jnp.arange(n * 5).reshape(n, 5)
+    out = S.micro_batches(reqs, batch)
+    # valid counts partition the request count exactly
+    assert sum(v for _, v in out) == n
+    assert len(out) == -(-n // batch)
+    rebuilt = jnp.concatenate([chunk[:v] for chunk, v in out], axis=0)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(reqs))
+    for chunk, valid in out:
+        assert chunk.shape == (batch,) + reqs.shape[1:]   # fixed signature
+        assert 1 <= valid <= batch
+        # padded rows repeat the chunk's FIRST request row
+        for j in range(valid, batch):
+            np.testing.assert_array_equal(np.asarray(chunk[j]),
+                                          np.asarray(chunk[0]))
+    # only the LAST chunk may be padded
+    for chunk, valid in out[:-1]:
+        assert valid == batch
+
+
+def test_micro_batches_empty_requests():
+    out = S.micro_batches(jnp.zeros((0, 5), jnp.int32), 4)
+    assert out == []
+
+
+# ----------------------------------------------------------------------------
+# benchmarks/run.py registry
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def run_mod():
+    sys.path.insert(0, ROOT)
+    try:
+        import benchmarks.run as R
+        return R
+    finally:
+        sys.path.remove(ROOT)
+
+
+def test_listing_covers_every_registry_entry(run_mod):
+    listing = run_mod.bench_listing()
+    for name in run_mod.BENCHES:
+        assert name in listing, name
+
+
+def test_every_bench_module_resolves(run_mod):
+    """Each registry entry points at an importable module file with a
+    docstring summary and a ``run`` callable (``--only`` contract)."""
+    sys.path.insert(0, ROOT)
+    try:
+        for name, modname in run_mod.BENCHES.items():
+            path = os.path.join(ROOT, "benchmarks",
+                                modname.rsplit(".", 1)[1] + ".py")
+            assert os.path.exists(path), path
+            assert run_mod._summary_line(modname), modname
+            assert callable(run_mod._runner(name)), name
+    finally:
+        sys.path.remove(ROOT)
+
+
+def test_unknown_only_name_errors_cleanly(run_mod, monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "definitely_not_a_bench"])
+    with pytest.raises(SystemExit) as e:
+        run_mod.main()
+    assert e.value.code == 2                       # argparse error exit
+    err = capsys.readouterr().err
+    assert "definitely_not_a_bench" in err
+
+
+def test_list_flag_prints_listing_and_exits_zero(run_mod, monkeypatch,
+                                                 capsys):
+    monkeypatch.setattr(sys, "argv", ["run.py", "--list"])
+    with pytest.raises(SystemExit) as e:
+        run_mod.main()
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    for name in run_mod.BENCHES:
+        assert name in out
+
+
+# ----------------------------------------------------------------------------
+# bench-regression gate: comparison logic (the CI job re-runs the real
+# benches; here the classifier itself is pinned on synthetic records)
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def check_mod():
+    sys.path.insert(0, ROOT)
+    try:
+        import benchmarks.check_regression as C
+        return C
+    finally:
+        sys.path.remove(ROOT)
+
+
+def test_regression_classifier_passes_identical(check_mod):
+    rec = {"stats_bit_identical": True,
+           "energy_headline": {"mj": 343.58149848883204},
+           "wall_s_per_call": 1.5, "note": "free text"}
+    assert check_mod.compare_records("x", rec, rec) == []
+
+
+def test_regression_classifier_hard_fails_on_bit_flag(check_mod):
+    a = {"stats_bit_identical": True}
+    b = {"stats_bit_identical": False}
+    probs = check_mod.compare_records("x", a, b)
+    assert probs and "stats_bit_identical" in probs[0]
+
+
+def test_regression_classifier_hard_fails_on_headline_drift(check_mod):
+    a = {"energy": {"mj_per_iter_with_ema": 343.5}}
+    b = {"energy": {"mj_per_iter_with_ema": 343.6}}
+    assert check_mod.compare_records("x", a, b)
+    # ... while wall-clock drift inside the band is tolerated
+    a = {"serve_wall_s": 1.0}
+    b = {"serve_wall_s": 2.5}
+    assert check_mod.compare_records("x", a, b, wall_tolerance=4.0) == []
+    assert check_mod.compare_records("x", a, b, wall_tolerance=2.0)
+
+
+def test_regression_classifier_fails_on_structure_drift(check_mod):
+    a = {"energy": {"mj_per_iter_with_ema": 1.0}}
+    assert check_mod.compare_records("x", a, {})
+    assert check_mod.compare_records("x", {}, a)
