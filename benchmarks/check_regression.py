@@ -47,7 +47,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 # fast enough for a CI gate; sharded_engine's fake-device dp sweep is
 # opt-in via --only
 DEFAULT_BENCHES = ("engine", "fused_attention", "fused_cross_attention",
-                   "continuous_serving")
+                   "continuous_serving", "temporal_reuse")
 
 _WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
                  "goodput", "makespan", "scaling", "efficiency",

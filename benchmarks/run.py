@@ -33,6 +33,7 @@ BENCHES = {
     "fused_cross_attention": "benchmarks.bench_fused_cross_attention",
     "sharded_engine": "benchmarks.bench_sharded_engine",
     "continuous_serving": "benchmarks.bench_continuous_serving",
+    "temporal_reuse": "benchmarks.bench_temporal_reuse",
     "roofline": "benchmarks.roofline",
 }
 
@@ -110,6 +111,10 @@ def main() -> None:
     if args.check:
         from benchmarks.check_regression import DEFAULT_BENCHES, check
         names = (args.only,) if args.only is not None else DEFAULT_BENCHES
+        skipped = [n for n in BENCHES if n not in names]
+        if skipped:
+            print(f"[check] benches NOT gated this run (use --only): "
+                  f"{skipped}")
         raise SystemExit(check(names))
     names = list(BENCHES)
     if args.only is not None:

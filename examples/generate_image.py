@@ -34,8 +34,9 @@ def main():
     ap.add_argument("--python-loop", action="store_true",
                     help="seed-style per-step dispatch instead of the "
                          "jitted engine")
-    ap.add_argument("--kernels", default="reference",
-                    help="kernel policy: 'reference', 'fused', or per-op "
+    ap.add_argument("--kernels", default="auto",
+                    help="kernel policy: 'auto' (backend-aware), "
+                         "'reference', 'fused', or per-op "
                          "overrides (see repro.kernels.dispatch)")
     ap.add_argument("--tips", default="fixed",
                     help="precision policy: 'fixed', 'adaptive', or field "

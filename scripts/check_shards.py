@@ -6,9 +6,16 @@ chunk split).  The shard file lists live HERE — the workflow asks this
 script for them (``--files A``), so the split cannot silently diverge
 between jobs.  ``--verify`` is the drift guard: it collects the full suite
 and each shard with ``pytest --collect-only`` and fails unless the shard
-union EQUALS the full collection (a new test file that lands in no shard,
-or a file listed twice, breaks the build instead of silently skipping
-tests).
+union EQUALS the full collection (a file listed twice, or a shard test
+missing from the full collection, breaks the build instead of silently
+skipping tests).
+
+A NEW ``tests/test_*.py`` file needs no manual shard bump: any test file
+on disk that appears in no hand-curated list is auto-assigned
+deterministically (fewest-files shard first, alphabetical everywhere) by
+``_effective_shards()``, and both ``--files`` and ``--verify`` operate on
+the effective assignment — the two CI jobs recompute the identical split
+from the same directory listing.
 
 Usage:
   python scripts/check_shards.py --files A      # print shard A's files
@@ -17,6 +24,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import glob
 import os
 import subprocess
 import sys
@@ -24,8 +32,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # the balanced two-way split (roughly equal wall time on a 2-core runner);
-# every tests/test_*.py file MUST appear in exactly one shard — --verify
-# enforces it against the real collection
+# files NOT listed here are auto-assigned by _effective_shards()
 SHARDS = {
     "A": [
         "tests/test_archs.py",
@@ -50,6 +57,33 @@ SHARDS = {
 }
 
 
+def _effective_shards() -> dict:
+    """The curated split plus deterministic auto-assignment of new files.
+
+    Every ``tests/test_*.py`` on disk that no curated list names is
+    appended to the shard with the fewest files at that moment
+    (alphabetical shard-name tiebreak), in alphabetical file order — a
+    pure function of the directory listing, so parallel CI jobs agree on
+    the split without a manual SHARDS bump.  Curated entries whose file
+    vanished are dropped (the file's tests are gone from the full
+    collection too, so --verify stays green across deletions).
+    """
+    on_disk = sorted(
+        os.path.relpath(p, ROOT).replace(os.sep, "/")
+        for p in glob.glob(os.path.join(ROOT, "tests", "test_*.py")))
+    listed = {f for files in SHARDS.values() for f in files}
+    eff = {name: [f for f in files if f in set(on_disk)]
+           for name, files in SHARDS.items()}
+    auto = {}
+    for f in on_disk:
+        if f in listed:
+            continue
+        name = min(sorted(eff), key=lambda n: len(eff[n]))
+        eff[name].append(f)
+        auto[f] = name
+    return {"shards": eff, "auto": auto}
+
+
 def _collect(args: list) -> set:
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
@@ -67,10 +101,13 @@ def _collect(args: list) -> set:
 
 
 def verify() -> int:
+    eff = _effective_shards()
+    for f, name in sorted(eff["auto"].items()):
+        print(f"auto-assigned {f} -> shard {name}")
     full = _collect([])
     union: set = set()
     overlap_ok = True
-    for name, files in SHARDS.items():
+    for name, files in eff["shards"].items():
         got = _collect(files)
         dup = union & got
         if dup:
@@ -84,7 +121,8 @@ def verify() -> int:
     print(f"full collection: {len(full)} tests; shard union: {len(union)}")
     if missing:
         print(f"COLLECTION DRIFT: {len(missing)} test(s) in no shard "
-              f"(add their file to scripts/check_shards.py):")
+              f"(tests collected outside tests/test_*.py? check "
+              f"scripts/check_shards.py):")
         for t in sorted(missing)[:20]:
             print(f"  - {t}")
     if extra:
@@ -108,7 +146,12 @@ def main() -> None:
                         "pytest collection and shards are disjoint")
     args = ap.parse_args()
     if args.files:
-        print(" ".join(SHARDS[args.files]))
+        eff = _effective_shards()
+        for f, name in sorted(eff["auto"].items()):
+            if name == args.files:
+                print(f"auto-assigned {f} -> shard {name}",
+                      file=sys.stderr)
+        print(" ".join(eff["shards"][args.files]))
         raise SystemExit(0)
     raise SystemExit(verify())
 

@@ -1,0 +1,232 @@
+"""ReusePolicy — temporal patch reuse across denoising steps (SIGE-style).
+
+The paper's PSSA exploits *spatial* patch similarity inside one attention
+score matrix; SIGE (SNIPPETS.md §3) applies the same patch-delta signal
+*temporally*: between consecutive denoising iterations — and between an
+edited request and its cached base — only a few percent of activation
+patches actually change, so the transformer stages can gather the changed
+patch rows, run attention/FFN on those alone, and scatter the results over
+the previous step's cached activations.
+
+This module holds the policy object and the cache pytree; the patch-delta
+op lives in ``repro.kernels.patch_reuse`` (routed through
+``kernels.dispatch`` like every other hot-path op) and the model-side
+gather/compute/scatter in ``repro.diffusion.unet._transformer_block``.
+
+Exactness contract (DESIGN.md §9): with ``threshold=0`` every patch is
+active, the gather permutation is the identity (stable argsort of an
+all-False key), and gather -> compute -> scatter is bit-identical to the
+dense path — outputs AND integer reuse counters — across reference|fused
+kernel routing, vmap/scan, fused-CFG, and slot-engine contexts.  The same
+holds for a fully-changed input at any threshold: every patch trips the
+delta, so cached values are provably never read.
+
+Two operating modes:
+
+``temporal``  — the cache is the *previous step's* activations, carried
+                through the scan / slot state.  ``capacity`` must stay 1.0:
+                the executable's gather width is static, and a fresh
+                (invalid) cache marks every patch active on a row's first
+                step.  Savings are modeled (EMA ledger + reuse counters);
+                wall-clock shapes are unchanged.
+``edit``      — the cache is a *base request's* recorded per-step
+                activations (img2img / editing).  The caller seeds valid
+                caches, so ``capacity < 1`` genuinely shrinks the gathered
+                matmul shapes — the wall-clock lever the edit benchmark
+                measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_MODES = ("off", "temporal", "edit")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReusePolicy:
+    """Temporal patch-reuse decisions (frozen/hashable, like KernelPolicy).
+
+    ``threshold``: a patch is active iff the max-abs delta of its tokens
+    against the cached reference reaches it (0.0 -> every patch active ->
+    dense bit-exactness).  ``capacity``: static fraction of patch slots the
+    gather keeps per row — the executable-shape knob (1.0 -> all patches,
+    identity permutation).  Invalid cache rows force all their patches
+    active regardless of threshold.
+    """
+    enabled: bool = False
+    threshold: float = 0.0
+    capacity: float = 1.0
+
+    def __post_init__(self):
+        if self.threshold < 0.0:
+            raise ValueError(
+                f"ReusePolicy.threshold={self.threshold}: patch deltas are "
+                f"max-abs values — expected >= 0")
+        if not 0.0 < self.capacity <= 1.0:
+            raise ValueError(
+                f"ReusePolicy.capacity={self.capacity}: expected a patch "
+                f"fraction in (0, 1]")
+
+    # -- presets ---------------------------------------------------------
+    @classmethod
+    def off(cls) -> "ReusePolicy":
+        """Dense path: no cache threaded, no reuse counters."""
+        return cls()
+
+    @classmethod
+    def temporal(cls, threshold: float = 0.05) -> "ReusePolicy":
+        """Previous-step reuse carried through the scan / slot state."""
+        return cls(enabled=True, threshold=threshold, capacity=1.0)
+
+    @classmethod
+    def edit(cls, threshold: float = 0.05,
+             capacity: float = 0.125) -> "ReusePolicy":
+        """Base-request reuse with a shrunken static gather (img2img)."""
+        return cls(enabled=True, threshold=threshold, capacity=capacity)
+
+    @classmethod
+    def parse(cls, spec: str) -> "ReusePolicy":
+        """Build a policy from a CLI spec (the ``--reuse`` flag).
+
+        ``spec`` is a mode name (``off`` | ``temporal`` | ``edit``) or a
+        comma-separated list where a bare mode selects its preset and
+        ``key=value`` items override fields, e.g. ``"temporal,threshold=0.02"``
+        or ``"edit,threshold=0.1,capacity=0.25"``.
+        """
+        pol = None
+        fields = {}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            if item in _MODES:
+                pol = cls.off() if item == "off" else getattr(cls, item)()
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"reuse policy spec {item!r}: expected a mode in "
+                    f"{_MODES} or key=value")
+            key, val = (s.strip() for s in item.split("=", 1))
+            if key == "threshold":
+                fields["threshold"] = float(val)
+            elif key == "capacity":
+                fields["capacity"] = float(val)
+            elif key == "enabled":
+                if val.lower() not in ("true", "false"):
+                    raise ValueError(
+                        f"reuse policy spec: enabled={val!r} (expected true "
+                        f"or false)")
+                fields["enabled"] = val.lower() == "true"
+            else:
+                raise ValueError(
+                    f"reuse policy spec: unknown key {key!r} (expected "
+                    f"threshold, capacity or enabled)")
+        base = pol if pol is not None else cls()
+        return dataclasses.replace(base, **fields) if fields else base
+
+    # -- views -----------------------------------------------------------
+    def cap_patches(self, num_patches: int) -> int:
+        """Static gather width: how many patch slots the plan keeps."""
+        return min(num_patches,
+                   max(1, int(math.ceil(self.capacity * num_patches))))
+
+    def describe(self) -> dict:
+        """JSON-friendly view for serving metrics / benchmark records."""
+        return {"enabled": self.enabled, "threshold": self.threshold,
+                "capacity": self.capacity}
+
+
+class ReuseRowCounters(NamedTuple):
+    """Per-row integer reuse counters for ONE transformer block.
+
+    ``computed``: patches actually gathered and recomputed this step;
+    ``total``: patches in the block's token grid.  Realized reuse ratio =
+    1 - computed/total.  Integer, so ledger accumulation across slots,
+    steps, and dp shards is exact (the same contract as PSSARowCounters).
+    """
+    computed: jax.Array   # (rows,) int32
+    total: jax.Array      # (rows,) int32
+
+
+class LayerReuseCache(NamedTuple):
+    """Cached activations of one transformer block (one denoising step).
+
+    ``ref`` is the block's token-space INPUT (the delta reference); ``sa``
+    / ``ca`` / ``ffn`` are the three pre-residual stage outputs the scatter
+    falls back to for inactive patches.  Under fused-CFG prefix dedup the
+    first block's ``ref``/``sa`` carry cond-half rows only (B) while
+    ``ca``/``ffn`` carry [cond | uncond] (2B) — matching where the hidden
+    state is tiled inside the block.
+    """
+    ref: jax.Array    # (rows_pre, T, C)
+    sa: jax.Array     # (rows_pre, T, C)
+    ca: jax.Array     # (rows_post, T, C)
+    ffn: jax.Array    # (rows_post, T, C)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ReuseCache:
+    """Per-request-row cached activations for every transformer block.
+
+    ``valid`` is one bool per REQUEST row (the cond half under CFG): False
+    forces every patch of that row active on the next step — the admit /
+    fresh-state invalidation path.  ``layers`` follows
+    ``stats.attn_layer_order``; each entry is a ``LayerReuseCache``.
+    """
+    valid: jax.Array                        # (B,) bool
+    layers: Tuple[LayerReuseCache, ...]
+
+    def tree_flatten(self):
+        return (self.valid, self.layers), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        valid, layers = children
+        return cls(valid=valid, layers=tuple(layers))
+
+    def invalidate_row(self, row) -> "ReuseCache":
+        """Mark one request row stale (slot admission)."""
+        return dataclasses.replace(self,
+                                   valid=self.valid.at[row].set(False))
+
+
+def layer_channels(cfg, resolution: int) -> int:
+    """Channel width of the transformer block at ``resolution``.
+
+    ``unet_forward`` visits resolution ``latent_size >> i`` with
+    ``block_channels[i]`` on the way down and revisits the same width on
+    the way up, so the resolution determines the stage index.
+    """
+    stage = (cfg.latent_size // resolution).bit_length() - 1
+    return cfg.block_channels[stage]
+
+
+def reuse_cache_zeros(cfg, batch: int, use_cfg: bool) -> "ReuseCache":
+    """All-invalid cache matching ``unet_forward``'s block geometry.
+
+    ``use_cfg`` mirrors the fused-CFG prefix dedup: the first attention
+    block runs pre-dup (B rows) through its self-attention, later blocks
+    (and the first block's cross-attn/FFN) see [cond | uncond] (2B rows).
+    Invalid rows make the zero payloads unreachable: every patch of a
+    fresh row is active, so nothing is ever read from them.
+    """
+    from repro.diffusion.stats import attn_layer_order
+
+    dt = jnp.dtype(cfg.dtype)
+    mult = 2 if use_cfg else 1
+    layers = []
+    for idx, lk in enumerate(attn_layer_order(cfg)):
+        t = lk.resolution * lk.resolution
+        c = layer_channels(cfg, lk.resolution)
+        pre = batch if (use_cfg and idx == 0) else batch * mult
+        post = batch * mult
+        layers.append(LayerReuseCache(
+            ref=jnp.zeros((pre, t, c), dt),
+            sa=jnp.zeros((pre, t, c), dt),
+            ca=jnp.zeros((post, t, c), dt),
+            ffn=jnp.zeros((post, t, c), dt)))
+    return ReuseCache(valid=jnp.zeros((batch,), bool),
+                      layers=tuple(layers))

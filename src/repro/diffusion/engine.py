@@ -38,7 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.diffusion.sampler import denoise_step, sample_scan
+from repro.core.reuse import ReuseCache, reuse_cache_zeros
+from repro.diffusion.sampler import (denoise_step, sample_scan,
+                                     sample_scan_reuse)
 from repro.diffusion.stats import LedgerAccum, attn_layer_order
 from repro.diffusion.text_encoder import encode_text, init_text_encoder_params
 from repro.diffusion.unet import init_unet_params, unet_forward
@@ -74,10 +76,14 @@ class SlotState:
     step_idx: jax.Array                    # (S,) int32
     active: jax.Array                      # (S,) bool
     accum: LedgerAccum
+    # per-slot previous-step activations for temporal patch reuse; None
+    # (static, via the treedef) when cfg.unet.reuse_policy is disabled
+    reuse_cache: Optional[ReuseCache] = None
 
     def tree_flatten(self):
         return ((self.latents, self.context, self.uncond_context,
-                 self.step_idx, self.active, self.accum), None)
+                 self.step_idx, self.active, self.accum,
+                 self.reuse_cache), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -130,7 +136,7 @@ class DiffusionEngine:
     """
 
     def __init__(self, cfg, key=None, kernel_policy=None, mesh=None,
-                 precision_policy=None):
+                 precision_policy=None, reuse_policy=None):
         if kernel_policy is not None:
             # route the UNet hot path per the policy (kernels.dispatch)
             cfg = dataclasses.replace(
@@ -140,6 +146,21 @@ class DiffusionEngine:
             cfg = dataclasses.replace(
                 cfg, unet=dataclasses.replace(cfg.unet,
                                               precision=precision_policy))
+        if reuse_policy is not None:
+            cfg = dataclasses.replace(
+                cfg, unet=dataclasses.replace(cfg.unet,
+                                              reuse_policy=reuse_policy))
+        if cfg.unet.reuse_policy.enabled and cfg.unet.reuse_policy.capacity < 1.0:
+            # a fresh engine run starts from an INVALID cache: every patch
+            # of every row is active on step 0, so a sub-1.0 static gather
+            # capacity would silently reuse zeros.  capacity < 1 belongs to
+            # the edit path (sampler.sample_scan_reuse with recorded
+            # base_caches), where the reference is valid from step 0.
+            raise ValueError(
+                f"reuse_policy.capacity={cfg.unet.reuse_policy.capacity} < "
+                f"1.0 on the engine's temporal path — the cache starts "
+                f"invalid, so capacity must be 1.0 (use the edit-mode "
+                f"sampler with recorded base caches for shrunken gathers)")
         self.cfg = cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         k1, k2, k3 = jax.random.split(key, 3)
@@ -199,14 +220,20 @@ class DiffusionEngine:
         uncond = (encode_text(self.text_params, uncond_tokens, cfg.text)
                   if uncond_tokens is not None else None)
 
-        def unet_apply(lat, tvec, ctx, active, stats_rows=None,
-                       cfg_dup=False):
+        def unet_apply(lat, tvec, ctx, active, **kw):
             return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
-                                tips_active=active, stats_rows=stats_rows,
-                                cfg_dup=cfg_dup)
+                                tips_active=active, **kw)
 
-        latents, stats = sample_scan(unet_apply, latents, context, uncond,
-                                     cfg.ddim, stats_rows=stats_rows)
+        if cfg.unet.reuse_policy.enabled:
+            cache = reuse_cache_zeros(cfg.unet, latents.shape[0],
+                                      use_cfg=uncond_tokens is not None)
+            latents, stats = sample_scan_reuse(
+                unet_apply, latents, context, uncond, cfg.ddim,
+                reuse_cache=cache, stats_rows=stats_rows)
+        else:
+            latents, stats = sample_scan(unet_apply, latents, context,
+                                         uncond, cfg.ddim,
+                                         stats_rows=stats_rows)
         images = decode(self.vae_params, latents, cfg.vae)
         return images, latents, stats
 
@@ -228,7 +255,8 @@ class DiffusionEngine:
         # policy objects are appended so a policy change retraces
         key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh),
                self.cfg.unet.effective_kernel_policy(),
-               self.cfg.unet.effective_precision())
+               self.cfg.unet.effective_precision(),
+               self.cfg.unet.reuse_policy)
         fn = self._compiled.get(key)
         if fn is None:
             if use_cfg:
@@ -338,7 +366,11 @@ class DiffusionEngine:
             step_idx=jnp.zeros((num_slots,), jnp.int32),
             active=jnp.zeros((num_slots,), bool),
             accum=LedgerAccum.zeros(cfg.ddim.num_inference_steps,
-                                    len(attn_layer_order(cfg.unet))))
+                                    len(attn_layer_order(cfg.unet))),
+            # all-invalid: a slot's first step after admission computes
+            # every patch dense (nothing is ever read from the zeros)
+            reuse_cache=(reuse_cache_zeros(cfg.unet, num_slots, use_cfg)
+                         if cfg.unet.reuse_policy.enabled else None))
 
     def _encode_compiled(self):
         if self._encode_fn is None:
@@ -383,6 +415,12 @@ class DiffusionEngine:
                     new = dataclasses.replace(
                         new, uncond_context=state.uncond_context
                         .at[slot].set(un_row))
+                if state.reuse_cache is not None:
+                    # cache invalidation on admit: the row's first step
+                    # must not reuse the previous occupant's activations
+                    new = dataclasses.replace(
+                        new,
+                        reuse_cache=new.reuse_cache.invalidate_row(slot))
                 return new
             self._admit_fn = jax.jit(_adm, donate_argnums=(0,))
         un_row = enc(uncond_tokens)[0] if use_cfg else None
@@ -392,23 +430,25 @@ class DiffusionEngine:
     def _slot_step_traced(self, state: SlotState) -> SlotState:
         cfg = self.cfg
 
-        def unet_apply(lat, tvec, ctx, act, stats_rows=None, cfg_dup=False,
-                       row_stats=False):
+        def unet_apply(lat, tvec, ctx, act, **kw):
             return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
-                                tips_active=act, stats_rows=stats_rows,
-                                cfg_dup=cfg_dup, row_stats=row_stats)
+                                tips_active=act, **kw)
 
-        lat, stats = denoise_step(unet_apply, state.latents, state.context,
-                                  state.uncond_context, state.step_idx,
-                                  cfg.ddim, active=state.active,
-                                  row_stats=True)
+        out = denoise_step(unet_apply, state.latents, state.context,
+                           state.uncond_context, state.step_idx,
+                           cfg.ddim, active=state.active,
+                           row_stats=True, reuse_cache=state.reuse_cache)
+        if state.reuse_cache is not None:
+            lat, stats, new_cache = out
+        else:
+            (lat, stats), new_cache = out, None
         # stats masking invariant: inactive rows are zeroed BEFORE the
         # scatter, and each active row lands in ITS iteration's bucket —
         # integer adds, so any occupancy pattern reproduces the one-shot
-        # folded counters exactly
+        # folded counters exactly (reuse counters included)
         accum = state.accum.scatter(state.step_idx, state.active, stats)
         return dataclasses.replace(
-            state, latents=lat, accum=accum,
+            state, latents=lat, accum=accum, reuse_cache=new_cache,
             step_idx=state.step_idx + state.active.astype(jnp.int32))
 
     def slot_step(self, state: SlotState) -> SlotState:
@@ -420,7 +460,8 @@ class DiffusionEngine:
         """
         key = (state.num_slots, state.uncond_context is not None,
                self.cfg.unet.effective_kernel_policy(),
-               self.cfg.unet.effective_precision())
+               self.cfg.unet.effective_precision(),
+               self.cfg.unet.reuse_policy)
         fn = self._slot_compiled.get(key)
         if fn is None:
             fn = jax.jit(self._slot_step_traced, donate_argnums=(0,))

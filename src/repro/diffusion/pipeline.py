@@ -368,6 +368,57 @@ def aggregated_tips_ratios_per_iter(cfg: "PipelineConfig",
     return out
 
 
+def reuse_ratios_from_accum(cfg: "PipelineConfig", accum) -> list:
+    """Per-iteration REALIZED temporal-reuse ratio from a ``LedgerAccum``.
+
+    Ratio ``i`` is ``1 - computed/total`` over the iteration's reuse row
+    counters summed across layers and accounted rows — the fraction of
+    patch rows served from the cache instead of recomputed.  Integer
+    counters in, one float division out, so the value is bit-identical
+    across slot counts, admission orders, and data-parallel layouts (the
+    same invariance the SAS/TIPS buckets carry).  Iterations with no
+    accounted reuse work (dense runs, not-yet-reached steps) report 0.0.
+    """
+    import numpy as np
+
+    comp, tot = (np.asarray(x) for x in jax.device_get(
+        (accum.reuse_computed, accum.reuse_total)))
+    out = []
+    for i in range(cfg.ddim.num_inference_steps):
+        t = float(tot[i].sum())
+        out.append(0.0 if t == 0.0 else 1.0 - float(comp[i].sum()) / t)
+    return out
+
+
+def aggregated_reuse_ratios_per_iter(cfg: "PipelineConfig",
+                                     stats_per_batch) -> list:
+    """Per-iteration realized reuse ratio across scanned engine calls.
+
+    ``stats_per_batch``: stacked ``UNetStats`` trajectories whose
+    ``reuse`` counters carry a leading iteration axis (what
+    ``sample_scan_reuse`` returns).  Terms are summed across batches and
+    layers before dividing — same reduction as
+    :func:`reuse_ratios_from_accum`, so slot serving and one-shot serving
+    report identical ratios for the same work.  Dense trajectories
+    (empty ``reuse`` tuple) contribute nothing; all-dense input yields
+    zeros.
+    """
+    import numpy as np
+
+    out = []
+    for i in range(cfg.ddim.num_inference_steps):
+        num = den = 0.0
+        for s in stats_per_batch:
+            reuse = s.reuse if isinstance(s, UNetStats) else ()
+            for c in reuse:
+                comp, tot = (np.asarray(x) for x in
+                             jax.device_get((c.computed, c.total)))
+                num += float(comp[i].sum())
+                den += float(tot[i].sum())
+        out.append(0.0 if den == 0.0 else 1.0 - num / den)
+    return out
+
+
 @dataclasses.dataclass
 class PipelineEnergyReport:
     optimized: energy.EnergyReport

@@ -119,7 +119,7 @@ def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
 
 def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
                 cfg: DDIMConfig, stats_rows=None, active=None,
-                row_stats: bool = False):
+                row_stats: bool = False, reuse_cache=None):
     """ONE denoising update at PER-SLOT step indices (the scan body).
 
     ``step_idx`` is (B,) int32 — each batch row's DDIM iteration in
@@ -146,6 +146,12 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
     requests per-row integer counters (``SlotStats``) instead of folded
     stats; it is forwarded to ``unet_apply`` only when set, so legacy
     closures without the keyword keep working.
+
+    ``reuse_cache`` (a ``core.reuse.ReuseCache``) threads the temporal
+    patch-reuse reference through the UNet; ``unet_apply`` then returns a
+    third element — the new cache — and so does this function:
+    ``(latents, stats, new_cache)``.  Without it the two-tuple contract
+    is unchanged.
     """
     acp = alphas_cumprod(cfg)
     ts = timestep_schedule(cfg)
@@ -158,6 +164,8 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
     t = ts[idx]                                   # (B,) per-row timesteps
     tips_vec = idx < cfg.tips_active_iters        # (B,) per-row TIPS flag
     kw = {"row_stats": True} if row_stats else {}
+    if reuse_cache is not None:
+        kw["reuse_cache"] = reuse_cache
 
     use_cfg = cfg.guidance_scale != 1.0 and uncond_context is not None
     if use_cfg:
@@ -169,16 +177,24 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
         # and discards them; the fused path skips them).
         ctx_fused = jnp.concatenate([context, uncond_context], axis=0)
         rows = b if stats_rows is None else stats_rows
-        eps_fused, stats = unet_apply(latents, t, ctx_fused, tips_vec,
-                                      stats_rows=rows, cfg_dup=True, **kw)
-        eps = guided_eps(eps_fused, cfg.guidance_scale)
+        out = unet_apply(latents, t, ctx_fused, tips_vec,
+                         stats_rows=rows, cfg_dup=True, **kw)
     else:
-        eps, stats = unet_apply(latents, t, context, tips_vec,
-                                stats_rows=stats_rows, **kw)
+        out = unet_apply(latents, t, context, tips_vec,
+                         stats_rows=stats_rows, **kw)
+    if reuse_cache is not None:
+        eps, stats, new_cache = out
+    else:
+        eps, stats = out
+        new_cache = None
+    if use_cfg:
+        eps = guided_eps(eps, cfg.guidance_scale)
     new_lat = ddim_step(latents, eps, t, t - step, acp)
     if active is not None:
         keep = active.reshape((b,) + (1,) * (latents.ndim - 1))
         new_lat = jnp.where(keep, new_lat, latents)
+    if reuse_cache is not None:
+        return new_lat, stats, new_cache
     return new_lat, stats
 
 
@@ -213,3 +229,62 @@ def sample_scan(unet_apply, latents, context, uncond_context,
 
     latents, stacked = jax.lax.scan(body, latents, jnp.arange(n))
     return latents, stacked
+
+
+def sample_scan_reuse(unet_apply, latents, context, uncond_context,
+                      cfg: DDIMConfig, reuse_cache=None, stats_rows=None,
+                      base_caches=None, record_caches: bool = False):
+    """Scanned denoising loop with the temporal-reuse cache threaded.
+
+    Two cache sources, mirroring the two ``ReusePolicy`` modes:
+
+    * **temporal** — ``reuse_cache`` (typically all-invalid zeros from
+      ``core.reuse.reuse_cache_zeros``) rides the scan carry: each step
+      reuses the PREVIOUS step's activations.  ``record_caches=True``
+      additionally stacks every step's emitted cache along a leading axis
+      (the base-trace recorder for edit serving) and returns
+      ``(latents, stats, caches)``.
+    * **edit** — ``base_caches`` is such a recorded stack from a BASE
+      request; step ``i`` reuses the base's step-``i`` activations
+      (indexed from the stack, nothing carried), which is what makes
+      ``capacity < 1`` safe: the reference is valid from step 0.
+
+    Returns ``(latents, stacked_stats)`` (plus the recorded caches when
+    asked); ``stacked_stats`` carries per-layer reuse counters.
+    """
+    n = cfg.num_inference_steps
+    b = latents.shape[0]
+    if stats_rows is not None and not (0 < stats_rows <= b):
+        raise ValueError(f"stats_rows={stats_rows} outside [1, {b}]")
+    if (reuse_cache is None) == (base_caches is None):
+        raise ValueError(
+            "pass exactly one of reuse_cache (temporal mode) or "
+            "base_caches (edit mode)")
+
+    if base_caches is not None:
+        def body(lat, i):
+            cache_i = jax.tree_util.tree_map(lambda x: x[i], base_caches)
+            lat, stats, _ = denoise_step(
+                unet_apply, lat, context, uncond_context,
+                jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
+                reuse_cache=cache_i)
+            return lat, stats
+
+        latents, stacked = jax.lax.scan(body, latents, jnp.arange(n))
+        return latents, stacked
+
+    def body(carry, i):
+        lat, cache = carry
+        lat, stats, cache = denoise_step(
+            unet_apply, lat, context, uncond_context,
+            jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
+            reuse_cache=cache)
+        ys = (stats, cache) if record_caches else stats
+        return (lat, cache), ys
+
+    (latents, _), ys = jax.lax.scan(body, (latents, reuse_cache),
+                                    jnp.arange(n))
+    if record_caches:
+        stacked, caches = ys
+        return latents, stacked, caches
+    return latents, ys

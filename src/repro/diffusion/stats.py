@@ -77,19 +77,26 @@ class UNetStats:
     per-layer stat pytrees in the same order.  Leaves are scalars (or
     per-query arrays) for a single forward pass, and gain a leading
     ``num_steps`` axis after a scanned sampler run.
+
+    ``reuse`` carries per-layer ``reuse.ReuseRowCounters`` (same order)
+    when the forward ran with a temporal-reuse cache; it stays the empty
+    tuple — contributing no leaves, so every existing treedef is
+    unchanged — on the dense path.
     """
     layers: Tuple[LayerKey, ...]
     pssa: Tuple[PSSAStats, ...]
     tips: Tuple[TIPSResult, ...]
+    reuse: Tuple = ()
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
-        return (self.pssa, self.tips), self.layers
+        return (self.pssa, self.tips, self.reuse), self.layers
 
     @classmethod
     def tree_unflatten(cls, layers, children):
-        pssa, tips = children
-        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips))
+        pssa, tips, reuse = children
+        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips),
+                   reuse=tuple(reuse))
 
     # -- views -----------------------------------------------------------
     def __len__(self) -> int:
@@ -136,21 +143,25 @@ class UNetStats:
         same arrays — so every report is bit-identical to an on-device
         read.
         """
-        pssa_np, low_np = jax.device_get(
-            (self.pssa, tuple(t.low_precision_ratio for t in self.tips)))
+        pssa_np, low_np, reuse_np = jax.device_get(
+            (self.pssa, tuple(t.low_precision_ratio for t in self.tips),
+             self.reuse))
         tips_np = tuple(
             t._replace(low_precision_ratio=low)
             for t, low in zip(self.tips, low_np))
         return UNetStats(layers=self.layers, pssa=tuple(pssa_np),
-                         tips=tips_np)
+                         tips=tips_np, reuse=tuple(reuse_np))
 
     # -- construction ----------------------------------------------------
     @classmethod
-    def from_layer_list(cls, layers, pssa, tips) -> "UNetStats":
+    def from_layer_list(cls, layers, pssa, tips, reuse=()) -> "UNetStats":
         layers, pssa, tips = tuple(layers), tuple(pssa), tuple(tips)
+        reuse = tuple(reuse)
         assert len(layers) == len(pssa) == len(tips), \
             (len(layers), len(pssa), len(tips))
-        return cls(layers=layers, pssa=pssa, tips=tips)
+        assert not reuse or len(reuse) == len(layers), \
+            (len(reuse), len(layers))
+        return cls(layers=layers, pssa=pssa, tips=tips, reuse=reuse)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -170,14 +181,16 @@ class SlotStats:
     layers: Tuple[LayerKey, ...]
     pssa: Tuple                     # per-layer PSSARowCounters
     tips: Tuple                     # per-layer TIPSRowCounters
+    reuse: Tuple = ()               # per-layer ReuseRowCounters (or empty)
 
     def tree_flatten(self):
-        return (self.pssa, self.tips), self.layers
+        return (self.pssa, self.tips, self.reuse), self.layers
 
     @classmethod
     def tree_unflatten(cls, layers, children):
-        pssa, tips = children
-        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips))
+        pssa, tips, reuse = children
+        return cls(layers=layers, pssa=tuple(pssa), tips=tuple(tips),
+                   reuse=tuple(reuse))
 
     def __len__(self) -> int:
         return len(self.layers)
@@ -193,12 +206,27 @@ class SlotStats:
         imp = jnp.stack([t.important for t in self.tips], axis=1)
         return nnz, ones_xor, imp
 
+    def reuse_counter_matrices(self):
+        """Stack per-layer reuse counters: two (B, L) integer arrays.
+
+        Returns (computed, total) in ``layers`` column order, or ``None``
+        when the forward ran the dense path (no reuse counters).
+        """
+        if not self.reuse:
+            return None
+        computed = jnp.stack([r.computed for r in self.reuse], axis=1)
+        total = jnp.stack([r.total for r in self.reuse], axis=1)
+        return computed, total
+
     @classmethod
-    def from_layer_list(cls, layers, pssa, tips) -> "SlotStats":
+    def from_layer_list(cls, layers, pssa, tips, reuse=()) -> "SlotStats":
         layers, pssa, tips = tuple(layers), tuple(pssa), tuple(tips)
+        reuse = tuple(reuse)
         assert len(layers) == len(pssa) == len(tips), \
             (len(layers), len(pssa), len(tips))
-        return cls(layers=layers, pssa=pssa, tips=tips)
+        assert not reuse or len(reuse) == len(layers), \
+            (len(reuse), len(layers))
+        return cls(layers=layers, pssa=pssa, tips=tips, reuse=reuse)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -218,13 +246,16 @@ class LedgerAccum:
     documents); a smoke-geometry serving run sits orders of magnitude below
     it.
     """
-    nnz: jax.Array        # (num_steps, L) int
-    ones_xor: jax.Array   # (num_steps, L) int
-    imp: jax.Array        # (num_steps, L) int
-    rows: jax.Array       # (num_steps,) int
+    nnz: jax.Array             # (num_steps, L) int
+    ones_xor: jax.Array        # (num_steps, L) int
+    imp: jax.Array             # (num_steps, L) int
+    rows: jax.Array            # (num_steps,) int
+    reuse_computed: jax.Array  # (num_steps, L) int — gathered patches
+    reuse_total: jax.Array     # (num_steps, L) int — patch-grid size
 
     def tree_flatten(self):
-        return (self.nnz, self.ones_xor, self.imp, self.rows), None
+        return (self.nnz, self.ones_xor, self.imp, self.rows,
+                self.reuse_computed, self.reuse_total), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -237,7 +268,9 @@ class LedgerAccum:
         return cls(nnz=jnp.zeros((num_steps, num_layers), dt),
                    ones_xor=jnp.zeros((num_steps, num_layers), dt),
                    imp=jnp.zeros((num_steps, num_layers), dt),
-                   rows=jnp.zeros((num_steps,), dt))
+                   rows=jnp.zeros((num_steps,), dt),
+                   reuse_computed=jnp.zeros((num_steps, num_layers), dt),
+                   reuse_total=jnp.zeros((num_steps, num_layers), dt))
 
     def scatter(self, step_idx: jax.Array, active: jax.Array,
                 slot_stats: SlotStats) -> "LedgerAccum":
@@ -251,6 +284,15 @@ class LedgerAccum:
         """
         nnz, ones_xor, imp = slot_stats.counter_matrices()
         gate = active.astype(self.nnz.dtype)[:, None]
+        reuse = slot_stats.reuse_counter_matrices()
+        if reuse is None:
+            reuse_computed, reuse_total = self.reuse_computed, self.reuse_total
+        else:
+            computed, total = reuse
+            reuse_computed = self.reuse_computed.at[step_idx].add(
+                computed.astype(self.nnz.dtype) * gate, mode="drop")
+            reuse_total = self.reuse_total.at[step_idx].add(
+                total.astype(self.nnz.dtype) * gate, mode="drop")
         return LedgerAccum(
             nnz=self.nnz.at[step_idx].add(
                 nnz.astype(self.nnz.dtype) * gate, mode="drop"),
@@ -259,7 +301,9 @@ class LedgerAccum:
             imp=self.imp.at[step_idx].add(
                 imp.astype(self.nnz.dtype) * gate, mode="drop"),
             rows=self.rows.at[step_idx].add(
-                active.astype(self.rows.dtype), mode="drop"))
+                active.astype(self.rows.dtype), mode="drop"),
+            reuse_computed=reuse_computed,
+            reuse_total=reuse_total)
 
 
 def coerce_per_step_stats(stats) -> list:

@@ -35,9 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionPolicy
+from repro.core.reuse import (LayerReuseCache, ReuseCache, ReusePolicy,
+                              ReuseRowCounters)
 from repro.diffusion.stats import SlotStats, UNetStats, attn_layer_order
 from repro.kernels import dispatch
 from repro.kernels.dispatch import KernelPolicy
+from repro.kernels.patch_reuse import ops as reuse_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +83,10 @@ class UNetConfig:
     # thresholds, second-matmul coverage — the single source of precision
     # truth the engine keys its executable cache on
     precision: PrecisionPolicy = PrecisionPolicy()
+    # temporal patch reuse (repro.core.reuse): SIGE-style gather/scatter of
+    # changed patches over cached previous-step activations; takes effect
+    # when a ReuseCache is threaded into unet_forward
+    reuse_policy: ReusePolicy = ReusePolicy()
 
     dtype: str = "float32"
 
@@ -329,8 +336,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                        stats_rows=None, dup_after_self: bool = False,
                        policy: KernelPolicy | None = None,
                        precision: PrecisionPolicy | None = None,
-                       row_stats: bool = False):
-    """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult).
+                       row_stats: bool = False, reuse=None):
+    """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult, reuse_out).
 
     ``tips_active`` is a scalar flag (whole-batch schedule) or a (B,) row
     vector — continuous batching runs slots at heterogeneous denoising
@@ -354,6 +361,17 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     the most expensive self-attention in the network (the first block sits
     at the highest resolution).  ``x2d`` then has half as many rows as
     ``context``.
+
+    ``reuse``: ``None`` (dense path, ``reuse_out`` is None) or a
+    ``(ReusePolicy, LayerReuseCache, valid)`` triple.  With it, the block
+    thresholds the per-patch delta of its token input against the cached
+    reference, gathers only active patch rows into the self-attention
+    queries / cross-attention queries / FFN rows (K/V, norms, and
+    projections stay dense), and scatters the stage outputs over the
+    cached activations; ``reuse_out`` is then
+    ``(new LayerReuseCache, ReuseRowCounters)``.  At threshold 0 (or an
+    invalid cache row) every patch is active, the plan is the identity,
+    and the block is bit-identical to the dense path (DESIGN.md §9).
     """
     b, hgt, wid, c = x2d.shape
     res = hgt  # feature-map resolution
@@ -363,6 +381,29 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     if precision is None:
         precision = cfg.effective_precision()
 
+    rows = gate_rows = cache = None
+    if reuse is not None:
+        rp, cache, valid = reuse
+        tokens_in = x2d.reshape(b, hgt * wid, c)
+        patch_r = cfg.patch_size(res)
+        _, changed = dispatch.patch_delta(policy, tokens_in, cache.ref,
+                                          patch=patch_r,
+                                          threshold=rp.threshold)
+        vrow = valid
+        if vrow.shape[0] != b:
+            # post-dup layers carry [cond | uncond] rows; validity is per
+            # request row, so tile it like the hidden state was
+            vrow = jnp.concatenate([vrow, vrow], axis=0)
+        act = jnp.logical_or(changed, jnp.logical_not(vrow)[:, None])
+        npatch = tokens_in.shape[1] // patch_r
+        order, gate = reuse_ops.reuse_plan(act, rp.cap_patches(npatch))
+        rows = reuse_ops.plan_token_rows(order, patch_r)
+        gate_rows = jnp.repeat(gate, patch_r, axis=1)
+        sr = b if stats_rows is None else stats_rows
+        counters = ReuseRowCounters(
+            computed=jnp.sum(gate.astype(jnp.int32), axis=1)[:sr],
+            total=jnp.full((b,), npatch, jnp.int32)[:sr])
+
     h = group_norm(x2d, p["norm_in"]["scale"], p["norm_in"]["bias"],
                    cfg.groups)
     h = h.reshape(b, hgt * wid, c)
@@ -371,7 +412,10 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
 
     # --- self-attention (PSSA) ---
     hn = layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"])
-    q = _attn_heads(hn, p["sa_q"]["w"], heads)
+    # reuse: queries gathered to the active patch rows, K/V stay dense —
+    # every gathered query still attends over the full token set
+    hn_q = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
+    q = _attn_heads(hn_q, p["sa_q"]["w"], heads)
     k = _attn_heads(hn, p["sa_k"]["w"], heads)
     v = _attn_heads(hn, p["sa_v"]["w"], heads)
     patch = cfg.patch_size(res)
@@ -382,30 +426,44 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                  else stats_rows,
                                  reference_stats=cfg.pssa_stats_reference,
                                  row_stats=row_stats)
-    h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
-                            p["sa_o"]["w"]) + p["sa_o"]["b"])
+    sa_proj = jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
+                         p["sa_o"]["w"]) + p["sa_o"]["b"]
+    if reuse is not None:
+        sa_proj = reuse_ops.scatter_rows(cache.sa, rows, sa_proj, gate_rows)
+    sa_full = sa_proj
+    h = resid + sa_proj
 
     if dup_after_self:
         # tile [cond] -> [cond | uncond]; divergence starts at cross-attn
         h = jnp.concatenate([h, h], axis=0)
         x2d = jnp.concatenate([x2d, x2d], axis=0)
         b = x2d.shape[0]
+        if reuse is not None:
+            # the plan was computed on the cond half; both halves share it
+            rows = jnp.concatenate([rows, rows], axis=0)
+            gate_rows = jnp.concatenate([gate_rows, gate_rows], axis=0)
 
     # --- cross-attention (TIPS CAS source) ---
     resid = h
     hn = layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"])
-    q = _attn_heads(hn, p["ca_q"]["w"], heads)
+    hn_q = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
+    q = _attn_heads(hn_q, p["ca_q"]["w"], heads)
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
     vt = _attn_heads(context, p["ca_v"]["w"], heads)
     ca = dispatch.cross_attention(policy, q, kt, vt, precision=precision,
                                   stats_rows=stats_rows,
                                   row_stats=row_stats)
-    h = resid + (jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
-                            p["ca_o"]["w"]) + p["ca_o"]["b"])
+    ca_proj = jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
+                         p["ca_o"]["w"]) + p["ca_o"]["b"]
+    if reuse is not None:
+        ca_proj = reuse_ops.scatter_rows(cache.ca, rows, ca_proj, gate_rows)
+    ca_full = ca_proj
+    h = resid + ca_proj
 
     # --- FFN (GEGLU) with TIPS mixed precision ---
     resid = h
     hn = layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
+    hn_f = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
     if cfg.tips:
         active = tips_active
         if getattr(active, "ndim", 0) == 1:
@@ -414,15 +472,26 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
             if active.shape[0] != h.shape[0]:
                 active = jnp.concatenate([active, active], axis=0)
             active = active[:, None]
+        # ca.important_full already lives on the gathered rows (the
+        # cross-attention queries were gathered with the same plan)
         important = jnp.logical_or(ca.important_full,
                                    jnp.logical_not(active))
     else:
         important = None
-    h = resid + dispatch.ffn_geglu(policy, hn, p, important,
-                                   precision=precision)
+    ffn = dispatch.ffn_geglu(policy, hn_f, p, important,
+                             precision=precision)
+    if reuse is not None:
+        ffn = reuse_ops.scatter_rows(cache.ffn, rows, ffn, gate_rows)
+    ffn_full = ffn
+    h = resid + ffn
 
     h = jnp.einsum("btc,cd->btd", h, p["proj_out"]["w"]) + p["proj_out"]["b"]
-    return x2d + h.reshape(b, hgt, wid, c), sa.stats, ca.tips_result
+    out = x2d + h.reshape(b, hgt, wid, c)
+    if reuse is None:
+        return out, sa.stats, ca.tips_result, None
+    new_cache = LayerReuseCache(ref=tokens_in, sa=sa_full, ca=ca_full,
+                                ffn=ffn_full)
+    return out, sa.stats, ca.tips_result, (new_cache, counters)
 
 
 def _downsample(x, p):
@@ -442,7 +511,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                  tips_active: bool | jax.Array = True,
                  stats_rows: Optional[int] = None,
                  cfg_dup: bool = False,
-                 row_stats: bool = False):
+                 row_stats: bool = False,
+                 reuse_cache: Optional[ReuseCache] = None):
     """latents (B, S, S, 4), timesteps (B,), context (B, Ttext, ctx_dim).
 
     Returns (eps-prediction (B, S, S, 4), ``UNetStats`` pytree) with one
@@ -463,12 +533,24 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     cross-attention — identical for both halves — runs once on B rows and
     the hidden state is tiled to 2B there.  ``eps`` comes back with 2B
     rows, split by ``sampler.guided_eps``.
+
+    ``reuse_cache`` (a ``core.reuse.ReuseCache`` built for this batch/CFG
+    geometry) switches on temporal patch reuse when
+    ``cfg.reuse_policy.enabled``: each transformer block gathers only the
+    patches whose input delta against the cache reaches the policy
+    threshold and scatters over the cached activations.  The return then
+    gains a third element — the NEW cache (this step's activations, all
+    rows valid) — and ``stats`` carries per-layer ``ReuseRowCounters``.
     """
     pssa_stats: list = []
     tips_stats: list = []
+    reuse_stats: list = []
+    new_layer_caches: list = []
     tips_active = jnp.asarray(tips_active)
     policy = cfg.effective_kernel_policy()
     precision = cfg.effective_precision()
+    reuse_pol = cfg.reuse_policy
+    reuse_on = reuse_pol.enabled and reuse_cache is not None
     needs_dup = cfg_dup
     if cfg_dup:
         assert context.shape[0] == 2 * latents.shape[0], \
@@ -482,16 +564,26 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
 
     def attn_block(h, bp):
         nonlocal temb, needs_dup
-        h, sa, ca = _transformer_block(h, bp, context, cfg, tips_active,
-                                       stats_rows, dup_after_self=needs_dup,
-                                       policy=policy, precision=precision,
-                                       row_stats=row_stats)
+        reuse_arg = None
+        if reuse_on:
+            reuse_arg = (reuse_pol, reuse_cache.layers[len(pssa_stats)],
+                         reuse_cache.valid)
+        h, sa, ca, ru = _transformer_block(h, bp, context, cfg, tips_active,
+                                           stats_rows,
+                                           dup_after_self=needs_dup,
+                                           policy=policy,
+                                           precision=precision,
+                                           row_stats=row_stats,
+                                           reuse=reuse_arg)
         if needs_dup:
             # downstream resnets now see [cond | uncond] rows
             temb = jnp.concatenate([temb, temb], axis=0)
             needs_dup = False
         pssa_stats.append(sa)
         tips_stats.append(ca)
+        if reuse_on:
+            new_layer_caches.append(ru[0])
+            reuse_stats.append(ru[1])
         return h
 
     def pop_skip(h):
@@ -538,7 +630,12 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                  params["conv_out"]["b"])
     stats_cls = SlotStats if row_stats else UNetStats
     stats = stats_cls.from_layer_list(attn_layer_order(cfg), pssa_stats,
-                                      tips_stats)
+                                      tips_stats,
+                                      reuse=tuple(reuse_stats))
+    if reuse_on:
+        new_cache = ReuseCache(valid=jnp.ones_like(reuse_cache.valid),
+                               layers=tuple(new_layer_caches))
+        return eps, stats, new_cache
     return eps, stats
 
 

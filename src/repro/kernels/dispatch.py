@@ -15,6 +15,7 @@ Ops and implementations (``DISPATCH_TABLE``):
   cross_attention  reference | fused    text cross-attention + TIPS CAS
   ffn              reference | dbsc     GEGLU FFN (TIPS mixed precision)
   bitmap           reference | kernel   PSXU bitmap / patch-XOR / popcount
+  reuse            reference | kernel   temporal-reuse patch-delta bitmap
 
 ``interpret=None`` (the default) resolves per backend at trace time —
 interpret mode only where Pallas has no real lowering (CPU) — so the same
@@ -34,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import attention, tips
 from repro.kernels.bitslice_matmul.ops import bitslice_matmul
 from repro.kernels.patch_bitmap.ops import patch_bitmap as _patch_bitmap_op
+from repro.kernels.patch_reuse.ops import patch_delta as _patch_delta_op
 from repro.kernels.runtime import resolve_interpret
 
 _CHOICES = {
@@ -41,8 +43,9 @@ _CHOICES = {
     "cross_attention": ("reference", "fused"),
     "ffn": ("reference", "dbsc"),
     "bitmap": ("reference", "kernel"),
+    "reuse": ("reference", "kernel"),
 }
-_PRESETS = ("reference", "fused")
+_PRESETS = ("reference", "fused", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,11 +61,13 @@ class KernelPolicy:
     cross_attention: str = "reference"
     ffn: str = "reference"
     bitmap: str = "reference"
+    reuse: str = "reference"
     interpret: bool | None = None
     attn_block_q: int = 128
     attn_block_k: int = 128
     cross_block_q: int = 128
     bitmap_block_rows: int = 64
+    reuse_block_patches: int = 8
 
     def __post_init__(self):
         for op, allowed in _CHOICES.items():
@@ -88,13 +93,29 @@ class KernelPolicy:
         of the fused memory path.
         """
         return cls(self_attention="fused", cross_attention="fused",
-                   bitmap="kernel")
+                   bitmap="kernel", reuse="kernel")
+
+    @classmethod
+    def auto(cls) -> "KernelPolicy":
+        """Backend-aware default: fused where Pallas compiles, reference
+        where it would only interpret.
+
+        On CPU the fused kernels run through the Pallas interpreter, which
+        is SLOWER than the materializing XLA reference (the PR 4 serving
+        note measured the interpret-mode cross-attention kernel at 0.76x
+        reference wall-clock) — so interpret backends keep the reference
+        implementations and compiled backends get ``fused()``.  Stats are
+        bit-identical either way (DESIGN.md §5), so the choice is pure
+        wall time; this is what the CLIs default to.
+        """
+        return cls.fused() if not resolve_interpret(None) else cls.reference()
 
     @classmethod
     def parse(cls, spec: str) -> "KernelPolicy":
         """Build a policy from a CLI spec.
 
-        ``spec`` is a preset name (``reference`` | ``fused``) or a
+        ``spec`` is a preset name (``reference`` | ``fused`` | ``auto`` —
+        the latter resolved from the backend at parse time) or a
         comma-separated list of ``op=impl`` / ``interpret={auto,true,false}``
         overrides applied on top of the reference preset, e.g.
         ``"self_attention=fused,ffn=dbsc"``.
@@ -208,6 +229,10 @@ DISPATCH_TABLE = {
         "reference": functools.partial(_patch_bitmap_op, use_kernel=False),
         "kernel": _patch_bitmap_op,
     },
+    "reuse": {
+        "reference": functools.partial(_patch_delta_op, use_kernel=False),
+        "kernel": _patch_delta_op,
+    },
 }
 
 
@@ -286,6 +311,23 @@ def patch_bitmap(policy: KernelPolicy, sas, patch: int, threshold: float):
                                 interpret=policy.interpret,
                                 br=policy.bitmap_block_rows)
     return _patch_bitmap_op(sas, patch, threshold, use_kernel=False)
+
+
+def patch_delta(policy: KernelPolicy, x, x_ref, *, patch: int,
+                threshold: float):
+    """Temporal-reuse change detection via the policy's implementation.
+
+    (B, T, C) tokens vs cached reference -> ((B, P) float32 max-abs patch
+    delta, (B, P) bool active bitmap).  Reference and kernel reduce max
+    over the same values (exactly commutative), so the bitmap — and every
+    reuse counter downstream of it — is bit-identical across routing.
+    """
+    if policy.reuse == "kernel":
+        return _patch_delta_op(x, x_ref, patch=patch, threshold=threshold,
+                               use_kernel=True, interpret=policy.interpret,
+                               bp=policy.reuse_block_patches)
+    return _patch_delta_op(x, x_ref, patch=patch, threshold=threshold,
+                           use_kernel=False)
 
 
 def support_matrix() -> list:

@@ -1,0 +1,29 @@
+"""Reference per-patch change detection for temporal reuse (SIGE-style).
+
+The temporal-reuse runtime compares each transformer block's token-space
+input against the cached reference from the previous denoising step (or an
+edit request's base) and marks a PATCH active when any of its token
+channels moved by at least the policy threshold.  This is the pure-JAX
+oracle the Pallas kernel (``kernel.py``) is verified against; both reduce
+to max/abs over the same values, which are exactly commutative, so the
+implementations are bit-identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def patch_delta_ref(x: jax.Array, x_ref: jax.Array,
+                    patch: int) -> jax.Array:
+    """(B, T, C) tokens vs cached reference -> (B, T/patch) max-abs delta.
+
+    Tokens are grouped into contiguous runs of ``patch`` (the same token
+    grouping the PSSA bitmap machinery uses along the key axis), and the
+    delta is the max absolute difference over the patch's tokens and
+    channels.
+    """
+    b, t, c = x.shape
+    assert t % patch == 0, (t, patch)
+    d = jnp.abs(x.astype(jnp.float32) - x_ref.astype(jnp.float32))
+    return jnp.max(d.reshape(b, t // patch, patch * c), axis=-1)

@@ -66,6 +66,7 @@ import time
 
 def make_config(args):
     from repro.core.precision import PrecisionPolicy
+    from repro.core.reuse import ReusePolicy
     from repro.diffusion.pipeline import PipelineConfig
     from repro.diffusion.sampler import DDIMConfig
     from repro.kernels.dispatch import KernelPolicy
@@ -73,10 +74,18 @@ def make_config(args):
     cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
     policy = KernelPolicy.parse(args.kernels)
     precision = PrecisionPolicy.parse(args.tips)
+    reuse = ReusePolicy.parse(getattr(args, "reuse", "off"))
+    if reuse.enabled and reuse.capacity < 1.0:
+        # the serving engine runs the TEMPORAL path (cache starts
+        # invalid), where a sub-1.0 static gather capacity is illegal —
+        # clamp instead of tripping the engine guard so
+        # `--reuse edit,threshold=...` selects the edit threshold defaults
+        # while serving stays exact
+        reuse = dataclasses.replace(reuse, capacity=1.0)
     return dataclasses.replace(
         cfg,
         unet=dataclasses.replace(cfg.unet, kernel_policy=policy,
-                                 precision=precision),
+                                 precision=precision, reuse_policy=reuse),
         ddim=DDIMConfig(
             num_inference_steps=args.steps,
             guidance_scale=args.guidance,
@@ -124,7 +133,8 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
 
     from repro.core import tips
     from repro.diffusion.engine import DiffusionEngine
-    from repro.diffusion.pipeline import (aggregated_tips_ratios_per_iter,
+    from repro.diffusion.pipeline import (aggregated_reuse_ratios_per_iter,
+                                          aggregated_tips_ratios_per_iter,
                                           energy_report_multi)
     from repro.launch.mesh import dp_size_of
 
@@ -196,28 +206,38 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
         metrics["tips_workload_low_fraction"] = float(
             tips.workload_low_precision_fraction(jnp.asarray(ratios),
                                                  ddim=cfg.ddim))
+        # realized per-iteration temporal-reuse ratio (zeros when off)
+        metrics["reuse_ratio_per_iter"] = [
+            float(r) for r in
+            aggregated_reuse_ratios_per_iter(cfg, stats_per_batch)]
     return metrics
 
 
 def serve_continuous(cfg, num_requests: int, num_slots: int,
                      arrival_rate: float = 0.0, burst: int = 1,
-                     key=None, ledger: bool = False, seed: int = 7) -> dict:
+                     key=None, ledger: bool = False, seed: int = 7,
+                     edit: bool = False) -> dict:
     """Serve a synthetic request trace through the continuous scheduler.
 
     ``arrival_rate`` is requests/second, arriving ``burst`` at a time
     (0 = the whole queue is available at t=0).  Compilation happens off
     the clock (``warmup``), so the latency percentiles measure serving,
-    not tracing.
+    not tracing.  ``edit`` switches the trace to the img2img/editing
+    request class (``scheduler.make_edit_requests``): every request is
+    the same base latent with a localized edit window — the workload
+    ``--reuse temporal`` serves with most patch rows cached.
     """
     import jax
 
     from repro.diffusion.engine import DiffusionEngine
     from repro.launch.scheduler import (ContinuousScheduler, apply_trace,
-                                        bursty_trace, make_requests)
+                                        bursty_trace, make_edit_requests,
+                                        make_requests)
 
     key = key if key is not None else jax.random.PRNGKey(0)
     eng = DiffusionEngine(cfg, key=key)
-    requests = make_requests(cfg, num_requests, seed=seed)
+    make = make_edit_requests if edit else make_requests
+    requests = make(cfg, num_requests, seed=seed)
     if arrival_rate > 0:
         gap = burst / arrival_rate
         apply_trace(requests, bursty_trace(num_requests, burst, gap))
@@ -229,7 +249,9 @@ def serve_continuous(cfg, num_requests: int, num_slots: int,
         compile_s=compile_s,
         kernel_policy=cfg.unet.effective_kernel_policy().describe(),
         precision_policy=cfg.unet.effective_precision().describe(),
+        reuse_policy=cfg.unet.reuse_policy.describe(),
         steps_per_image=cfg.ddim.num_inference_steps,
+        workload="edit" if edit else "t2i",
         arrival={"rate_per_s": arrival_rate, "burst": burst},
     )
     return metrics
@@ -250,14 +272,24 @@ def main():
                     help="data-parallel degree: shard micro-batches over N "
                          "devices (simulated host devices on CPU, real on "
                          "TPU); 0 = single-device")
-    ap.add_argument("--kernels", default="reference",
-                    help="kernel policy: 'reference', 'fused', or per-op "
-                         "overrides like 'self_attention=fused,ffn=dbsc' "
+    ap.add_argument("--kernels", default="auto",
+                    help="kernel policy: 'auto' (fused on compiled "
+                         "backends, reference on interpret backends), "
+                         "'reference', 'fused', or per-op overrides like "
+                         "'self_attention=fused,ffn=dbsc' "
                          "(see repro.kernels.dispatch.KernelPolicy)")
     ap.add_argument("--tips", default="fixed",
                     help="precision policy: 'fixed', 'adaptive', or field "
                          "overrides like 'adaptive,target=0.5,mid=true' "
                          "(see repro.core.precision.PrecisionPolicy)")
+    ap.add_argument("--reuse", default="off",
+                    help="temporal patch-reuse policy: 'off', 'temporal', "
+                         "or overrides like 'temporal,threshold=0.1' "
+                         "(see repro.core.reuse.ReusePolicy)")
+    ap.add_argument("--edit", action="store_true",
+                    help="serve the img2img/editing request class (shared "
+                         "base latent + localized per-request edits) — "
+                         "pair with --continuous and --reuse temporal")
     ap.add_argument("--continuous", action="store_true",
                     help="slot-based continuous batching instead of fixed "
                          "micro-batches (DESIGN.md §8)")
@@ -286,6 +318,9 @@ def main():
     if args.continuous and args.mesh > 1:
         ap.error("--continuous is single-device (see DESIGN.md §8); "
                  "drop --mesh")
+    if args.edit and not args.continuous:
+        ap.error("--edit rides the slot scheduler's admit(latents=) path; "
+                 "add --continuous")
 
     if args.mesh > 1:
         # must run before the first jax backend init; only meaningful for
@@ -306,12 +341,14 @@ def main():
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
           f"{batching}, kernels {args.kernels}, "
-          f"tips {args.tips}, "
+          f"tips {args.tips}, reuse {args.reuse}, "
+          f"workload {'edit' if args.edit else 't2i'}, "
           f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
     if args.continuous:
         metrics = serve_continuous(cfg, args.requests, args.slots,
                                    arrival_rate=args.arrival_rate,
-                                   burst=args.burst, ledger=args.ledger)
+                                   burst=args.burst, ledger=args.ledger,
+                                   edit=args.edit)
     else:
         reqs = synthetic_requests(cfg, args.requests)
         metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
