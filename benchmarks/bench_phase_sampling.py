@@ -1,0 +1,207 @@
+"""BENCH — Phase-aware sampling: few-step solvers, step budgets, mixed tiers.
+
+The 28.6 mJ/iter headline is per ITERATION; the other end-to-end energy
+axis is how many iterations an image needs.  This bench sweeps the
+``SamplerPolicy`` runtime (DESIGN.md §10) over solver x step-budget and
+records, per (solver, steps) pair: imgs/s, the modeled mJ/image
+(``mj_per_iter_with_ema * num_steps`` from the same integer-counter
+ledger every other bench uses), and a quality proxy — the relative L2
+distance of the final latents to a 25-step DDIM reference from the SAME
+initial noise and prompt.  Headline: DPM-Solver++(2M) few-step tiers vs
+25-step DDIM — the draft tier (8 steps) at >=2x imgs/s and >=1.8x lower
+mJ/image within its stated quality tolerance, the balanced tier (12
+steps) at the tight 0.25 tolerance (wall capped ~1.9x by per-image
+encode+decode overhead at smoke geometry; the modeled mJ/image isolates
+the step lever at the full 25/12).
+
+The second half drives a MIXED-TIER slot batch (draft/balanced/quality
+with phase schedules active) through the continuous scheduler and pins
+the two §10 exactness contracts: every request's image is bit-identical
+to a one-shot run of its own (solver, steps) policy under the same bank
+AND the same batch signature (``generate(..., sampler_bank=)`` with the
+request tiled to the slot count — the structural-identity oracle; XLA
+specializes codegen per batch size, so parity is defined at matching
+shapes, exactly like the legacy slot contracts), and the banked ledger's
+energy summary is bit-identical across slot counts {2, 5} (integer
+accumulation is occupancy-invariant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SOLVER_SWEEP = ("ddim", "plms", "dpm2m")
+BUDGET_SWEEP = (8, 12, 25)
+REFERENCE = "ddim-25"
+# candidate -> stated quality-proxy tolerance (rel-L2 of final latents
+# vs the 25-step DDIM reference).  Two few-step operating points: the
+# draft tier (dpm2m@8) carries the throughput headline; the balanced
+# tier (dpm2m@12) the tight-quality one.  NOTE the wall-clock physics at
+# smoke geometry: per-image encode+decode costs ~3.5 step-equivalents,
+# so the 25->12-step wall ratio saturates near 1.9x even though the
+# MODELED mJ/image (pure step lever) scales the full 25/12 = 2.08x —
+# at paper geometry the UNet steps dominate and wall approaches the
+# step ratio.  The 8-step draft tier clears 2x wall even with the
+# overhead priced in.
+CANDIDATES = {"dpm2m-8": 0.40, "dpm2m-12": 0.25}
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.diffusion import solvers
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.diffusion.pipeline import PipelineConfig, energy_report
+    from repro.diffusion.sampler import DDIMConfig
+    from repro.launch.scheduler import ContinuousScheduler, make_requests
+
+    steps = 25
+    cfg = PipelineConfig.smoke()
+    cfg = dataclasses.replace(
+        cfg,
+        ddim=DDIMConfig(num_inference_steps=steps, guidance_scale=1.0,
+                        tips_active_iters=steps * 20 // 25))
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+
+    # ---- solver x step-budget sweep (one prompt, one fixed noise draw)
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (1, cfg.text.max_len), 0, cfg.text.vocab_size)
+    lat0 = eng.init_latents(1, jax.random.PRNGKey(2))
+
+    sweep: dict = {}
+    latents_by_key: dict = {}
+    for solver in SOLVER_SWEEP:
+        for n in BUDGET_SWEEP:
+            pol = solvers.SamplerPolicy(solver=solver, num_steps=n)
+            out = eng.generate(toks, None, latents=jnp.array(lat0),
+                               sampler_policy=pol)
+            # repeat the compiled executable and take the MIN wall: a
+            # single post-compile call drifts with machine warm-up
+            # across the sweep (earlier pairs measure slower), which
+            # would bias the cross-pair speedup ratios
+            wall = min(
+                (eng.generate(toks, None, latents=jnp.array(lat0),
+                              sampler_policy=pol), eng.last_wall_s)[1]
+                for _ in range(3))
+            rep = energy_report(cfg, out.stats, sampler_policy=pol)
+            latents_by_key[pol.key()] = np.asarray(out.latents[0])
+            sweep[pol.key()] = {
+                "wall_s": wall,
+                "imgs_per_s": 1.0 / max(wall, 1e-9),
+                "energy": {
+                    "mj_per_iter_with_ema": rep.mj_per_iter_with_ema,
+                    "mj_per_image": rep.mj_per_iter_with_ema * n,
+                },
+            }
+
+    ref = latents_by_key[REFERENCE]
+    for key, rec in sweep.items():
+        d = latents_by_key[key] - ref
+        rec["quality_rel_l2"] = float(np.linalg.norm(d)
+                                      / max(np.linalg.norm(ref), 1e-12))
+
+    base = sweep[REFERENCE]
+    candidates = {}
+    for key, tol in CANDIDATES.items():
+        cand = sweep[key]
+        speedup = cand["imgs_per_s"] / base["imgs_per_s"]
+        mj_ratio = (base["energy"]["mj_per_image"]
+                    / cand["energy"]["mj_per_image"])
+        candidates[key] = {
+            "imgs_per_s_speedup": speedup,
+            "energy_comparison": {"mj_per_image_ratio": mj_ratio},
+            "quality_rel_l2": cand["quality_rel_l2"],
+            "quality_tol": tol,
+            "meets_target": bool(speedup >= 2.0 and mj_ratio >= 1.8
+                                 and cand["quality_rel_l2"] <= tol),
+        }
+    headline = {
+        "reference": REFERENCE,
+        "candidates": candidates,
+        # the ISSUE bar (>=2x imgs/s, >=1.8x mJ/image, quality within the
+        # stated tol) — met by the draft tier; the balanced tier trades
+        # wall speedup (overhead-capped at 1.9x, see module comment) for
+        # the tighter 0.25 quality proxy
+        "meets_target": any(c["meets_target"] for c in candidates.values()),
+    }
+
+    # ---- mixed-tier slot trace with phase schedules active
+    guard = solvers.PhaseSchedule.detail_guard()
+    bank = (dataclasses.replace(solvers.SamplerPolicy.tier("draft"),
+                                phases=guard),
+            dataclasses.replace(solvers.SamplerPolicy.tier("balanced"),
+                                phases=guard),
+            solvers.SamplerPolicy.tier("quality"))
+    n_requests = 6
+
+    def fresh_requests():
+        return make_requests(cfg, n_requests, seed=11, bank=bank)
+
+    cont2 = ContinuousScheduler(eng, num_slots=2, bank=bank)
+    compile_s = cont2.warmup()
+    reqs = fresh_requests()
+    m2 = cont2.run(reqs, ledger=True)
+    m2.pop("state")
+
+    per_request = []
+    for r in reqs:
+        pol = bank[r.policy_index]
+        # oracle at the SLOT batch signature: request tiled to num_slots
+        out = eng.generate(jnp.tile(r.tokens, (2, 1)), None,
+                           latents=jnp.tile(jnp.array(r.latents),
+                                            (2, 1, 1, 1)),
+                           sampler_policy=pol, sampler_bank=bank)
+        per_request.append({
+            "rid": r.rid,
+            "tier": r.tier,
+            "policy": pol.key(),
+            "bit_identical": bool(np.array_equal(
+                r.image, np.asarray(out.images[0]))),
+        })
+    images_bit_identical = all(p["bit_identical"] for p in per_request)
+
+    # same request set through a 5-slot state: the banked integer
+    # accumulator must produce the SAME energy summary (occupancy and
+    # retirement order differ; the per-(policy, step) buckets must not)
+    cont5 = ContinuousScheduler(eng, num_slots=5, bank=bank)
+    compile_s += cont5.warmup()
+    m5 = cont5.run(fresh_requests(), ledger=True)
+    m5.pop("state")
+    ledger_bit_identical = (m2["energy"] == m5["energy"])
+    phases_bit_identical = (m2["phase_breakdown"] == m5["phase_breakdown"])
+
+    return {
+        "config": {"steps": steps, "latent": cfg.unet.latent_size,
+                   "solvers": list(SOLVER_SWEEP),
+                   "budgets": list(BUDGET_SWEEP),
+                   "trace_requests": n_requests},
+        "compile_s": compile_s,
+        "sweep": sweep,
+        "headline": headline,
+        "mixed_tier_trace": {
+            "slots": 2,
+            "bank": [p.describe() for p in bank],
+            "per_request": per_request,
+            "images_bit_identical": images_bit_identical,
+            "goodput_steps_per_s": m2["goodput_steps_per_s"],
+            "mean_occupancy": m2["mean_occupancy"],
+            "per_tier": m2["per_tier"],
+        },
+        "ledger": {
+            "energy": m2["energy"],
+            "phase_breakdown": m2["phase_breakdown"],
+            "ledger_bit_identical": ledger_bit_identical,
+            "phase_breakdown_bit_identical": phases_bit_identical,
+        },
+        "meets_target": bool(headline["meets_target"]
+                             and images_bit_identical
+                             and ledger_bit_identical
+                             and phases_bit_identical),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -31,8 +31,9 @@ Usage:
       [--wall-tolerance 4.0]
   PYTHONPATH=src:. python benchmarks/run.py --check      # same default set
 
-The default set covers the fast smoke benches; ``--only sharded_engine``
-adds the (slower) dp-sweep when wanted.
+The default set covers every bench with committed results (the roofline
+table has none — it is machine-shape-dependent); ``--only NAME`` narrows
+the gate to one section.
 """
 from __future__ import annotations
 
@@ -44,10 +45,12 @@ import sys
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
-# fast enough for a CI gate; sharded_engine's fake-device dp sweep is
-# opt-in via --only
-DEFAULT_BENCHES = ("engine", "fused_attention", "fused_cross_attention",
-                   "continuous_serving", "temporal_reuse")
+# every bench with committed results is gated (roofline has no committed
+# JSON — its table is machine-shape-dependent — so it stays out)
+DEFAULT_BENCHES = ("ema_breakdown", "pssa", "tips", "dbsc", "energy_iter",
+                   "engine", "fused_attention", "fused_cross_attention",
+                   "sharded_engine", "continuous_serving", "temporal_reuse",
+                   "phase_sampling")
 
 _WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
                  "goodput", "makespan", "scaling", "efficiency",

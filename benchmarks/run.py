@@ -34,8 +34,56 @@ BENCHES = {
     "sharded_engine": "benchmarks.bench_sharded_engine",
     "continuous_serving": "benchmarks.bench_continuous_serving",
     "temporal_reuse": "benchmarks.bench_temporal_reuse",
+    "phase_sampling": "benchmarks.bench_phase_sampling",
     "roofline": "benchmarks.roofline",
 }
+
+# leaf keys worth a headline line, in display order; "*_bit_identical"
+# and "meets_target" are the contract flags, the rest are the numbers a
+# reader checks first
+_SUMMARY_KEYS = ("meets_target", "mj_per_iter_with_ema", "ema_reduction",
+                 "mj_per_image_ratio", "imgs_per_s_speedup",
+                 "p95_latency_improvement", "goodput_ratio_vs_fixed",
+                 "quality_rel_l2")
+
+
+def _summary_leaves(rec, path=""):
+    if isinstance(rec, dict):
+        for k, v in rec.items():
+            yield from _summary_leaves(v, f"{path}.{k}" if path else str(k))
+    elif not isinstance(rec, (list, tuple)):
+        yield path, rec
+
+
+def summarize(names) -> dict:
+    """One headline line per bench, from the results JSON on disk."""
+    lines = {}
+    for name in names:
+        path = os.path.join(RESULTS, f"bench_{name}.json")
+        if not os.path.exists(path):
+            lines[name] = "(no results on disk)"
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        picked = []
+        for p, v in _summary_leaves(rec):
+            key = p.rsplit(".", 1)[-1]
+            if key in _SUMMARY_KEYS or key.endswith("_bit_identical"):
+                if isinstance(v, float):
+                    v = round(v, 4)
+                picked.append((p.count("."),
+                               f"{key}={v}" if "." not in p else f"{p}={v}"))
+        # shallow leaves are the headline (contract flags, top-level
+        # ratios); deep sweep entries only fill leftover slots
+        picked = [s for _, s in sorted(picked, key=lambda t: t[0])]
+        if not picked:
+            # no contract flags: fall back to the first few numeric leaves
+            picked = [f"{p}={round(v, 4) if isinstance(v, float) else v}"
+                      for p, v in _summary_leaves(rec)
+                      if isinstance(v, (int, float))
+                      and not isinstance(v, bool)][:4]
+        lines[name] = "; ".join(picked[:8]) or "(empty record)"
+    return lines
 
 
 def _summary_line(modname: str) -> str:
@@ -104,9 +152,29 @@ def main() -> None:
                          "and diff against the committed results "
                          "(delegates to benchmarks/check_regression.py; "
                          "combine with --only to gate one section)")
+    ap.add_argument("--summary", action="store_true",
+                    help="write benchmarks/results/summary.json (one "
+                         "headline line per bench, from the results JSON "
+                         "on disk) and exit — the CI artifact; run "
+                         "sections first to summarize fresh numbers")
     args = ap.parse_args()
     if args.list:
         print(bench_listing())
+        raise SystemExit(0)
+    if args.summary:
+        names = [n for n in BENCHES if n != "roofline"]
+        if args.only is not None:
+            if args.only not in BENCHES:
+                ap.error(f"--only {args.only!r}: expected one of "
+                         f"{list(BENCHES)}")
+            names = [args.only]
+        lines = summarize(names)
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "summary.json"), "w") as f:
+            json.dump(lines, f, indent=1)
+        width = max(len(n) for n in lines)
+        for name, line in lines.items():
+            print(f"{name:<{width}}  {line}")
         raise SystemExit(0)
     if args.check:
         from benchmarks.check_regression import DEFAULT_BENCHES, check

@@ -11,6 +11,7 @@ scanned sampler, fused-CFG batched UNet, stacked stats pytree); pass
 same ledger.
 
 Run:  PYTHONPATH=src python examples/generate_image.py [--steps 5]
+          [--solver dpm2m,steps=12] [--solver balanced]
 """
 import argparse
 import dataclasses
@@ -42,10 +43,26 @@ def main():
                     help="precision policy: 'fixed', 'adaptive', or field "
                          "overrides like 'adaptive,target=0.5,mid=true' "
                          "(see repro.core.precision)")
+    ap.add_argument("--solver", default="",
+                    help="sampler policy: a tier (draft|balanced|quality), "
+                         "a solver (ddim|plms|dpm2m), or a spec like "
+                         "'dpm2m,steps=12,phases=detail_guard' "
+                         "(see repro.diffusion.solvers); overrides --steps "
+                         "when the spec carries its own budget")
     args = ap.parse_args()
 
     from repro.core.precision import PrecisionPolicy
+    from repro.diffusion.solvers import SamplerPolicy, TIERS
     from repro.kernels.dispatch import KernelPolicy
+
+    policy = None
+    if args.solver:
+        if args.python_loop:
+            ap.error("--solver needs the jitted engine (the seed-style "
+                     "python loop has no SamplerPolicy runtime)")
+        policy = SamplerPolicy.parse(args.solver)
+        if "steps=" not in args.solver and args.solver not in TIERS:
+            policy = dataclasses.replace(policy, num_steps=args.steps)
     cfg = PipelineConfig.smoke()
     cfg = dataclasses.replace(
         cfg,
@@ -57,8 +74,12 @@ def main():
             num_inference_steps=args.steps,
             guidance_scale=args.guidance,
             tips_active_iters=max(1, args.steps * 20 // 25)))
+    n_steps = policy.num_steps if policy is not None else args.steps
+    sampler_desc = (f"{policy.solver} x{policy.num_steps}"
+                    + (" (phased)" if policy.phases else "")
+                    if policy is not None else f"ddim x{args.steps}")
     print(f"pipeline: latent {cfg.unet.latent_size}^2, "
-          f"{args.steps} DDIM steps, guidance {args.guidance}, "
+          f"sampler {sampler_desc}, guidance {args.guidance}, "
           f"{'python loop' if args.python_loop else 'jitted engine'}, "
           f"kernels {args.kernels}, tips {args.tips}")
 
@@ -78,20 +99,23 @@ def main():
     else:
         eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
         out = eng.generate(prompt, jax.random.PRNGKey(1),
-                           uncond_tokens=uncond)
+                           uncond_tokens=uncond, sampler_policy=policy)
         image, stats = out.images, out.stats
     wall = time.time() - t0
     print(f"generated image {image.shape} in {wall:.1f}s "
-          f"({1e3 * wall / args.steps:.0f} ms/iter incl. compile), "
+          f"({1e3 * wall / n_steps:.0f} ms/iter incl. compile), "
           f"range [{float(image.min()):.2f}, {float(image.max()):.2f}]")
     img8 = np.asarray((image[0] * 0.5 + 0.5) * 255, dtype=np.uint8)
     np.save("/tmp/generated_image.npy", img8)
     print("saved /tmp/generated_image.npy")
 
-    rep = energy_report(cfg, stats)
+    rep = energy_report(cfg, stats, sampler_policy=policy)
     print("\nfull-geometry (BK-SDM-Tiny) energy ledger:")
     for k, v in rep.summary().items():
         print(f"  {k:42s} {v:10.4f}")
+    if policy is not None:
+        print(f"  {'mj_per_image (x' + str(n_steps) + ' steps)':42s} "
+              f"{rep.mj_per_iter_with_ema * n_steps:10.4f}")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,12 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
     reproduces the folded counters bit-for-bit.
     """
     d = q.shape[-1]
+    # per-row thresholds (phase-scheduled sampling): a (B,) array is
+    # broadcast to (B, 1, 1, 1) — pruning and every counter stay the same
+    # elementwise comparisons, and the stats slice carries its rows'
+    # thresholds with it
+    if getattr(threshold, "ndim", 0) == 1:
+        threshold = threshold.reshape(threshold.shape[0], 1, 1, 1)
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d))
     probs = jax.nn.softmax(scores, axis=-1)
     if prune_scores:
@@ -69,12 +75,15 @@ def self_attention_pssa(q: jax.Array, k: jax.Array, v: jax.Array,
     else:
         probs_used = probs
     probs_stat = probs if stats_rows is None else probs[:stats_rows]
+    thr_stat = threshold
+    if stats_rows is not None and getattr(threshold, "ndim", 0) == 4:
+        thr_stat = threshold[:stats_rows]
     if row_stats:
-        stats = pssa.row_counters(probs_stat, patch, threshold)
+        stats = pssa.row_counters(probs_stat, patch, thr_stat)
     else:
         compress = (pssa.compress_stats_reference if reference_stats
                     else pssa.compress_stats)
-        stats = compress(probs_stat, patch, threshold)
+        stats = compress(probs_stat, patch, thr_stat)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs_used, v)
     return SelfAttnOut(out=out, stats=stats)
 
@@ -127,7 +136,7 @@ class CrossAttnOut(NamedTuple):
 
 
 def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None,
-                    row_stats: bool = False):
+                    row_stats: bool = False, threshold_scale=None):
     """Shared spotting tail of both cross-attention implementations.
 
     ``cas`` is the head-averaged (B, Tq) CLS score; spotting (fixed or
@@ -141,8 +150,12 @@ def _spot_and_slice(cas: jax.Array, precision, stats_rows: int | None,
     ``row_stats``: report a ``tips.TIPSRowCounters`` instead — the (B,)
     integer count of spotted-important tokens per row (slot-serving
     scatters these into per-iteration ledger buckets).
+
+    ``threshold_scale`` (a (B,) float32 or None) is the phase-scheduled
+    per-row scale on the spotting threshold (``precision.spot_cas``).
     """
-    spotted = precision_mod.spot_cas(cas, precision)
+    spotted = precision_mod.spot_cas(cas, precision,
+                                     threshold_scale=threshold_scale)
     important_full = spotted.important
     if row_stats:
         imp = (spotted.important if stats_rows is None
@@ -176,7 +189,8 @@ def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
                          cls_index: int = 0,
                          stats_rows: int | None = None,
                          precision=None,
-                         row_stats: bool = False) -> CrossAttnOut:
+                         row_stats: bool = False,
+                         threshold_scale=None) -> CrossAttnOut:
     """(B, H, Tq, d) pixel queries x (B, H, Tk, d) text keys, with TIPS.
 
     ``precision`` (a ``core.precision.PrecisionPolicy``) selects the
@@ -193,7 +207,7 @@ def cross_attention_tips(q: jax.Array, k_text: jax.Array, v_text: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     cas = jnp.mean(probs[..., :, precision.cls_index], axis=-2)   # (B, Tq)
     spotted, important_full = _spot_and_slice(cas, precision, stats_rows,
-                                              row_stats)
+                                              row_stats, threshold_scale)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_text)
     return CrossAttnOut(out=out, tips_result=spotted,
                         important_full=important_full)
@@ -207,7 +221,8 @@ def cross_attention_tips_fused(q: jax.Array, k_text: jax.Array,
                                precision=None,
                                interpret: bool | None = None,
                                bq: int = 128,
-                               row_stats: bool = False) -> CrossAttnOut:
+                               row_stats: bool = False,
+                               threshold_scale=None) -> CrossAttnOut:
     """``cross_attention_tips`` through the blocked Pallas kernel.
 
     The (B, H, Tq, Tk) probability tensor is never materialized: the
@@ -225,6 +240,6 @@ def cross_attention_tips_fused(q: jax.Array, k_text: jax.Array,
                                       interpret=interpret, bq=bq)
     cas = jnp.mean(cas_bh, axis=-2)                               # (B, Tq)
     spotted, important_full = _spot_and_slice(cas, precision, stats_rows,
-                                              row_stats)
+                                              row_stats, threshold_scale)
     return CrossAttnOut(out=out, tips_result=spotted,
                         important_full=important_full)

@@ -136,7 +136,8 @@ class PrecisionPolicy:
         }
 
 
-def spot_cas(cas, policy: PrecisionPolicy) -> tips.TIPSResult:
+def spot_cas(cas, policy: PrecisionPolicy,
+             threshold_scale=None) -> tips.TIPSResult:
     """Importance spotting from head-averaged CAS per the policy.
 
     ``cas``: (..., Tq) CLS attention score per query (already averaged over
@@ -148,13 +149,23 @@ def spot_cas(cas, policy: PrecisionPolicy) -> tips.TIPSResult:
     CAS < the sample's ``1 - target_low_ratio`` CAS quantile — per sample
     (token-axis reduction only), so batch composition never changes a
     sample's precision map and row slicing (``stats_rows``) commutes.
+
+    ``threshold_scale`` (a (B,) float32, phase-scheduled sampling) scales
+    each row's effective threshold — the fixed threshold or the adaptive
+    per-sample quantile — multiplicatively; ``None`` leaves both modes
+    untouched, op for op.
     """
     if policy.spotting == "adaptive":
         thr = jnp.quantile(cas, 1.0 - policy.target_low_ratio,
                            axis=-1, keepdims=True)
-        important = cas < thr
     else:
-        important = cas < policy.threshold
+        thr = policy.threshold
+    if threshold_scale is not None:
+        scale = threshold_scale.reshape(
+            threshold_scale.shape + (1,) * (cas.ndim
+                                            - threshold_scale.ndim))
+        thr = thr * scale
+    important = cas < thr
     low_ratio = 1.0 - jnp.mean(important.astype(jnp.float32))
     return tips.TIPSResult(important=important, cas=cas,
                            low_precision_ratio=low_ratio)

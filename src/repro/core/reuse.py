@@ -57,10 +57,20 @@ class ReusePolicy:
     gather keeps per row — the executable-shape knob (1.0 -> all patches,
     identity permutation).  Invalid cache rows force all their patches
     active regardless of threshold.
+
+    ``apriori_window``: a static ``(y0, x0, h, w)`` rectangle in LATENT
+    pixel coordinates (the edit window ``make_edit_requests`` perturbs).
+    When the changed region is known up front — inpainting masks, edit
+    boxes — the patch activity is a compile-time constant: the UNet skips
+    the patch-delta kernel entirely and activates exactly the patches
+    whose tokens intersect the window at each block's resolution
+    (``window_patch_mask``).  Hashable/static, so it joins the executable
+    cache keys like every other policy field.
     """
     enabled: bool = False
     threshold: float = 0.0
     capacity: float = 1.0
+    apriori_window: Tuple[int, int, int, int] | None = None
 
     def __post_init__(self):
         if self.threshold < 0.0:
@@ -71,6 +81,14 @@ class ReusePolicy:
             raise ValueError(
                 f"ReusePolicy.capacity={self.capacity}: expected a patch "
                 f"fraction in (0, 1]")
+        if self.apriori_window is not None:
+            win = tuple(int(v) for v in self.apriori_window)
+            if len(win) != 4 or win[2] < 1 or win[3] < 1 or win[0] < 0 \
+                    or win[1] < 0:
+                raise ValueError(
+                    f"ReusePolicy.apriori_window={self.apriori_window}: "
+                    f"expected (y0, x0, h, w) with y0,x0 >= 0 and h,w >= 1")
+            object.__setattr__(self, "apriori_window", win)
 
     # -- presets ---------------------------------------------------------
     @classmethod
@@ -119,10 +137,17 @@ class ReusePolicy:
                         f"reuse policy spec: enabled={val!r} (expected true "
                         f"or false)")
                 fields["enabled"] = val.lower() == "true"
+            elif key == "window":
+                parts = val.split(":")
+                if len(parts) != 4:
+                    raise ValueError(
+                        f"reuse policy spec: window={val!r} (expected "
+                        f"y0:x0:h:w in latent pixels)")
+                fields["apriori_window"] = tuple(int(p) for p in parts)
             else:
                 raise ValueError(
                     f"reuse policy spec: unknown key {key!r} (expected "
-                    f"threshold, capacity or enabled)")
+                    f"threshold, capacity, window or enabled)")
         base = pol if pol is not None else cls()
         return dataclasses.replace(base, **fields) if fields else base
 
@@ -135,7 +160,9 @@ class ReusePolicy:
     def describe(self) -> dict:
         """JSON-friendly view for serving metrics / benchmark records."""
         return {"enabled": self.enabled, "threshold": self.threshold,
-                "capacity": self.capacity}
+                "capacity": self.capacity,
+                "apriori_window": (None if self.apriori_window is None
+                                   else list(self.apriori_window))}
 
 
 class ReuseRowCounters(NamedTuple):
@@ -191,6 +218,40 @@ class ReuseCache:
         """Mark one request row stale (slot admission)."""
         return dataclasses.replace(self,
                                    valid=self.valid.at[row].set(False))
+
+
+def window_patch_mask(window, resolution: int, patch: int,
+                      latent_size: int):
+    """Static per-patch activity for an a-priori edit window.
+
+    ``window`` is ``(y0, x0, h, w)`` in LATENT pixels; a patch of
+    ``patch`` contiguous row-major tokens at ``resolution`` is active iff
+    any of its tokens falls inside the window scaled to that resolution
+    (outer bounds rounded outward, so boundary pixels are always covered
+    — conservative, never misses a changed token).  Pure Python/ints at
+    trace time: the result is a compile-time constant tuple of bools,
+    which is what lets the UNet skip the patch-delta kernel entirely.
+    """
+    y0, x0, h, w = (int(v) for v in window)
+    tokens = resolution * resolution
+    npatch = max(1, tokens // patch)
+    # scale the window bounds to this block's feature-map resolution
+    y0r = (y0 * resolution) // latent_size
+    x0r = (x0 * resolution) // latent_size
+    y1r = -((-(y0 + h) * resolution) // latent_size)   # ceil division
+    x1r = -((-(x0 + w) * resolution) // latent_size)
+    y1r = min(resolution, max(y1r, y0r + 1))
+    x1r = min(resolution, max(x1r, x0r + 1))
+    mask = []
+    for p in range(npatch):
+        active = False
+        for tok in range(p * patch, min((p + 1) * patch, tokens)):
+            y, x = tok // resolution, tok % resolution
+            if y0r <= y < y1r and x0r <= x < x1r:
+                active = True
+                break
+        mask.append(active)
+    return tuple(mask)
 
 
 def layer_channels(cfg, resolution: int) -> int:

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.reuse import ReuseCache, reuse_cache_zeros
+from repro.diffusion import solvers as solvers_mod
 from repro.diffusion.sampler import (denoise_step, sample_scan,
                                      sample_scan_reuse)
 from repro.diffusion.stats import LedgerAccum, attn_layer_order
@@ -79,15 +80,24 @@ class SlotState:
     # per-slot previous-step activations for temporal patch reuse; None
     # (static, via the treedef) when cfg.unet.reuse_policy is disabled
     reuse_cache: Optional[ReuseCache] = None
+    # sampler bank (static tuple of SamplerPolicy, in the treedef): when
+    # set, ``policy_id`` selects each row's (solver, steps) pair and
+    # ``solver_hist`` (S, H, s, s, C) carries multistep solver history;
+    # the ledger buckets become per-(policy, step) — see init_slots.
+    # ``bank=None`` keeps the legacy single-schedule state byte-identical.
+    policy_id: Optional[jax.Array] = None  # (S,) int32 or None
+    solver_hist: Optional[jax.Array] = None
+    bank: Optional[tuple] = None
 
     def tree_flatten(self):
         return ((self.latents, self.context, self.uncond_context,
                  self.step_idx, self.active, self.accum,
-                 self.reuse_cache), None)
+                 self.reuse_cache, self.policy_id, self.solver_hist),
+                self.bank)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, bank=aux)
 
     @property
     def num_slots(self) -> int:
@@ -213,7 +223,8 @@ class DiffusionEngine:
         return jax.device_put(x, self._data_sharding)
 
     # ------------------------------------------------------------------
-    def _run(self, prompt_tokens, uncond_tokens, latents, stats_rows=None):
+    def _run(self, prompt_tokens, uncond_tokens, latents, stats_rows=None,
+             sampler_policy=None, sampler_bank=None, policy_id=None):
         """Traced end-to-end path; ``uncond_tokens`` may be None (static)."""
         cfg = self.cfg
         context = encode_text(self.text_params, prompt_tokens, cfg.text)
@@ -229,11 +240,16 @@ class DiffusionEngine:
                                       use_cfg=uncond_tokens is not None)
             latents, stats = sample_scan_reuse(
                 unet_apply, latents, context, uncond, cfg.ddim,
-                reuse_cache=cache, stats_rows=stats_rows)
+                reuse_cache=cache, stats_rows=stats_rows,
+                sampler_policy=sampler_policy,
+                sampler_bank=sampler_bank, policy_id=policy_id)
         else:
             latents, stats = sample_scan(unet_apply, latents, context,
                                          uncond, cfg.ddim,
-                                         stats_rows=stats_rows)
+                                         stats_rows=stats_rows,
+                                         sampler_policy=sampler_policy,
+                                         sampler_bank=sampler_bank,
+                                         policy_id=policy_id)
         images = decode(self.vae_params, latents, cfg.vae)
         return images, latents, stats
 
@@ -250,21 +266,43 @@ class DiffusionEngine:
         return self
 
     def _get_compiled(self, batch: int, use_cfg: bool,
-                      stats_rows: Optional[int] = None):
-        # positions 0-3 are load-bearing (tests introspect them); the two
+                      stats_rows: Optional[int] = None,
+                      sampler_policy=None, sampler_bank=None):
+        # positions 0-3 are load-bearing (tests introspect them); the
         # policy objects are appended so a policy change retraces
         key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh),
                self.cfg.unet.effective_kernel_policy(),
                self.cfg.unet.effective_precision(),
-               self.cfg.unet.reuse_policy)
+               self.cfg.unet.reuse_policy, sampler_policy, sampler_bank)
         fn = self._compiled.get(key)
         if fn is None:
-            if use_cfg:
-                fn = jax.jit(lambda p, u, l: self._run(p, u, l, stats_rows),
-                             donate_argnums=(2,))
+            # under a bank the policy index is a RUNTIME operand (a (B,)
+            # int32 array) so the one-shot program keeps the same dynamic
+            # coefficient gathers the slot executable has — a trace-time
+            # constant would let XLA fold the gathers and shift FMA
+            # contraction, breaking the bit-exact oracle contract
+            if use_cfg and sampler_bank is not None:
+                fn = jax.jit(
+                    lambda p, u, l, pid: self._run(p, u, l, stats_rows,
+                                                   sampler_policy,
+                                                   sampler_bank, pid),
+                    donate_argnums=(2,))
+            elif use_cfg:
+                fn = jax.jit(
+                    lambda p, u, l: self._run(p, u, l, stats_rows,
+                                              sampler_policy),
+                    donate_argnums=(2,))
+            elif sampler_bank is not None:
+                fn = jax.jit(
+                    lambda p, l, pid: self._run(p, None, l, stats_rows,
+                                                sampler_policy,
+                                                sampler_bank, pid),
+                    donate_argnums=(1,))
             else:
-                fn = jax.jit(lambda p, l: self._run(p, None, l, stats_rows),
-                             donate_argnums=(1,))
+                fn = jax.jit(
+                    lambda p, l: self._run(p, None, l, stats_rows,
+                                           sampler_policy),
+                    donate_argnums=(1,))
             self._compiled[key] = fn
         return fn
 
@@ -275,7 +313,8 @@ class DiffusionEngine:
                                        self.cfg.unet.in_channels))
 
     def generate(self, prompt_tokens, key, uncond_tokens=None,
-                 latents=None, stats_rows=None) -> EngineOutput:
+                 latents=None, stats_rows=None,
+                 sampler_policy=None, sampler_bank=None) -> EngineOutput:
         """(B, text_len) int32 tokens -> EngineOutput.
 
         The initial ``latents`` buffer (drawn from ``key`` unless given) is
@@ -286,8 +325,21 @@ class DiffusionEngine:
         first N rows — serving sets it to the valid row count of a padded
         tail micro-batch.  Under a mesh, ``batch`` must be a multiple of
         the data-parallel degree (the serving front-end pads to it).
+
+        ``sampler_policy`` (a ``solvers.SamplerPolicy``) swaps the solver
+        and per-request step budget for this call; it joins the
+        executable-cache key, so each distinct policy compiles once.  The
+        stats trajectory then carries ``policy.num_steps`` leading steps.
+
+        ``sampler_bank`` (static tuple of policies containing
+        ``sampler_policy``) traces this call under the full bank's
+        structure with every row pinned to the policy's index — the
+        bit-exact one-shot oracle for mixed-tier slot serving
+        (DESIGN.md §10).  It joins the cache key too.
         """
         cfg = self.cfg
+        if sampler_bank is not None:
+            sampler_bank = solvers_mod.as_bank(sampler_bank)
         use_cfg = _check_cfg_inputs(cfg.ddim.guidance_scale, uncond_tokens)
         batch = prompt_tokens.shape[0]
         if self.mesh is not None and batch % self.dp_size:
@@ -300,11 +352,25 @@ class DiffusionEngine:
         prompt_tokens = self._shard_batch(prompt_tokens)
         uncond_tokens = self._shard_batch(uncond_tokens)
         latents = self._shard_batch(latents)
-        fn = self._get_compiled(batch, use_cfg, stats_rows)
+        fn = self._get_compiled(batch, use_cfg, stats_rows, sampler_policy,
+                                sampler_bank)
+        if sampler_bank is not None:
+            if sampler_policy not in sampler_bank:
+                raise ValueError(
+                    f"sampler_policy {sampler_policy and sampler_policy.key()}"
+                    f" is not an entry of sampler_bank "
+                    f"{[p.key() for p in sampler_bank]}")
+            pid = jnp.full((batch,), sampler_bank.index(sampler_policy),
+                           jnp.int32)
         t0 = time.perf_counter()
-        if use_cfg:
+        if use_cfg and sampler_bank is not None:
+            images, latents, stats = fn(prompt_tokens, uncond_tokens,
+                                        latents, pid)
+        elif use_cfg:
             images, latents, stats = fn(prompt_tokens, uncond_tokens,
                                         latents)
+        elif sampler_bank is not None:
+            images, latents, stats = fn(prompt_tokens, latents, pid)
         else:
             images, latents, stats = fn(prompt_tokens, latents)
         jax.block_until_ready(images)
@@ -313,7 +379,8 @@ class DiffusionEngine:
 
     # ------------------------------------------------------------------
     def warmup(self, batch: int, use_cfg: Optional[bool] = None,
-               stats_rows: Optional[int] = None) -> float:
+               stats_rows: Optional[int] = None,
+               sampler_policy=None, sampler_bank=None) -> float:
         """Compile (and discard) one call for the given signature.
 
         ``use_cfg`` defaults to what the config demands
@@ -330,13 +397,14 @@ class DiffusionEngine:
             else None
         t0 = time.perf_counter()
         self.generate(toks, jax.random.PRNGKey(0), uncond_tokens=un,
-                      stats_rows=stats_rows)
+                      stats_rows=stats_rows, sampler_policy=sampler_policy,
+                      sampler_bank=sampler_bank)
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     # Slot-state mode: continuous batching (DESIGN.md §8)
     # ------------------------------------------------------------------
-    def init_slots(self, num_slots: int) -> SlotState:
+    def init_slots(self, num_slots: int, bank=None) -> SlotState:
         """Fresh all-inactive slot state for ``num_slots`` in-flight rows.
 
         The slot count is the step executable's batch signature — pick it
@@ -344,6 +412,16 @@ class DiffusionEngine:
         program regardless of occupancy).  Single-device only: slot
         admission rewrites individual batch rows between steps, which
         would thrash a data-sharded placement.
+
+        ``bank`` (tuple of ``solvers.SamplerPolicy``) turns on the
+        phase-aware sampling runtime: requests admitted with different
+        ``policy_index`` values coexist in the SAME jitted ``slot_step``
+        (per-row coefficient gathers), with multistep solver history in
+        ``solver_hist`` and the ledger widened to per-(policy, step)
+        buckets — bucket ``p * N + i`` (N = bank max budget) holds policy
+        ``p``'s step-``i`` counters, so per-policy energy normalization
+        stays exact (``pipeline.energy_report_banked``).  ``bank=None``
+        is the legacy single-schedule state, untouched.
         """
         if self.mesh is not None:
             raise ValueError(
@@ -356,6 +434,10 @@ class DiffusionEngine:
         s, c = cfg.unet.latent_size, cfg.unet.in_channels
         ctx_shape = (num_slots, cfg.text.max_len, cfg.text.d_model)
         use_cfg = cfg.ddim.guidance_scale != 1.0
+        if bank is not None:
+            bank = solvers_mod.as_bank(bank)
+        num_buckets = (cfg.ddim.num_inference_steps if bank is None
+                       else len(bank) * solvers_mod.bank_max_steps(bank))
         return SlotState(
             latents=jnp.zeros((num_slots, s, s, c)),
             # cond and uncond context must be DISTINCT buffers: the state
@@ -365,12 +447,18 @@ class DiffusionEngine:
             uncond_context=jnp.zeros(ctx_shape) if use_cfg else None,
             step_idx=jnp.zeros((num_slots,), jnp.int32),
             active=jnp.zeros((num_slots,), bool),
-            accum=LedgerAccum.zeros(cfg.ddim.num_inference_steps,
+            accum=LedgerAccum.zeros(num_buckets,
                                     len(attn_layer_order(cfg.unet))),
             # all-invalid: a slot's first step after admission computes
             # every patch dense (nothing is ever read from the zeros)
             reuse_cache=(reuse_cache_zeros(cfg.unet, num_slots, use_cfg)
-                         if cfg.unet.reuse_policy.enabled else None))
+                         if cfg.unet.reuse_policy.enabled else None),
+            policy_id=(jnp.zeros((num_slots,), jnp.int32)
+                       if bank is not None else None),
+            solver_hist=(solvers_mod.init_history(bank, num_slots,
+                                                  (s, s, c))
+                         if bank is not None else None),
+            bank=bank)
 
     def _encode_compiled(self):
         if self._encode_fn is None:
@@ -380,7 +468,8 @@ class DiffusionEngine:
         return self._encode_fn
 
     def admit(self, state: SlotState, slot: int, prompt_tokens, key,
-              uncond_tokens=None, latents=None) -> SlotState:
+              uncond_tokens=None, latents=None,
+              policy_index: int = 0) -> SlotState:
         """Occupy one slot with a new request (between steps).
 
         ``prompt_tokens`` is (1, text_len); the initial latent row is
@@ -390,6 +479,11 @@ class DiffusionEngine:
         retraces on admission.  The same CFG contract as ``generate``
         applies, plus the slot state itself must have been built for the
         same CFG mode.
+
+        ``policy_index`` selects the request's ``SamplerPolicy`` from the
+        state's bank (banked states only); admission zeroes the row's
+        solver history, so a multistep solver restarts its warmup exactly
+        as a fresh one-shot run would.
         """
         use_cfg = _check_cfg_inputs(self.cfg.ddim.guidance_scale,
                                     uncond_tokens)
@@ -397,14 +491,24 @@ class DiffusionEngine:
             raise ValueError(
                 "slot state CFG mode does not match the admit call — "
                 "rebuild the state with init_slots() for this config")
+        if state.bank is None:
+            if policy_index != 0:
+                raise ValueError(
+                    f"policy_index={policy_index} on a bank-less slot "
+                    f"state — build the state with init_slots(bank=...)")
+        elif not 0 <= policy_index < len(state.bank):
+            raise ValueError(
+                f"policy_index={policy_index} outside the state's bank "
+                f"of {len(state.bank)} policies")
         enc = self._encode_compiled()
         ctx = enc(prompt_tokens)
         if latents is None:
             latents = self.init_latents(1, key)
         if self._admit_fn is None:
-            # one fused dispatch per admission (slot index traced, so any
-            # slot reuses the same executable); state donated
-            def _adm(state, slot, ctx_row, lat_row, un_row):
+            # one fused dispatch per admission (slot index and policy
+            # traced, so any slot/policy reuses the same executable);
+            # state donated
+            def _adm(state, slot, ctx_row, lat_row, un_row, pid):
                 new = dataclasses.replace(
                     state,
                     latents=state.latents.at[slot].set(lat_row),
@@ -421,11 +525,18 @@ class DiffusionEngine:
                     new = dataclasses.replace(
                         new,
                         reuse_cache=new.reuse_cache.invalidate_row(slot))
+                if state.policy_id is not None:
+                    # zeroed history: multistep warmup weights multiply
+                    # exact zeros, never the previous occupant's outputs
+                    new = dataclasses.replace(
+                        new,
+                        policy_id=state.policy_id.at[slot].set(pid),
+                        solver_hist=state.solver_hist.at[slot].set(0.0))
                 return new
             self._admit_fn = jax.jit(_adm, donate_argnums=(0,))
         un_row = enc(uncond_tokens)[0] if use_cfg else None
         return self._admit_fn(state, jnp.int32(slot), ctx[0], latents[0],
-                              un_row)
+                              un_row, jnp.int32(policy_index))
 
     def _slot_step_traced(self, state: SlotState) -> SlotState:
         cfg = self.cfg
@@ -433,6 +544,30 @@ class DiffusionEngine:
         def unet_apply(lat, tvec, ctx, act, **kw):
             return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
                                 tips_active=act, **kw)
+
+        if state.bank is not None:
+            lat, stats, new_cache, new_hist = denoise_step(
+                unet_apply, state.latents, state.context,
+                state.uncond_context, state.step_idx, cfg.ddim,
+                active=state.active, row_stats=True,
+                reuse_cache=state.reuse_cache, bank=state.bank,
+                policy_id=state.policy_id, solver_hist=state.solver_hist)
+            # per-(policy, step) bucket p*N + i; rows whose counter sits
+            # at/past their budget (possible only if a finished slot was
+            # not retired before the next step) map out of range and the
+            # scatter's mode="drop" discards them — a short-budget row
+            # can never bleed into the next policy's step-0 bucket
+            n_max = solvers_mod.bank_max_steps(state.bank)
+            budgets = jnp.asarray([p.num_steps for p in state.bank],
+                                  jnp.int32)[state.policy_id]
+            bucket = jnp.where(state.step_idx < budgets,
+                               state.policy_id * n_max + state.step_idx,
+                               len(state.bank) * n_max)
+            accum = state.accum.scatter(bucket, state.active, stats)
+            return dataclasses.replace(
+                state, latents=lat, accum=accum, reuse_cache=new_cache,
+                solver_hist=new_hist,
+                step_idx=state.step_idx + state.active.astype(jnp.int32))
 
         out = denoise_step(unet_apply, state.latents, state.context,
                            state.uncond_context, state.step_idx,
@@ -454,14 +589,14 @@ class DiffusionEngine:
     def slot_step(self, state: SlotState) -> SlotState:
         """Advance every active slot by ONE denoising iteration (jitted).
 
-        One executable per (slot count, CFG mode, policies) — compiled on
-        first use, donated state, reused for the whole serving run.  Wall
-        seconds land in ``self.last_wall_s``.
+        One executable per (slot count, CFG mode, policies, sampler bank)
+        — compiled on first use, donated state, reused for the whole
+        serving run.  Wall seconds land in ``self.last_wall_s``.
         """
         key = (state.num_slots, state.uncond_context is not None,
                self.cfg.unet.effective_kernel_policy(),
                self.cfg.unet.effective_precision(),
-               self.cfg.unet.reuse_policy)
+               self.cfg.unet.reuse_policy, state.bank)
         fn = self._slot_compiled.get(key)
         if fn is None:
             fn = jax.jit(self._slot_step_traced, donate_argnums=(0,))
@@ -473,7 +608,18 @@ class DiffusionEngine:
         return state
 
     def finished_slots(self, state: SlotState) -> list:
-        """Active slots whose step counter has run off the schedule."""
+        """Active slots whose step counter has run off THEIR schedule.
+
+        Banked states compare each row against its own policy's step
+        budget — short-budget (draft-tier) rows retire early while
+        quality-tier neighbours keep stepping.
+        """
+        if state.bank is not None:
+            idx, act, pid = jax.device_get(
+                (state.step_idx, state.active, state.policy_id))
+            budgets = [p.num_steps for p in state.bank]
+            return [i for i in range(len(idx))
+                    if act[i] and idx[i] >= budgets[pid[i]]]
         n = self.cfg.ddim.num_inference_steps
         idx, act = jax.device_get((state.step_idx, state.active))
         return [i for i in range(len(idx)) if act[i] and idx[i] >= n]

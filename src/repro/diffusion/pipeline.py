@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import energy, pssa
 from repro.core.tips import TIPS_ACTIVE_ITERS
 from repro.diffusion import ledger as L
+from repro.diffusion import solvers as solvers_mod
 from repro.diffusion.sampler import DDIMConfig, sample
 from repro.diffusion.stats import (UNetStats, attn_layer_order,
                                    coerce_per_step_stats)
@@ -178,7 +179,8 @@ def measured_tips_ratio(stats_one_iter) -> float:
 
 
 def energy_report(cfg: "PipelineConfig", stats_per_iter,
-                  full_geometry: bool = True) -> "PipelineEnergyReport":
+                  full_geometry: bool = True,
+                  sampler_policy=None) -> "PipelineEnergyReport":
     """Headline numbers: EMA GB/iter + mJ/iter (Table I reproduction).
 
     ``stats_per_iter`` is either the stacked ``UNetStats`` a scanned
@@ -187,13 +189,20 @@ def energy_report(cfg: "PipelineConfig", stats_per_iter,
     FULL BK-SDM-Tiny ledger (hardware adaptation note: patch locality is
     resolution-dependent, so per-resolution ratios transfer; DESIGN.md §2).
     A single-batch aggregation: delegates to :func:`energy_report_multi`.
+
+    ``sampler_policy``: the ``solvers.SamplerPolicy`` the run used, when
+    it is not the config's default schedule — the trajectory then carries
+    ``policy.num_steps`` iterations and the TIPS-active window follows
+    ``solvers.tips_active_schedule`` instead of ``tips_active_iters``.
     """
     return energy_report_multi(cfg, [stats_per_iter],
-                               full_geometry=full_geometry)
+                               full_geometry=full_geometry,
+                               sampler_policy=sampler_policy)
 
 
 def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
-                        full_geometry: bool = True) -> "PipelineEnergyReport":
+                        full_geometry: bool = True,
+                        sampler_policy=None) -> "PipelineEnergyReport":
     """Aggregate energy report across SEVERAL engine calls (serving).
 
     ``stats_per_batch``: one stats trajectory per engine call (stacked
@@ -203,6 +212,10 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
     are summed across batches BEFORE dividing, so every valid image row in
     the run — and no padded duplicate — contributes with equal weight.
     With a single entry this reduces exactly to :func:`energy_report`.
+
+    With ``sampler_policy`` set, every trajectory must come from runs of
+    that SAME policy (mixed-policy serving uses the banked accumulator
+    path, :func:`energy_report_banked`).
     """
     fetched = []
     for s in stats_per_batch:
@@ -211,11 +224,15 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
         fetched.append(coerce_per_step_stats(s))
     if not fetched:
         raise ValueError("stats_per_batch is empty")
-    n = cfg.ddim.num_inference_steps
+    n = (cfg.ddim.num_inference_steps if sampler_policy is None
+         else sampler_policy.num_steps)
+    tips_flags = (None if sampler_policy is None else
+                  solvers_mod.tips_active_schedule(sampler_policy, cfg.ddim))
     for s in fetched:
         if len(s) != n:
             raise ValueError(
-                f"stats trajectory has {len(s)} iterations, config says {n}")
+                f"stats trajectory has {len(s)} iterations, "
+                f"{'policy' if sampler_policy else 'config'} says {n}")
 
     per_iter_terms = []
     for i in range(n):
@@ -229,11 +246,14 @@ def energy_report_multi(cfg: "PipelineConfig", stats_per_batch,
             tnum, tden = tnum + num, tden + den
         per_iter_terms.append((sas_terms, (tnum, tden)))
     return _report_from_terms(cfg, per_iter_terms,
-                              full_geometry=full_geometry)
+                              full_geometry=full_geometry,
+                              num_steps=n, tips_flags=tips_flags)
 
 
 def _report_from_terms(cfg: "PipelineConfig", per_iter_terms,
-                       full_geometry: bool = True) -> "PipelineEnergyReport":
+                       full_geometry: bool = True,
+                       num_steps: Optional[int] = None,
+                       tips_flags=None) -> "PipelineEnergyReport":
     """Per-iteration aggregated terms -> the full-geometry ledger report.
 
     ``per_iter_terms``: one ``(sas_terms, (tips_num, tips_den))`` per DDIM
@@ -243,11 +263,17 @@ def _report_from_terms(cfg: "PipelineConfig", per_iter_terms,
     accumulator path (:func:`energy_report_from_accum`) — both reduce to
     these terms, which is what makes the two serving modes' headlines
     comparable bit-for-bit.
+
+    ``num_steps``: the trajectory length when a ``SamplerPolicy`` budget
+    overrides the config's schedule (default: config steps).
+    ``tips_flags``: per-iteration TIPS-active booleans for the same case
+    (default: the config's ``i < tips_active_iters`` window); the
+    ``cfg.unet.tips`` master toggle still gates both.
     """
-    n = cfg.ddim.num_inference_steps
+    n = cfg.ddim.num_inference_steps if num_steps is None else num_steps
     if len(per_iter_terms) != n:
         raise ValueError(
-            f"{len(per_iter_terms)} iteration terms, config says {n}")
+            f"{len(per_iter_terms)} iteration terms, schedule says {n}")
     geom = UNetConfig() if full_geometry else cfg.unet
     precision = cfg.unet.effective_precision()
     geom_res = sorted({geom.latent_size >> s
@@ -262,9 +288,11 @@ def _report_from_terms(cfg: "PipelineConfig", per_iter_terms,
     for i, (sas_terms, (tnum, tden)) in enumerate(per_iter_terms):
         sas_ratio = {res: num / max(den, 1e-12)
                      for res, (num, den) in sas_terms.items()}
+        tips_on = (i < cfg.ddim.tips_active_iters if tips_flags is None
+                   else bool(tips_flags[i]))
         opts_per_iter.append(L.LedgerOptions(
             pssa=cfg.unet.pssa,
-            tips=cfg.unet.tips and i < cfg.ddim.tips_active_iters,
+            tips=cfg.unet.tips and tips_on,
             sas_ratio=remap(sas_ratio),
             tips_low_ratio=tnum / max(tden, 1e-12),
             # MAC split mirrors the datapath's actual FFN mask coverage
@@ -290,18 +318,36 @@ def ledger_terms_from_accum(cfg: "PipelineConfig", accum) -> list:
     float32 ratio step the device path uses.  Slot count, admission order,
     and occupancy cannot move a term: integer accumulation is exact.
     """
-    import numpy as np
-
+    nnz, ones_xor, imp, rows = _fetch_accum(accum)
     layers = attn_layer_order(cfg.unet)
-    heads = cfg.unet.num_heads
-    nnz, ones_xor, imp, rows = (np.asarray(x) for x in jax.device_get(
-        (accum.nnz, accum.ones_xor, accum.imp, accum.rows)))
     n = cfg.ddim.num_inference_steps
     if nnz.shape != (n, len(layers)):
         raise ValueError(f"accumulator shape {nnz.shape} does not match "
                          f"({n}, {len(layers)})")
+    return _terms_from_counters(cfg, nnz, ones_xor, imp, rows, 0, n)
+
+
+def _fetch_accum(accum):
+    """One host transfer of the four SAS/TIPS counter planes."""
+    import numpy as np
+
+    return tuple(np.asarray(x) for x in jax.device_get(
+        (accum.nnz, accum.ones_xor, accum.imp, accum.rows)))
+
+
+def _terms_from_counters(cfg: "PipelineConfig", nnz, ones_xor, imp, rows,
+                         start: int, n: int) -> list:
+    """Bucket rows ``[start, start + n)`` -> per-iteration ledger terms.
+
+    Shared by the legacy single-schedule accumulator (``start=0``) and the
+    banked per-policy slices (``start = policy_index * bank_max_steps``):
+    a policy's terms depend only on ITS buckets, so the same integers give
+    the same floats no matter what else shared the slot batch.
+    """
+    layers = attn_layer_order(cfg.unet)
+    heads = cfg.unet.num_heads
     per_iter_terms = []
-    for i in range(n):
+    for i in range(start, start + n):
         sas_terms: dict = {}
         tnum = tden = 0.0
         r = int(rows[i])
@@ -328,6 +374,64 @@ def ledger_terms_from_accum(cfg: "PipelineConfig", accum) -> list:
     return per_iter_terms
 
 
+def banked_ledger_terms(cfg: "PipelineConfig", accum, bank) -> list:
+    """Per-policy per-iteration ledger terms from a BANKED ``LedgerAccum``.
+
+    A banked slot state (``init_slots(bank=...)``) scatters counters into
+    bucket ``p * N + i`` (N = bank max budget), so policy ``p``'s
+    trajectory is the contiguous row block ``[p*N, p*N + budget_p)``.
+    Returns one per-iteration term list per bank entry, in bank order —
+    each the exact analogue of what :func:`ledger_terms_from_accum`
+    produces for a single-schedule run of only that policy's requests.
+    """
+    bank = solvers_mod.as_bank(bank)
+    nnz, ones_xor, imp, rows = _fetch_accum(accum)
+    layers = attn_layer_order(cfg.unet)
+    n_max = solvers_mod.bank_max_steps(bank)
+    want = (len(bank) * n_max, len(layers))
+    if nnz.shape != want:
+        raise ValueError(f"accumulator shape {nnz.shape} does not match "
+                         f"banked layout {want}")
+    return [_terms_from_counters(cfg, nnz, ones_xor, imp, rows,
+                                 p * n_max, pol.num_steps)
+            for p, pol in enumerate(bank)]
+
+
+def energy_report_banked(cfg: "PipelineConfig", accum, bank,
+                         full_geometry: bool = True
+                         ) -> "BankedEnergyReport":
+    """Per-policy + aggregate energy report for a banked serving run.
+
+    Each policy's buckets flow through the SAME term assembly and ledger
+    as a dedicated single-policy run, so every per-policy headline is
+    bit-identical to serving that policy's requests alone — and invariant
+    to slot count and admission order (integer accumulation).  Policies
+    whose buckets saw no work (``rows[p*N] == 0``) are reported with
+    ``images == 0`` and excluded from the aggregate.
+
+    The per-image energy honestly charges each tier its OWN step budget:
+    ``mj_per_image = mj_per_iter_with_ema * num_steps`` — the quantity the
+    step-budget sweep compares across tiers.
+    """
+    terms = banked_ledger_terms(cfg, accum, bank)
+    bank = solvers_mod.as_bank(bank)
+    _, _, _, rows = _fetch_accum(accum)
+    n_max = solvers_mod.bank_max_steps(bank)
+    entries = []
+    for p, (pol, t) in enumerate(zip(bank, terms)):
+        # every admitted request visits its step-0 bucket exactly once
+        images = int(rows[p * n_max])
+        report = None
+        if images > 0:
+            report = _report_from_terms(
+                cfg, t, full_geometry=full_geometry,
+                num_steps=pol.num_steps,
+                tips_flags=solvers_mod.tips_active_schedule(pol, cfg.ddim))
+        entries.append(BankedPolicyReport(policy=pol, images=images,
+                                          report=report))
+    return BankedEnergyReport(entries=tuple(entries))
+
+
 def energy_report_from_accum(cfg: "PipelineConfig", accum,
                              full_geometry: bool = True
                              ) -> "PipelineEnergyReport":
@@ -340,6 +444,42 @@ def energy_report_from_accum(cfg: "PipelineConfig", accum,
     """
     return _report_from_terms(cfg, ledger_terms_from_accum(cfg, accum),
                               full_geometry=full_geometry)
+
+
+def phase_breakdown_from_accum(cfg: "PipelineConfig", accum, bank) -> list:
+    """Per-policy, per-phase realized ratios from a banked accumulator.
+
+    Groups each policy's per-iteration terms by its phase schedule
+    (``solvers.phase_index_schedule``) and reduces terms WITHIN each phase
+    before dividing — the phase-resolved view of what the phase-scheduled
+    thresholds actually did to SAS compression and the INT6 fraction.
+    Returns, per bank entry, ``{"policy", "phases": [{"phase", "iters",
+    "sas_ratio", "tips_low_ratio"}, ...]}``.
+    """
+    out = []
+    bank = solvers_mod.as_bank(bank)
+    for pol, terms in zip(bank, banked_ledger_terms(cfg, accum, bank)):
+        phase_ids = solvers_mod.phase_index_schedule(pol)
+        groups: dict = {}
+        for i, (sas_terms, (tnum, tden)) in enumerate(terms):
+            g = groups.setdefault(phase_ids[i], [0, {}, 0.0, 0.0])
+            g[0] += 1
+            for res, (num, den) in sas_terms.items():
+                a, b = g[1].get(res, (0.0, 0.0))
+                g[1][res] = (a + num, b + den)
+            g[2] += tnum
+            g[3] += tden
+        phases = []
+        for ph in sorted(groups):
+            iters, sas, tnum, tden = groups[ph]
+            snum = sum(n for n, _ in sas.values())
+            sden = sum(d for _, d in sas.values())
+            phases.append({
+                "phase": ph, "iters": iters,
+                "sas_ratio": snum / max(sden, 1e-12),
+                "tips_low_ratio": tnum / max(tden, 1e-12)})
+        out.append({"policy": pol.key(), "phases": phases})
+    return out
 
 
 def tips_ratios_from_accum(cfg: "PipelineConfig", accum) -> list:
@@ -459,4 +599,56 @@ class PipelineEnergyReport:
                        1e-12)),
             "mj_per_iter_compute": self.mj_per_iter_compute,
             "mj_per_iter_with_ema": self.mj_per_iter_with_ema,
+        }
+
+
+@dataclasses.dataclass
+class BankedPolicyReport:
+    """One bank entry's share of a banked serving run.
+
+    ``images`` is the request count that ran under this policy (read from
+    its step-0 bucket's row counter — every admitted request visits it
+    exactly once).  ``report`` is ``None`` when the policy served nothing.
+    """
+    policy: object                            # solvers.SamplerPolicy
+    images: int
+    report: Optional[PipelineEnergyReport]
+
+    @property
+    def mj_per_image(self) -> float:
+        """Modeled energy per image at THIS policy's step budget."""
+        if self.report is None:
+            return 0.0
+        return self.report.mj_per_iter_with_ema * self.policy.num_steps
+
+
+@dataclasses.dataclass
+class BankedEnergyReport:
+    """Per-policy energy reports + the images-weighted aggregate."""
+    entries: tuple                            # of BankedPolicyReport
+
+    @property
+    def images(self) -> int:
+        return sum(e.images for e in self.entries)
+
+    @property
+    def mj_per_image(self) -> float:
+        """Images-weighted mean energy per image across the bank."""
+        total = self.images
+        if total == 0:
+            return 0.0
+        return sum(e.mj_per_image * e.images for e in self.entries) / total
+
+    def summary(self) -> dict:
+        return {
+            "images": self.images,
+            "mj_per_image_weighted": self.mj_per_image,
+            "per_policy": [
+                {"policy": e.policy.key(),
+                 "tier": e.policy.name or None,
+                 "num_steps": e.policy.num_steps,
+                 "images": e.images,
+                 "mj_per_image": e.mj_per_image,
+                 **({} if e.report is None else e.report.summary())}
+                for e in self.entries],
         }

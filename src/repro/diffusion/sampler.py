@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tips import TIPS_ACTIVE_ITERS
+from repro.diffusion import solvers as solvers_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +67,7 @@ def ddim_step(latents, eps, t, t_prev, acp):
     if jnp.ndim(a_t) == 1:
         shape = (latents.shape[0],) + (1,) * (latents.ndim - 1)
         a_t, a_prev = a_t.reshape(shape), a_prev.reshape(shape)
-    x0 = (latents - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
-    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
+    return solvers_mod.ddim_transfer(latents, eps, a_t, a_prev)
 
 
 def cfg_batch(latents, context, uncond_context):
@@ -119,7 +119,8 @@ def sample(unet_apply, latents, context, uncond_context, cfg: DDIMConfig,
 
 def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
                 cfg: DDIMConfig, stats_rows=None, active=None,
-                row_stats: bool = False, reuse_cache=None):
+                row_stats: bool = False, reuse_cache=None,
+                bank=None, policy_id=None, solver_hist=None):
     """ONE denoising update at PER-SLOT step indices (the scan body).
 
     ``step_idx`` is (B,) int32 — each batch row's DDIM iteration in
@@ -152,6 +153,17 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
     third element — the new cache — and so does this function:
     ``(latents, stats, new_cache)``.  Without it the two-tuple contract
     is unchanged.
+
+    ``bank`` (static tuple of ``solvers.SamplerPolicy``) switches the
+    update to the generalized per-row solver path: ``policy_id`` (B,)
+    int32 selects each row's policy, step indices clip to PER-ROW budgets,
+    timesteps / TIPS activity / solver coefficients are gathered from the
+    bank's ``SolverTables``, phase-schedule threshold scales (when any
+    bank policy schedules them) are resolved per row and passed to
+    ``unet_apply`` as ``overrides``, and multistep solver history rides
+    ``solver_hist`` (B, H, ...).  The banked return contract is always a
+    4-tuple ``(latents, stats, new_cache_or_None, new_hist)``.  With
+    ``bank=None`` every legacy contract above is unchanged, op for op.
     """
     acp = alphas_cumprod(cfg)
     ts = timestep_schedule(cfg)
@@ -160,12 +172,29 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
     step_idx = jnp.asarray(step_idx, jnp.int32)
     if step_idx.ndim == 0:
         step_idx = jnp.full((b,), step_idx, jnp.int32)
-    idx = jnp.clip(step_idx, 0, cfg.num_inference_steps - 1)
-    t = ts[idx]                                   # (B,) per-row timesteps
-    tips_vec = idx < cfg.tips_active_iters        # (B,) per-row TIPS flag
+    if bank is not None:
+        bank = solvers_mod.as_bank(bank)
+        tables = solvers_mod.solver_tables(bank, cfg)
+        if policy_id is None:
+            policy_id = jnp.zeros((b,), jnp.int32)
+        policy_id = jnp.asarray(policy_id, jnp.int32)
+        if solver_hist is None:
+            solver_hist = solvers_mod.init_history(bank, b, latents.shape[1:])
+        idx = jnp.clip(step_idx, 0, tables.budget[policy_id] - 1)
+        t = tables.t[policy_id, idx]              # (B,) per-row timesteps
+        tips_vec = tables.tips[policy_id, idx]    # (B,) per-row TIPS flag
+    else:
+        idx = jnp.clip(step_idx, 0, cfg.num_inference_steps - 1)
+        t = ts[idx]                               # (B,) per-row timesteps
+        tips_vec = idx < cfg.tips_active_iters    # (B,) per-row TIPS flag
     kw = {"row_stats": True} if row_stats else {}
     if reuse_cache is not None:
         kw["reuse_cache"] = reuse_cache
+    if bank is not None:
+        overrides = solvers_mod.gather_overrides(tables, bank, policy_id,
+                                                 idx)
+        if overrides is not None:
+            kw["overrides"] = overrides
 
     use_cfg = cfg.guidance_scale != 1.0 and uncond_context is not None
     if use_cfg:
@@ -189,17 +218,47 @@ def denoise_step(unet_apply, latents, context, uncond_context, step_idx,
         new_cache = None
     if use_cfg:
         eps = guided_eps(eps, cfg.guidance_scale)
-    new_lat = ddim_step(latents, eps, t, t - step, acp)
+    if bank is not None:
+        new_lat, new_hist = solvers_mod.solver_update(
+            latents, eps, solver_hist, tables, bank, policy_id, idx)
+    else:
+        new_lat = ddim_step(latents, eps, t, t - step, acp)
+        new_hist = None
     if active is not None:
         keep = active.reshape((b,) + (1,) * (latents.ndim - 1))
         new_lat = jnp.where(keep, new_lat, latents)
+        if new_hist is not None and new_hist.shape[1] > 0:
+            new_hist = jnp.where(keep[:, None], new_hist, solver_hist)
+    if bank is not None:
+        return new_lat, stats, new_cache, new_hist
     if reuse_cache is not None:
         return new_lat, stats, new_cache
     return new_lat, stats
 
 
+def _resolve_bank(sampler_policy, sampler_bank):
+    """(bank, num_scan_steps, policy_index) for the banked scan paths.
+
+    Without ``sampler_bank`` the policy becomes its own single-entry
+    bank.  With it, the scan runs under the full bank's structure but
+    only for ``sampler_policy``'s own step budget, rows pinned to its
+    index — mirroring what a slot row of that policy executes before
+    retiring.
+    """
+    if sampler_bank is None:
+        bank = solvers_mod.as_bank(sampler_policy)
+        return bank, solvers_mod.bank_max_steps(bank), 0
+    bank = solvers_mod.as_bank(sampler_bank)
+    if sampler_policy not in bank:
+        raise ValueError(
+            f"sampler_policy {sampler_policy.key()} is not an entry of "
+            f"sampler_bank {[p.key() for p in bank]}")
+    return bank, sampler_policy.num_steps, bank.index(sampler_policy)
+
+
 def sample_scan(unet_apply, latents, context, uncond_context,
-                cfg: DDIMConfig, stats_rows=None):
+                cfg: DDIMConfig, stats_rows=None, sampler_policy=None,
+                sampler_bank=None, policy_id=None):
     """Run all denoising steps inside one ``jax.lax.scan``.
 
     The scan body is :func:`denoise_step` with every row at the same step
@@ -216,11 +275,56 @@ def sample_scan(unet_apply, latents, context, uncond_context,
     stacked_stats)`` where ``stacked_stats`` is a ``UNetStats`` whose
     leaves carry a leading ``num_inference_steps`` axis; reconstruct the
     per-step view with ``stacked_stats.step(i)`` / ``.unstack()``.
+
+    ``sampler_policy`` (a ``solvers.SamplerPolicy``) swaps the solver and
+    the step budget: the scan runs ``policy.num_steps`` iterations of the
+    banked :func:`denoise_step` with a single-policy bank, multistep
+    history in the carry.  A ``(ddim, num_inference_steps)`` policy is
+    bit-identical to the default path (same gathered coefficients, same
+    shared transfer arithmetic — tests/test_solvers.py pins it).
+
+    ``sampler_bank`` (static tuple of policies containing
+    ``sampler_policy``) traces the scan body under the FULL bank — full
+    coefficient tables, full multistep-history depth, the complete
+    per-row select structure — with every row pinned to
+    ``sampler_policy``'s index.  XLA specializes fusion clusters (and
+    hence FMA contraction) to the traced graph, so a collapsed
+    single-policy program can drift ~1e-6 from the mixed-bank slot
+    executable even for logically identical rows; sharing the bank
+    structure is what makes the one-shot path a bit-exact oracle for
+    mixed-tier slot serving (DESIGN.md §10).  ``policy_id`` (a (B,)
+    int32 ARRAY of the policy's bank index) must then arrive as a traced
+    runtime operand, not a trace-time constant — a constant lets XLA
+    fold the per-row coefficient gathers into the UNet's fusion clusters
+    and shift FMA contraction relative to the slot executable (whose
+    ``policy_id`` lives in donated state).  The engine passes it through
+    the jit boundary (``DiffusionEngine._get_compiled``).
     """
-    n = cfg.num_inference_steps
     b = latents.shape[0]
     if stats_rows is not None and not (0 < stats_rows <= b):
         raise ValueError(f"stats_rows={stats_rows} outside [1, {b}]")
+    if sampler_bank is not None and sampler_policy is None:
+        raise ValueError("sampler_bank requires sampler_policy (the "
+                         "bank entry to run every row under)")
+    if sampler_policy is not None:
+        bank, n, pid0 = _resolve_bank(sampler_policy, sampler_bank)
+        if policy_id is None:
+            policy_id = jnp.full((b,), pid0, jnp.int32)
+
+        def body(carry, i):
+            lat, hist = carry
+            lat, stats, _, hist = denoise_step(
+                unet_apply, lat, context, uncond_context,
+                jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
+                bank=bank, policy_id=policy_id, solver_hist=hist)
+            return (lat, hist), stats
+
+        hist0 = solvers_mod.init_history(bank, b, latents.shape[1:])
+        (latents, _), stacked = jax.lax.scan(body, (latents, hist0),
+                                             jnp.arange(n))
+        return latents, stacked
+
+    n = cfg.num_inference_steps
 
     def body(lat, i):
         return denoise_step(unet_apply, lat, context, uncond_context,
@@ -233,7 +337,9 @@ def sample_scan(unet_apply, latents, context, uncond_context,
 
 def sample_scan_reuse(unet_apply, latents, context, uncond_context,
                       cfg: DDIMConfig, reuse_cache=None, stats_rows=None,
-                      base_caches=None, record_caches: bool = False):
+                      base_caches=None, record_caches: bool = False,
+                      sampler_policy=None, sampler_bank=None,
+                      policy_id=None):
     """Scanned denoising loop with the temporal-reuse cache threaded.
 
     Two cache sources, mirroring the two ``ReusePolicy`` modes:
@@ -251,8 +357,15 @@ def sample_scan_reuse(unet_apply, latents, context, uncond_context,
 
     Returns ``(latents, stacked_stats)`` (plus the recorded caches when
     asked); ``stacked_stats`` carries per-layer reuse counters.
+
+    ``sampler_policy`` composes with both modes exactly as in
+    :func:`sample_scan`: the banked :func:`denoise_step` with a
+    single-policy bank, solver history alongside the cache in the carry.
+    (Edit-mode ``base_caches`` must have been recorded with the same
+    policy — the per-step references are indexed by step.)
+    ``sampler_bank`` likewise mirrors :func:`sample_scan`: trace under
+    the full bank with rows pinned to ``sampler_policy``'s index.
     """
-    n = cfg.num_inference_steps
     b = latents.shape[0]
     if stats_rows is not None and not (0 < stats_rows <= b):
         raise ValueError(f"stats_rows={stats_rows} outside [1, {b}]")
@@ -260,30 +373,59 @@ def sample_scan_reuse(unet_apply, latents, context, uncond_context,
         raise ValueError(
             "pass exactly one of reuse_cache (temporal mode) or "
             "base_caches (edit mode)")
+    if sampler_bank is not None and sampler_policy is None:
+        raise ValueError("sampler_bank requires sampler_policy (the "
+                         "bank entry to run every row under)")
+    bank = None
+    if sampler_policy is not None:
+        bank, n, pid0 = _resolve_bank(sampler_policy, sampler_bank)
+        if policy_id is None:
+            policy_id = jnp.full((b,), pid0, jnp.int32)
+        hist0 = solvers_mod.init_history(bank, b, latents.shape[1:])
+    else:
+        n = cfg.num_inference_steps
 
     if base_caches is not None:
-        def body(lat, i):
+        def body(carry, i):
+            lat, hist = carry
             cache_i = jax.tree_util.tree_map(lambda x: x[i], base_caches)
-            lat, stats, _ = denoise_step(
-                unet_apply, lat, context, uncond_context,
-                jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
-                reuse_cache=cache_i)
-            return lat, stats
+            if bank is not None:
+                lat, stats, _, hist = denoise_step(
+                    unet_apply, lat, context, uncond_context,
+                    jnp.full((b,), i, jnp.int32), cfg,
+                    stats_rows=stats_rows, reuse_cache=cache_i,
+                    bank=bank, policy_id=policy_id, solver_hist=hist)
+            else:
+                lat, stats, _ = denoise_step(
+                    unet_apply, lat, context, uncond_context,
+                    jnp.full((b,), i, jnp.int32), cfg,
+                    stats_rows=stats_rows, reuse_cache=cache_i)
+            return (lat, hist), stats
 
-        latents, stacked = jax.lax.scan(body, latents, jnp.arange(n))
+        hist_init = hist0 if bank is not None else jnp.zeros((b, 0))
+        (latents, _), stacked = jax.lax.scan(body, (latents, hist_init),
+                                             jnp.arange(n))
         return latents, stacked
 
     def body(carry, i):
-        lat, cache = carry
-        lat, stats, cache = denoise_step(
-            unet_apply, lat, context, uncond_context,
-            jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
-            reuse_cache=cache)
+        lat, cache, hist = carry
+        if bank is not None:
+            lat, stats, cache, hist = denoise_step(
+                unet_apply, lat, context, uncond_context,
+                jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
+                reuse_cache=cache, bank=bank, policy_id=policy_id,
+                solver_hist=hist)
+        else:
+            lat, stats, cache = denoise_step(
+                unet_apply, lat, context, uncond_context,
+                jnp.full((b,), i, jnp.int32), cfg, stats_rows=stats_rows,
+                reuse_cache=cache)
         ys = (stats, cache) if record_caches else stats
-        return (lat, cache), ys
+        return (lat, cache, hist), ys
 
-    (latents, _), ys = jax.lax.scan(body, (latents, reuse_cache),
-                                    jnp.arange(n))
+    hist_init = hist0 if bank is not None else jnp.zeros((b, 0))
+    (latents, _, _), ys = jax.lax.scan(
+        body, (latents, reuse_cache, hist_init), jnp.arange(n))
     if record_caches:
         stacked, caches = ys
         return latents, stacked, caches

@@ -1,0 +1,578 @@
+"""SamplerPolicy — pluggable few-step solvers + phase-scheduled policies.
+
+The paper's 28.6 mJ/iter headline is per *iteration*; the other axis of
+end-to-end energy is how many iterations an image needs.  SD-Acc
+(arXiv:2507.01309) shows denoising is phase-heterogeneous (structure ->
+content -> detail) and that solver/step scheduling is the biggest
+end-to-end lever.  This module is that lever's policy layer:
+
+``SamplerPolicy``   — frozen/hashable: which solver (``ddim`` |
+                      ``dpm2m`` | ``plms``), how many steps, and an
+                      optional ``PhaseSchedule``.  Policies join the
+                      engine's executable-cache keys, so the set of
+                      DISTINCT policies in flight (the *bank*) keeps
+                      cache keys finite while per-row integer
+                      ``policy_id`` s select coefficients at trace time.
+``PhaseSchedule``   — per-phase overrides (TIPS activity, PSSA / TIPS /
+                      reuse threshold scales) resolved PER ROW PER STEP
+                      inside the scan body from precomputed tables —
+                      never from Python control flow, so one executable
+                      serves every phase mix.
+``solver_tables``   — the (P, N) per-(policy, step) coefficient tables
+                      the generalized ``sampler.denoise_step`` gathers
+                      per row: timesteps, DDIM alphas, DPM-Solver++(2M)
+                      exponential-integrator coefficients, TIPS
+                      activity, and phase threshold scales.
+
+Exactness contracts (DESIGN.md §10):
+
+* DDIM rows reproduce ``sampler.ddim_step`` op-for-op: the tables hold
+  the SAME float32 ``alphas_cumprod`` gathers the legacy path computes,
+  and the transfer arithmetic is the shared ``ddim_transfer`` helper —
+  a single-policy ``(ddim, 25)`` bank is bit-identical to the
+  policy-free engine.
+* A request's trajectory depends only on its OWN (solver, steps) pair:
+  per-row gathers + elementwise candidate selection mean a mixed-tier
+  slot batch produces images bit-identical to one-shot runs of the same
+  policy (tests/test_solvers.py pins this).
+
+Solver math:
+
+* ``ddim``  — deterministic eta=0 transfer (the seed's operating point).
+* ``plms``  — PNDM's linear-multistep mode: Adams–Bashforth combination
+  of the last <=4 eps predictions (warmup orders 1/2/3/4), then the same
+  DDIM transfer.  History = 3 previous eps.
+* ``dpm2m`` — DPM-Solver++(2M), data-prediction space: with
+  ``lambda = log(alpha/sigma)``, ``h_i = lambda_{i+1} - lambda_i``,
+  ``r = h_{i-1}/h_i`` and ``m2 = h_i / (2 h_{i-1})``,
+
+      x_{i+1} = (sigma_{i+1}/sigma_i) x_i
+                - alpha_{i+1} (e^{-h_i} - 1) [(1+m2) x0_i - m2 x0_{i-1}]
+
+  with ``m2 = 0`` on the first step (no history) and the final step
+  (lower-order-final: the final sigma is 0, h = inf, and
+  ``expm1(-inf) = -1`` makes the transfer land exactly on the data
+  prediction).  History = 1 previous x0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SOLVERS = ("ddim", "plms", "dpm2m")
+# per-row solver family ids inside the coefficient tables
+SOLVER_ID = {name: i for i, name in enumerate(SOLVERS)}
+# previous-step model outputs each family reads (eps for plms, x0 for dpm2m)
+SOLVER_HISTORY = {"ddim": 0, "plms": 3, "dpm2m": 1}
+
+# Adams–Bashforth eps-combination weights by available history length
+# (PNDM's warmup orders); row h weighs [eps_t, eps_{t-1}, eps_{t-2}, eps_{t-3}]
+PLMS_WEIGHTS = (
+    (1.0, 0.0, 0.0, 0.0),
+    (3.0 / 2.0, -1.0 / 2.0, 0.0, 0.0),
+    (23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0, 0.0),
+    (55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0),
+)
+
+
+def _triple(val, kind=float) -> tuple:
+    t = tuple(val)
+    if len(t) != 3:
+        raise ValueError(f"phase schedules have 3 phases, got {val!r}")
+    return tuple(kind(v) for v in t)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSchedule:
+    """Per-phase policy overrides over the denoising trajectory.
+
+    Phases follow SD-Acc's structure -> content -> detail split:
+    ``boundaries`` are budget fractions — step ``i`` of an ``n``-step
+    trajectory is in phase 0 while ``i < ceil(b0*n)``, phase 1 while
+    ``i < ceil(b1*n)``, else phase 2.
+
+    ``tips_on`` replaces the default ``tips_active_iters`` schedule with
+    per-phase TIPS activity (paper Fig. 9(b): the detail phase is
+    quantization-vulnerable, hence the ``(True, True, False)`` default).
+    The ``*_scale`` triples MULTIPLY the static policy thresholds
+    (``UNetConfig.pssa_threshold``, ``PrecisionPolicy.threshold``,
+    ``ReusePolicy.threshold``) per phase; scales are resolved per row
+    per step from the solver tables, so they never enter an executable
+    cache key (DESIGN.md §10 cache-key rules).  ``tips_scale`` applies
+    to fixed spotting only (adaptive spotting targets a ratio, not a
+    threshold).
+    """
+    boundaries: Tuple[float, float] = (0.4, 0.8)
+    tips_on: Tuple[bool, bool, bool] = (True, True, False)
+    pssa_scale: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+    tips_scale: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+    reuse_scale: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+
+    def __post_init__(self):
+        b0, b1 = self.boundaries
+        if not 0.0 <= b0 <= b1 <= 1.0:
+            raise ValueError(
+                f"PhaseSchedule.boundaries={self.boundaries}: expected "
+                f"0 <= b0 <= b1 <= 1")
+        for fname in ("pssa_scale", "tips_scale", "reuse_scale"):
+            if any(s <= 0.0 for s in getattr(self, fname)):
+                raise ValueError(
+                    f"PhaseSchedule.{fname}={getattr(self, fname)}: "
+                    f"threshold scales must be > 0")
+
+    # -- presets ---------------------------------------------------------
+    @classmethod
+    def detail_guard(cls) -> "PhaseSchedule":
+        """Mirror the paper's late-iteration guard, generalized per phase:
+        TIPS off in the detail phase (quantization-vulnerable), PSSA
+        pruned harder while features are coarse, reuse threshold relaxed
+        mid-trajectory (content phase changes slowly between steps)."""
+        return cls(tips_on=(True, True, False),
+                   pssa_scale=(2.0, 2.0, 1.0),
+                   reuse_scale=(1.0, 2.0, 1.0))
+
+    @classmethod
+    def parse(cls, spec: str) -> "PhaseSchedule":
+        """``"detail_guard"`` or ``key=v0:v1[:v2]`` items, e.g.
+        ``"boundaries=0.3:0.8,pssa=2:2:1,tips=on:on:off"``."""
+        spec = spec.strip()
+        if spec in ("detail_guard", "default"):
+            return (cls.detail_guard() if spec == "detail_guard" else cls())
+        fields = {}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            if "=" not in item:
+                raise ValueError(
+                    f"phase spec {item!r}: expected key=v0:v1[:v2] or "
+                    f"'detail_guard'")
+            key, val = (s.strip() for s in item.split("=", 1))
+            parts = val.split(":")
+            if key == "boundaries":
+                if len(parts) != 2:
+                    raise ValueError(
+                        f"phase spec: boundaries={val!r} (expected b0:b1)")
+                fields["boundaries"] = (float(parts[0]), float(parts[1]))
+            elif key == "tips":
+                fields["tips_on"] = _triple(
+                    (p.lower() in ("on", "true", "1") for p in parts), bool)
+            elif key in ("pssa", "tips_scale", "reuse"):
+                name = {"pssa": "pssa_scale", "tips_scale": "tips_scale",
+                        "reuse": "reuse_scale"}[key]
+                fields[name] = _triple((float(p) for p in parts))
+            else:
+                raise ValueError(
+                    f"phase spec: unknown key {key!r} (expected boundaries, "
+                    f"tips, pssa, tips_scale or reuse)")
+        return cls(**fields)
+
+    # -- views -----------------------------------------------------------
+    def phase_of(self, i: int, num_steps: int) -> int:
+        """Which phase step ``i`` of an ``num_steps`` trajectory is in."""
+        b0, b1 = self.boundaries
+        if i < math.ceil(b0 * num_steps):
+            return 0
+        if i < math.ceil(b1 * num_steps):
+            return 1
+        return 2
+
+    @property
+    def schedules_pssa(self) -> bool:
+        return self.pssa_scale != (1.0, 1.0, 1.0)
+
+    @property
+    def schedules_tips_threshold(self) -> bool:
+        return self.tips_scale != (1.0, 1.0, 1.0)
+
+    @property
+    def schedules_reuse(self) -> bool:
+        return self.reuse_scale != (1.0, 1.0, 1.0)
+
+    def describe(self) -> dict:
+        return {"boundaries": list(self.boundaries),
+                "tips_on": list(self.tips_on),
+                "pssa_scale": list(self.pssa_scale),
+                "tips_scale": list(self.tips_scale),
+                "reuse_scale": list(self.reuse_scale)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerPolicy:
+    """Frozen/hashable per-request sampling decision.
+
+    ``name`` is a display label (tier name in traces); it is excluded
+    from equality/hash so renaming a tier can never fork an executable
+    cache entry.
+    """
+    solver: str = "ddim"
+    num_steps: int = 25
+    phases: Optional[PhaseSchedule] = None
+    name: str = dataclasses.field(default="", compare=False)
+
+    def __post_init__(self):
+        if self.solver not in SOLVERS:
+            raise ValueError(
+                f"SamplerPolicy.solver={self.solver!r}: expected one of "
+                f"{SOLVERS}")
+        if self.num_steps < 1:
+            raise ValueError(
+                f"SamplerPolicy.num_steps={self.num_steps}: expected >= 1")
+
+    # -- presets / tiers -------------------------------------------------
+    @classmethod
+    def ddim(cls, num_steps: int = 25, **kw) -> "SamplerPolicy":
+        return cls(solver="ddim", num_steps=num_steps, **kw)
+
+    @classmethod
+    def dpm2m(cls, num_steps: int = 12, **kw) -> "SamplerPolicy":
+        return cls(solver="dpm2m", num_steps=num_steps, **kw)
+
+    @classmethod
+    def plms(cls, num_steps: int = 12, **kw) -> "SamplerPolicy":
+        return cls(solver="plms", num_steps=num_steps, **kw)
+
+    @classmethod
+    def tier(cls, name: str) -> "SamplerPolicy":
+        """Quality-tier presets for serving admission."""
+        try:
+            return TIERS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown quality tier {name!r}: expected one of "
+                f"{tuple(TIERS)}") from None
+
+    @classmethod
+    def parse(cls, spec: str) -> "SamplerPolicy":
+        """CLI spec: a tier name (``draft`` | ``balanced`` | ``quality``),
+        a solver name, or a comma list with ``steps=N`` /
+        ``phases=<PhaseSchedule spec with ; separators>`` overrides,
+        e.g. ``"dpm2m,steps=10,phases=detail_guard"``."""
+        spec = spec.strip()
+        if spec in TIERS:
+            return TIERS[spec]
+        solver = None
+        fields: dict = {}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            if item in SOLVERS:
+                solver = item
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"sampler spec {item!r}: expected a tier in "
+                    f"{tuple(TIERS)}, a solver in {SOLVERS} or key=value")
+            key, val = (s.strip() for s in item.split("=", 1))
+            if key == "steps":
+                fields["num_steps"] = int(val)
+            elif key == "solver":
+                solver = val
+            elif key == "phases":
+                fields["phases"] = PhaseSchedule.parse(val.replace(";", ","))
+            elif key == "name":
+                fields["name"] = val
+            else:
+                raise ValueError(
+                    f"sampler spec: unknown key {key!r} (expected steps, "
+                    f"solver, phases or name)")
+        base = cls() if solver is None else cls(solver=solver)
+        return dataclasses.replace(base, **fields) if fields else base
+
+    # -- views -----------------------------------------------------------
+    @property
+    def solver_id(self) -> int:
+        return SOLVER_ID[self.solver]
+
+    @property
+    def history(self) -> int:
+        """Previous model outputs this solver reads (the hist depth)."""
+        return SOLVER_HISTORY[self.solver]
+
+    def key(self) -> str:
+        """Stable short label (bank dict keys, bench records)."""
+        return f"{self.solver}-{self.num_steps}"
+
+    def label(self) -> str:
+        return self.name or self.key()
+
+    def describe(self) -> dict:
+        return {"solver": self.solver, "num_steps": self.num_steps,
+                "name": self.label(),
+                "phases": (None if self.phases is None
+                           else self.phases.describe())}
+
+
+TIERS = {
+    "draft": SamplerPolicy(solver="dpm2m", num_steps=8, name="draft"),
+    "balanced": SamplerPolicy(solver="dpm2m", num_steps=12, name="balanced"),
+    "quality": SamplerPolicy(solver="ddim", num_steps=25, name="quality"),
+}
+
+
+# ----------------------------------------------------------------------------
+# Bank views (a bank = static tuple of distinct SamplerPolicies)
+# ----------------------------------------------------------------------------
+def as_bank(policies) -> tuple:
+    """Normalize to a hashable bank tuple; validates emptiness."""
+    bank = (policies,) if isinstance(policies, SamplerPolicy) \
+        else tuple(policies)
+    if not bank:
+        raise ValueError("sampler bank is empty")
+    for p in bank:
+        if not isinstance(p, SamplerPolicy):
+            raise TypeError(f"bank entries must be SamplerPolicy, got "
+                            f"{type(p).__name__}")
+    return bank
+
+
+def bank_max_steps(bank) -> int:
+    return max(p.num_steps for p in bank)
+
+
+def bank_history(bank) -> int:
+    """Static hist depth of the slot buffer: the bank's worst case."""
+    return max(p.history for p in bank)
+
+
+def bank_schedules(bank) -> tuple:
+    """(pssa, tips_threshold, reuse) — which override lanes are live.
+
+    Static booleans derived from the bank, so an unscheduled bank traces
+    the exact legacy UNet call (no override operands, no kernel-routing
+    downgrades) and its executables stay bit-compatible.
+    """
+    ph = [p.phases for p in bank if p.phases is not None]
+    return (any(s.schedules_pssa for s in ph),
+            any(s.schedules_tips_threshold for s in ph),
+            any(s.schedules_reuse for s in ph))
+
+
+def tips_active_schedule(policy: SamplerPolicy, ddim_cfg) -> tuple:
+    """Host-side per-step TIPS activity for one policy.
+
+    Without phases this scales the config's ``tips_active_iters``
+    operating point to the policy's budget (exactly ``i <
+    tips_active_iters`` when the budget matches the config — the legacy
+    schedule, bit-for-bit); with phases it is the per-phase activity.
+    """
+    n = policy.num_steps
+    if policy.phases is not None:
+        return tuple(bool(policy.phases.tips_on[policy.phases.phase_of(i, n)])
+                     for i in range(n))
+    if n == ddim_cfg.num_inference_steps:
+        active = ddim_cfg.tips_active_iters
+    else:
+        active = max(1, n * ddim_cfg.tips_active_iters
+                     // ddim_cfg.num_inference_steps)
+    return tuple(i < active for i in range(n))
+
+
+def phase_index_schedule(policy: SamplerPolicy) -> tuple:
+    """Host-side per-step phase index (0/1/2) for one policy.
+
+    Policies without a schedule still have well-defined phases (the
+    default boundaries) — the ledger's per-(phase, layer) breakdown
+    groups buckets by this.
+    """
+    ph = policy.phases if policy.phases is not None else PhaseSchedule()
+    return tuple(ph.phase_of(i, policy.num_steps)
+                 for i in range(policy.num_steps))
+
+
+def _scale_schedule(policy: SamplerPolicy, field: str) -> tuple:
+    ph = policy.phases
+    if ph is None:
+        return (1.0,) * policy.num_steps
+    scales = getattr(ph, field)
+    return tuple(float(scales[ph.phase_of(i, policy.num_steps)])
+                 for i in range(policy.num_steps))
+
+
+# ----------------------------------------------------------------------------
+# Per-(policy, step) coefficient tables
+# ----------------------------------------------------------------------------
+class SolverTables(NamedTuple):
+    """(P, N) gather tables (N = bank max budget; padded rows repeat the
+    final step — per-row step clipping means padding is never read)."""
+    t: jax.Array            # (P, N) int32 UNet timesteps
+    a_t: jax.Array          # (P, N) f32 alphas_cumprod[t]
+    a_prev: jax.Array       # (P, N) f32 alphas_cumprod at the next boundary
+    c_lat: jax.Array        # (P, N) f32 dpm2m latent carry (sigma ratio)
+    c_d: jax.Array          # (P, N) f32 dpm2m data-prediction coefficient
+    m2: jax.Array           # (P, N) f32 dpm2m second-order weight
+    tips: jax.Array         # (P, N) bool per-step TIPS activity
+    pssa_scale: jax.Array   # (P, N) f32 phase threshold scales
+    tips_scale: jax.Array   # (P, N) f32
+    reuse_scale: jax.Array  # (P, N) f32
+    solver: jax.Array       # (P,) int32 family id
+    budget: jax.Array       # (P,) int32 per-policy step budget
+
+
+def _pad_last(vals: list, n: int) -> list:
+    return list(vals) + [vals[-1]] * (n - len(vals))
+
+
+def solver_tables(bank, ddim_cfg) -> SolverTables:
+    """Build the bank's coefficient tables (trace-time jnp constants).
+
+    The DDIM columns are computed with the SAME jnp float32 chain the
+    legacy path uses (``alphas_cumprod`` gathers, the same ``where`` for
+    the final boundary), so a per-row gather from these tables feeds
+    ``ddim_transfer`` values bit-identical to ``sampler.ddim_step``.
+    """
+    from repro.diffusion.sampler import alphas_cumprod  # lazy: no cycle
+
+    bank = as_bank(bank)
+    n_max = bank_max_steps(bank)
+    acp = alphas_cumprod(ddim_cfg)
+    rows: dict = {f: [] for f in SolverTables._fields if f not in
+                  ("solver", "budget")}
+    for p in bank:
+        n = p.num_steps
+        step = ddim_cfg.num_train_steps // n
+        ts = jnp.arange(n - 1, -1, -1) * step
+        t_prev = ts - step
+        a_t = acp[ts]
+        a_prev = jnp.where(t_prev >= 0, acp[jnp.maximum(t_prev, 0)], 1.0)
+        # DPM-Solver++(2M) exponential-integrator coefficients
+        alpha_c, sigma_c = jnp.sqrt(a_t), jnp.sqrt(1.0 - a_t)
+        alpha_n, sigma_n = jnp.sqrt(a_prev), jnp.sqrt(1.0 - a_prev)
+        lam_c = jnp.log(alpha_c / sigma_c)
+        lam_n = jnp.log(alpha_n / sigma_n)       # +inf at the final boundary
+        h = lam_n - lam_c
+        c_lat = sigma_n / sigma_c                # 0 at the final boundary
+        c_d = -alpha_n * jnp.expm1(-h)           # alpha_n at the final step
+        first_or_last = (jnp.arange(n) == 0) | (jnp.arange(n) == n - 1)
+        m2 = jnp.where(first_or_last, 0.0,
+                       h / (2.0 * jnp.concatenate([h[:1], h[:-1]])))
+        rows["t"].append(_pad_last(list(jnp.asarray(ts, jnp.int32)), n_max))
+        for name, arr in (("a_t", a_t), ("a_prev", a_prev),
+                          ("c_lat", c_lat), ("c_d", c_d), ("m2", m2)):
+            rows[name].append(_pad_last(list(arr), n_max))
+        rows["tips"].append(_pad_last(
+            list(tips_active_schedule(p, ddim_cfg)), n_max))
+        for name, field in (("pssa_scale", "pssa_scale"),
+                            ("tips_scale", "tips_scale"),
+                            ("reuse_scale", "reuse_scale")):
+            rows[name].append(_pad_last(
+                list(_scale_schedule(p, field)), n_max))
+    stack = {name: jnp.stack([jnp.asarray(
+        r, jnp.int32 if name == "t" else
+        bool if name == "tips" else jnp.float32) for r in vals])
+        for name, vals in rows.items()}
+    return SolverTables(
+        solver=jnp.asarray([p.solver_id for p in bank], jnp.int32),
+        budget=jnp.asarray([p.num_steps for p in bank], jnp.int32),
+        **stack)
+
+
+class PhaseOverrides(NamedTuple):
+    """Per-row threshold scales resolved from the tables for one step.
+
+    Each lane is ``None`` (bank never schedules it — the UNet call is
+    the exact legacy trace) or a (B,) float32 of multiplicative scales
+    on the static policy thresholds.  The UNet threads these down to
+    the dispatch layer (``repro.kernels.dispatch``).
+    """
+    pssa_scale: Optional[jax.Array] = None
+    tips_scale: Optional[jax.Array] = None
+    reuse_scale: Optional[jax.Array] = None
+
+
+def gather_overrides(tables: SolverTables, bank, policy_id, idx
+                     ) -> Optional[PhaseOverrides]:
+    """Per-row override scales for the rows' current steps (or None)."""
+    sched_pssa, sched_tips, sched_reuse = bank_schedules(bank)
+    if not (sched_pssa or sched_tips or sched_reuse):
+        return None
+    return PhaseOverrides(
+        pssa_scale=(tables.pssa_scale[policy_id, idx] if sched_pssa
+                    else None),
+        tips_scale=(tables.tips_scale[policy_id, idx] if sched_tips
+                    else None),
+        reuse_scale=(tables.reuse_scale[policy_id, idx] if sched_reuse
+                     else None))
+
+
+# ----------------------------------------------------------------------------
+# The generalized per-row solver update
+# ----------------------------------------------------------------------------
+def ddim_transfer(latents, eps, a_t, a_prev):
+    """The deterministic DDIM (eta=0) transfer, coefficients pre-gathered.
+
+    Shared by the legacy ``sampler.ddim_step`` and every banked solver
+    candidate (PLMS applies it to the multistep eps combination), so the
+    arithmetic literally cannot drift between paths.
+    """
+    x0 = (latents - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
+
+
+def init_history(bank, batch: int, latent_shape) -> jax.Array:
+    """(B, H, *latent) zeroed solver history (H may be 0: ddim-only)."""
+    h = bank_history(as_bank(bank))
+    return jnp.zeros((batch, h) + tuple(latent_shape), jnp.float32)
+
+
+def solver_update(latents, eps, hist, tables: SolverTables, bank,
+                  policy_id, idx):
+    """One per-row solver step: (new_latents, new_hist).
+
+    ``idx`` is the (B,) CLIPPED step index, ``hist`` the (B, H, ...)
+    newest-first model-output history (eps for plms rows, x0 for dpm2m
+    rows — selected per row on write, so a row's buffer always holds
+    what ITS solver reads).  Candidate updates are computed elementwise
+    for every family present in the bank (static set) and selected per
+    row — each row's arithmetic is identical to a single-policy run of
+    its own (solver, steps) pair, which is the mixed-tier bit-identity
+    contract.
+    """
+    bank = as_bank(bank)
+    fams = {p.solver for p in bank}
+    b = latents.shape[0]
+    shape = (b,) + (1,) * (latents.ndim - 1)
+    a_t = tables.a_t[policy_id, idx].reshape(shape)
+    a_prev = tables.a_prev[policy_id, idx].reshape(shape)
+    hmax = bank_history(bank)
+
+    cands: dict = {}
+    store: dict = {}
+    if "ddim" in fams:
+        cands["ddim"] = ddim_transfer(latents, eps, a_t, a_prev)
+        store["ddim"] = eps                   # never read (history 0)
+    if "plms" in fams:
+        w = jnp.asarray(PLMS_WEIGHTS, jnp.float32)[jnp.minimum(idx, 3)]
+        eps_lin = w[:, 0].reshape(shape) * eps
+        for j in range(min(3, hmax)):
+            eps_lin = eps_lin + w[:, j + 1].reshape(shape) * hist[:, j]
+        cands["plms"] = ddim_transfer(latents, eps_lin, a_t, a_prev)
+        store["plms"] = eps
+    if "dpm2m" in fams:
+        alpha_c, sigma_c = jnp.sqrt(a_t), jnp.sqrt(1.0 - a_t)
+        x0 = (latents - sigma_c * eps) / alpha_c
+        m2 = tables.m2[policy_id, idx].reshape(shape)
+        x0_prev = hist[:, 0] if hmax >= 1 else jnp.zeros_like(x0)
+        d = (1.0 + m2) * x0 - m2 * x0_prev
+        cands["dpm2m"] = (tables.c_lat[policy_id, idx].reshape(shape)
+                          * latents
+                          + tables.c_d[policy_id, idx].reshape(shape) * d)
+        store["dpm2m"] = x0
+
+    if len(fams) == 1:
+        fam = next(iter(fams))
+        new_lat, stored = cands[fam], store[fam]
+    else:
+        solver = tables.solver[policy_id].reshape(shape)
+        names = [f for f in SOLVERS if f in fams]
+        new_lat, stored = cands[names[0]], store[names[0]]
+        for fam in names[1:]:
+            sel = solver == SOLVER_ID[fam]
+            new_lat = jnp.where(sel, cands[fam], new_lat)
+            stored = jnp.where(sel, store[fam], stored)
+
+    if hmax > 0:
+        new_hist = jnp.concatenate(
+            [stored[:, None], hist[:, :hmax - 1]], axis=1)
+    else:
+        new_hist = hist
+    return new_lat, new_hist

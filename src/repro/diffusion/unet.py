@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import PrecisionPolicy
 from repro.core.reuse import (LayerReuseCache, ReuseCache, ReusePolicy,
-                              ReuseRowCounters)
+                              ReuseRowCounters, window_patch_mask)
 from repro.diffusion.stats import SlotStats, UNetStats, attn_layer_order
 from repro.kernels import dispatch
 from repro.kernels.dispatch import KernelPolicy
@@ -336,7 +336,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                        stats_rows=None, dup_after_self: bool = False,
                        policy: KernelPolicy | None = None,
                        precision: PrecisionPolicy | None = None,
-                       row_stats: bool = False, reuse=None):
+                       row_stats: bool = False, reuse=None,
+                       overrides=None):
     """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult, reuse_out).
 
     ``tips_active`` is a scalar flag (whole-batch schedule) or a (B,) row
@@ -372,6 +373,12 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     ``(new LayerReuseCache, ReuseRowCounters)``.  At threshold 0 (or an
     invalid cache row) every patch is active, the plan is the identity,
     and the block is bit-identical to the dense path (DESIGN.md §9).
+
+    ``overrides`` (a ``solvers.PhaseOverrides`` or None) carries per-row
+    phase-scheduled threshold SCALES ((B,) request-row arrays, tiled to
+    [cond | uncond] where the hidden state was); each lane is None when
+    the sampler bank never schedules it, which keeps the unscheduled
+    trace — and its kernel routing — exactly the legacy one.
     """
     b, hgt, wid, c = x2d.shape
     res = hgt  # feature-map resolution
@@ -381,14 +388,44 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     if precision is None:
         precision = cfg.effective_precision()
 
+    def _per_rows(vec, nrows):
+        # override lanes are per REQUEST row; tile to [cond | uncond]
+        # rows where the hidden state was tiled (same precedent as
+        # tips_active / valid below)
+        if vec is not None and vec.shape[0] != nrows:
+            vec = jnp.concatenate([vec, vec], axis=0)
+        return vec
+
     rows = gate_rows = cache = None
     if reuse is not None:
         rp, cache, valid = reuse
         tokens_in = x2d.reshape(b, hgt * wid, c)
         patch_r = cfg.patch_size(res)
-        _, changed = dispatch.patch_delta(policy, tokens_in, cache.ref,
-                                          patch=patch_r,
-                                          threshold=rp.threshold)
+        if rp.apriori_window is not None:
+            # the edit region is known up front: patch activity is a
+            # compile-time constant — the patch-delta kernel is skipped
+            # entirely (the win of an a-priori reuse plan)
+            mask = window_patch_mask(rp.apriori_window, res, patch_r,
+                                     cfg.latent_size)
+            changed = jnp.broadcast_to(jnp.asarray(mask, bool)[None, :],
+                                       (b, len(mask)))
+        else:
+            reuse_scale = (None if overrides is None
+                           else _per_rows(overrides.reuse_scale, b))
+            if reuse_scale is not None:
+                # per-row thresholds: compute the raw per-patch delta
+                # (threshold 0 — same values regardless) and compare at
+                # the call site
+                delta, _ = dispatch.patch_delta(policy, tokens_in,
+                                                cache.ref, patch=patch_r,
+                                                threshold=0.0)
+                changed = delta >= (rp.threshold
+                                    * reuse_scale)[:, None]
+            else:
+                _, changed = dispatch.patch_delta(policy, tokens_in,
+                                                  cache.ref,
+                                                  patch=patch_r,
+                                                  threshold=rp.threshold)
         vrow = valid
         if vrow.shape[0] != b:
             # post-dup layers carry [cond | uncond] rows; validity is per
@@ -419,8 +456,14 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     k = _attn_heads(hn, p["sa_k"]["w"], heads)
     v = _attn_heads(hn, p["sa_v"]["w"], heads)
     patch = cfg.patch_size(res)
+    sa_threshold = cfg.pssa_threshold
+    if overrides is not None and overrides.pssa_scale is not None:
+        # self-attention runs on the cond half pre-dup (b == request
+        # rows) and on [cond | uncond] in post-dup blocks — tile to match
+        sa_threshold = cfg.pssa_threshold * _per_rows(
+            overrides.pssa_scale, q.shape[0])
     sa = dispatch.self_attention(policy, q, k, v, patch=patch,
-                                 threshold=cfg.pssa_threshold,
+                                 threshold=sa_threshold,
                                  prune_scores=cfg.pssa,
                                  stats_rows=None if dup_after_self
                                  else stats_rows,
@@ -450,9 +493,12 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     q = _attn_heads(hn_q, p["ca_q"]["w"], heads)
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
     vt = _attn_heads(context, p["ca_v"]["w"], heads)
+    tips_scale = (None if overrides is None
+                  else _per_rows(overrides.tips_scale, h.shape[0]))
     ca = dispatch.cross_attention(policy, q, kt, vt, precision=precision,
                                   stats_rows=stats_rows,
-                                  row_stats=row_stats)
+                                  row_stats=row_stats,
+                                  threshold_scale=tips_scale)
     ca_proj = jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
                          p["ca_o"]["w"]) + p["ca_o"]["b"]
     if reuse is not None:
@@ -512,7 +558,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                  stats_rows: Optional[int] = None,
                  cfg_dup: bool = False,
                  row_stats: bool = False,
-                 reuse_cache: Optional[ReuseCache] = None):
+                 reuse_cache: Optional[ReuseCache] = None,
+                 overrides=None):
     """latents (B, S, S, 4), timesteps (B,), context (B, Ttext, ctx_dim).
 
     Returns (eps-prediction (B, S, S, 4), ``UNetStats`` pytree) with one
@@ -541,6 +588,11 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
     threshold and scatters over the cached activations.  The return then
     gains a third element — the NEW cache (this step's activations, all
     rows valid) — and ``stats`` carries per-layer ``ReuseRowCounters``.
+
+    ``overrides`` (a ``solvers.PhaseOverrides``) threads phase-scheduled
+    per-row threshold scales to every transformer block; None — the
+    default, and what every unscheduled sampler bank produces — leaves
+    each block's trace exactly as before.
     """
     pssa_stats: list = []
     tips_stats: list = []
@@ -574,7 +626,8 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
                                            policy=policy,
                                            precision=precision,
                                            row_stats=row_stats,
-                                           reuse=reuse_arg)
+                                           reuse=reuse_arg,
+                                           overrides=overrides)
         if needs_dup:
             # downstream resnets now see [cond | uncond] rows
             temb = jnp.concatenate([temb, temb], axis=0)

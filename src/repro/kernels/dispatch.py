@@ -240,23 +240,28 @@ DISPATCH_TABLE = {
 # Dispatch entry points (the call sites model layers use)
 # ----------------------------------------------------------------------------
 def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
-                   threshold: float, prune_scores: bool = True,
+                   threshold, prune_scores: bool = True,
                    stats_rows: int | None = None,
                    reference_stats: bool = False,
                    row_stats: bool = False) -> attention.SelfAttnOut:
     """PSSA self-attention via the policy's implementation.
 
-    Two combinations force the materializing reference regardless of
+    Three combinations force the materializing reference regardless of
     policy: ``reference_stats`` (the seed's stats oracle, definitionally
-    materializing) and ``prune_scores=False`` (the paper-baseline ablation
+    materializing), ``prune_scores=False`` (the paper-baseline ablation
     keeps sub-threshold scores in the value matmul; the fused kernel always
-    prunes).  ``row_stats`` reports per-row integer counters
-    (``pssa.PSSARowCounters``) instead of folded byte stats — identical
-    counters either way, so the slot-serving ledger stays bit-exact across
-    implementations.
+    prunes), and a PER-ROW ``threshold`` array (phase-scheduled sampling —
+    the Pallas kernel bakes its scalar threshold into the kernel closure,
+    so per-row thresholds take the broadcast-friendly reference; the
+    support restriction is documented in DESIGN.md §10).  ``row_stats``
+    reports per-row integer counters (``pssa.PSSARowCounters``) instead of
+    folded byte stats — identical counters either way, so the
+    slot-serving ledger stays bit-exact across implementations.
     """
     impl = policy.self_attention
-    if impl == "fused" and (reference_stats or not prune_scores):
+    per_row_threshold = getattr(threshold, "ndim", 0) >= 1
+    if impl == "fused" and (reference_stats or not prune_scores
+                            or per_row_threshold):
         impl = "reference"
     if impl == "fused":
         return attention.self_attention_pssa_fused(
@@ -272,7 +277,8 @@ def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
 
 def cross_attention(policy: KernelPolicy, q, k_text, v_text, *,
                     precision, stats_rows: int | None = None,
-                    row_stats: bool = False) -> attention.CrossAttnOut:
+                    row_stats: bool = False,
+                    threshold_scale=None) -> attention.CrossAttnOut:
     """Cross-attention + TIPS spotting via the policy's implementation.
 
     ``precision`` (a ``core.precision.PrecisionPolicy``) drives the
@@ -281,15 +287,19 @@ def cross_attention(policy: KernelPolicy, q, k_text, v_text, *,
     importance mask / low ratio / ledger terms are bit-identical across
     ``reference`` and ``fused`` — DESIGN.md §7).  ``row_stats`` reports
     per-row important-token counts (``tips.TIPSRowCounters``).
+    ``threshold_scale`` ((B,) or None) scales each row's spotting
+    threshold (phase-scheduled sampling) — it lives downstream of both
+    kernels, in the shared spotting tail, so either implementation
+    honours it identically.
     """
     if policy.cross_attention == "fused":
         return attention.cross_attention_tips_fused(
             q, k_text, v_text, precision=precision, stats_rows=stats_rows,
             interpret=policy.interpret, bq=policy.cross_block_q,
-            row_stats=row_stats)
+            row_stats=row_stats, threshold_scale=threshold_scale)
     return attention.cross_attention_tips(
         q, k_text, v_text, precision=precision, stats_rows=stats_rows,
-        row_stats=row_stats)
+        row_stats=row_stats, threshold_scale=threshold_scale)
 
 
 def ffn_geglu(policy: KernelPolicy, hn, p, important, precision=None):

@@ -46,6 +46,9 @@ class Request:
     arrival_s: float                # seconds after serving start
     latents: object = None          # (1, S, S, C) initial noise (per-request)
     uncond_tokens: object = None    # (1, text_len) or None (CFG off)
+    policy_index: int = 0           # SamplerPolicy slot in the serving bank
+    tier: str = ""                  # quality-tier label (trace bookkeeping)
+    edit_window: object = None      # (y0, x0, h, w) latent px (edit requests)
     # filled by the scheduler:
     admitted_s: Optional[float] = None
     finished_s: Optional[float] = None
@@ -65,13 +68,19 @@ class Request:
 
 
 def make_requests(cfg, n: int, seed: int = 7, key=None,
-                  use_cfg: Optional[bool] = None) -> list:
+                  use_cfg: Optional[bool] = None, bank=None) -> list:
     """n requests with per-request prompt tokens and initial latents.
 
     Latents are drawn PER REQUEST (independent fold of ``seed``), so the
     same request produces the same image no matter which scheduler, slot,
     or batch serves it — the property the bit-identity tests lean on.
     Arrival times start at 0; apply a trace with :func:`apply_trace`.
+
+    ``bank`` (tuple of ``solvers.SamplerPolicy``): assign quality tiers
+    round-robin — request ``i`` carries ``policy_index = i % len(bank)``
+    and the policy's label as its ``tier``, so a mixed-tier trace
+    exercises every bank entry evenly and per-tier latency metrics have
+    balanced populations.
     """
     import jax
     import jax.numpy as jnp
@@ -88,8 +97,11 @@ def make_requests(cfg, n: int, seed: int = 7, key=None,
                                 (1, s, s, c))
         un = (jnp.zeros((1, cfg.text.max_len), jnp.int32) if use_cfg
               else None)
+        pidx = i % len(bank) if bank else 0
+        tier = bank[pidx].label() if bank else ""
         reqs.append(Request(rid=i, tokens=toks[i:i + 1], arrival_s=0.0,
-                            latents=lat, uncond_tokens=un))
+                            latents=lat, uncond_tokens=un,
+                            policy_index=pidx, tier=tier))
     return reqs
 
 
@@ -107,6 +119,12 @@ def make_edit_requests(cfg, n: int, seed: int = 7, key=None,
     recomputes only the edited patches.  Requests flow through the SAME
     ``admit(..., latents=)`` path as ``make_requests`` — the scheduler is
     oblivious to which workload it is serving.
+
+    Each request records its perturbation rectangle as ``edit_window``
+    (``(y0, x0, h, w)`` in latent pixels) — the a-priori changed-region
+    knowledge an inpainting/edit front-end has up front.  Feeding it to
+    ``ReusePolicy(apriori_window=...)`` lets the edit engine skip the
+    patch-delta kernel and activate exactly the window's patches.
     """
     import jax
     import jax.numpy as jnp
@@ -130,7 +148,8 @@ def make_edit_requests(cfg, n: int, seed: int = 7, key=None,
         un = (jnp.zeros((1, cfg.text.max_len), jnp.int32) if use_cfg
               else None)
         reqs.append(Request(rid=i, tokens=toks[i:i + 1], arrival_s=0.0,
-                            latents=lat, uncond_tokens=un))
+                            latents=lat, uncond_tokens=un,
+                            edit_window=(yi, xi, w, w)))
     return reqs
 
 
@@ -153,24 +172,46 @@ def apply_trace(requests: list, arrivals: list) -> list:
     return requests
 
 
-def _latency_metrics(requests: list, makespan_s: float) -> dict:
-    lats = np.asarray([r.latency_s for r in requests], dtype=np.float64)
-    queues = np.asarray([r.queue_s for r in requests], dtype=np.float64)
+def _lat_summary(lats) -> dict:
+    lats = np.asarray(lats, dtype=np.float64)
     return {
+        "mean": float(lats.mean()),
+        "p50": float(np.percentile(lats, 50)),
+        "p95": float(np.percentile(lats, 95)),
+        "max": float(lats.max()),
+    }
+
+
+def _latency_metrics(requests: list, makespan_s: float,
+                     bank=None, default_steps: int = 0) -> dict:
+    lats = [r.latency_s for r in requests]
+    queues = np.asarray([r.queue_s for r in requests], dtype=np.float64)
+    out = {
         "requests": len(requests),
         "makespan_s": makespan_s,
         "goodput_imgs_per_s": len(requests) / max(makespan_s, 1e-9),
-        "latency_s": {
-            "mean": float(lats.mean()),
-            "p50": float(np.percentile(lats, 50)),
-            "p95": float(np.percentile(lats, 95)),
-            "max": float(lats.max()),
-        },
+        "latency_s": _lat_summary(lats),
         "queue_wait_s": {
             "mean": float(queues.mean()),
             "p95": float(np.percentile(queues, 95)),
         },
     }
+    # steps-normalized goodput: mixed step budgets make raw imgs/s unfair
+    # (an 8-step draft is not a 25-step quality image) — denoising steps
+    # completed per second is the tier-neutral throughput
+    steps_of = (lambda r: bank[r.policy_index].num_steps) if bank \
+        else (lambda r: default_steps)
+    total_steps = sum(steps_of(r) for r in requests)
+    if total_steps:
+        out["goodput_steps_per_s"] = total_steps / max(makespan_s, 1e-9)
+    tiers = sorted({r.tier for r in requests if r.tier})
+    if tiers:
+        out["per_tier"] = {
+            t: {"requests": sum(r.tier == t for r in requests),
+                "latency_s": _lat_summary(
+                    [r.latency_s for r in requests if r.tier == t])}
+            for t in tiers}
+    return out
 
 
 class ContinuousScheduler:
@@ -181,11 +222,20 @@ class ContinuousScheduler:
     request list with wall-clock arrival gating: a request becomes
     admissible once ``now >= arrival_s``, enters the first free slot
     between steps, and its image is decoded the step its slot finishes.
+
+    ``bank`` (tuple of ``solvers.SamplerPolicy``) turns on mixed-tier
+    serving: each request's ``policy_index`` selects its solver and step
+    budget from the bank, all inside ONE step executable (the engine's
+    per-row coefficient gathers).  ``policy_index`` is a dynamic admit
+    argument, so the step program never retraces on tier composition.
     """
 
-    def __init__(self, engine, num_slots: int):
+    def __init__(self, engine, num_slots: int, bank=None):
+        from repro.diffusion import solvers
+
         self.engine = engine
         self.num_slots = num_slots
+        self.bank = solvers.as_bank(bank) if bank is not None else None
 
     def warmup(self) -> float:
         """Compile the step/encode/decode executables off the clock."""
@@ -195,7 +245,7 @@ class ContinuousScheduler:
         eng = self.engine
         cfg = eng.cfg
         t0 = time.perf_counter()
-        state = eng.init_slots(self.num_slots)
+        state = eng.init_slots(self.num_slots, bank=self.bank)
         toks = jnp.zeros((1, cfg.text.max_len), jnp.int32)
         un = toks if state.uncond_context is not None else None
         state = eng.admit(state, 0, toks, jax.random.PRNGKey(0),
@@ -212,10 +262,17 @@ class ContinuousScheduler:
         import jax
 
         eng = self.engine
+        if self.bank is None:
+            for r in requests:
+                if r.policy_index != 0:
+                    raise ValueError(
+                        f"request {r.rid} carries policy_index="
+                        f"{r.policy_index} but the scheduler has no bank — "
+                        f"pass bank= to ContinuousScheduler")
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         ready: list = []
         owner: dict = {}
-        state = eng.init_slots(self.num_slots)
+        state = eng.init_slots(self.num_slots, bank=self.bank)
         completed = 0
         steps = 0
         step_wall = 0.0
@@ -232,7 +289,8 @@ class ContinuousScheduler:
                 req = ready.pop(0)
                 state = eng.admit(state, slot, req.tokens, None,
                                   uncond_tokens=req.uncond_tokens,
-                                  latents=req.latents)
+                                  latents=req.latents,
+                                  policy_index=req.policy_index)
                 owner[slot] = req
                 req.admitted_s = time.perf_counter() - t0
             if not owner:
@@ -264,9 +322,22 @@ class ContinuousScheduler:
             "iter_wall_ms": 1e3 * step_wall / max(steps, 1),
             "mean_occupancy": occupancy_rows / max(steps * self.num_slots,
                                                    1),
-            **_latency_metrics(requests, makespan),
+            **_latency_metrics(requests, makespan, bank=self.bank,
+                               default_steps=eng.cfg.ddim
+                               .num_inference_steps),
         }
-        if ledger:
+        if self.bank is not None:
+            metrics["bank"] = [p.describe() for p in self.bank]
+        if ledger and self.bank is not None:
+            from repro.diffusion.pipeline import (energy_report_banked,
+                                                  phase_breakdown_from_accum)
+
+            cfg = eng.cfg
+            rep = energy_report_banked(cfg, state.accum, self.bank)
+            metrics["energy"] = rep.summary()
+            metrics["phase_breakdown"] = phase_breakdown_from_accum(
+                cfg, state.accum, self.bank)
+        elif ledger:
             from repro.core import tips
             from repro.diffusion.pipeline import (energy_report_from_accum,
                                                   reuse_ratios_from_accum,
@@ -318,6 +389,12 @@ class FixedBatchScheduler:
         from repro.launch.serve_diffusion import micro_batches
 
         eng = self.engine
+        if any(r.policy_index != 0 for r in requests):
+            raise ValueError(
+                "FixedBatchScheduler cannot serve mixed quality tiers: a "
+                "micro-batch shares one scan executable, so rows cannot "
+                "carry different solvers/step budgets — use "
+                "ContinuousScheduler(bank=...) for tiered traces")
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         ready: list = []
         stats_per_batch = []

@@ -3,7 +3,17 @@
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
       [--kernels fused] [--tips adaptive] [--mesh 4] [--ledger] \
-      [--continuous --slots 4 --arrival-rate 2.0 --burst 2]
+      [--continuous --slots 4 --arrival-rate 2.0 --burst 2] \
+      [--solver dpm2m,steps=12] [--tiers draft balanced quality]
+
+Phase-aware sampling (DESIGN.md §10): ``--solver`` swaps the solver /
+step budget for every request (``SamplerPolicy`` spec: tier name, solver
+name, or ``dpm2m,steps=10,phases=detail_guard``); ``--tiers`` serves a
+MIXED quality-tier trace through the continuous scheduler — each request
+round-robins a bank entry, every tier coexists in the one jitted
+``slot_step`` via per-row coefficient gathers, and the ``--ledger``
+report becomes the per-policy banked breakdown with each tier normalized
+by its own step budget.
 
 Micro-batching: incoming prompts are queued and packed into fixed-size
 micro-batches (padding the tail with repeats), each served by ONE compiled
@@ -122,11 +132,16 @@ def micro_batches(requests, batch: int):
 
 
 def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
-          mesh=None) -> dict:
+          mesh=None, sampler_policy=None) -> dict:
     """Drain the request queue through the engine; return serving metrics.
 
     ``mesh``: optional ``jax.sharding.Mesh`` for data-parallel execution;
     the effective micro-batch is rounded up to a multiple of its dp size.
+
+    ``sampler_policy``: a ``solvers.SamplerPolicy`` applied to EVERY
+    request (micro-batches share one scan executable, so one policy per
+    run; mixed tiers need ``serve_continuous`` with a bank).  The energy
+    ledger then normalizes by the policy's own step budget.
     """
     import jax
     import jax.numpy as jnp
@@ -154,9 +169,11 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
     tail = n_requests % micro_batch
     compile_s = 0.0
     if n_requests >= micro_batch:
-        compile_s += eng.warmup(micro_batch, use_cfg)
+        compile_s += eng.warmup(micro_batch, use_cfg,
+                                sampler_policy=sampler_policy)
     if tail:
-        compile_s += eng.warmup(micro_batch, use_cfg, stats_rows=tail)
+        compile_s += eng.warmup(micro_batch, use_cfg, stats_rows=tail,
+                                sampler_policy=sampler_policy)
     batches = micro_batches(requests, micro_batch)
 
     images = 0
@@ -167,13 +184,15 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
         # a padded tail batch compiles its own stats_rows signature once
         rows = valid if valid < micro_batch else None
         out = eng.generate(toks, jax.random.fold_in(key, i),
-                           uncond_tokens=uncond, stats_rows=rows)
+                           uncond_tokens=uncond, stats_rows=rows,
+                           sampler_policy=sampler_policy)
         wall += eng.last_wall_s
         images += valid
         padded += micro_batch - valid
         stats_per_batch.append(out.stats)
 
-    steps = cfg.ddim.num_inference_steps
+    steps = (cfg.ddim.num_inference_steps if sampler_policy is None
+             else sampler_policy.num_steps)
     metrics = {
         "requests": int(requests.shape[0]),
         "kernel_policy": cfg.unet.effective_kernel_policy().describe(),
@@ -193,30 +212,37 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
         "imgs_per_s": images / max(wall, 1e-9),
         "iter_wall_ms": 1e3 * wall / max(len(batches) * steps, 1),
     }
+    if sampler_policy is not None:
+        metrics["sampler_policy"] = sampler_policy.describe()
     if ledger and stats_per_batch:
         # ONE host read per call of the scalar ledger leaves; per-row
         # leaves never leave the mesh (stats stay batch-sharded)
         fetched = [s.ledger_fetch() for s in stats_per_batch]
-        rep = energy_report_multi(cfg, fetched)
+        rep = energy_report_multi(cfg, fetched,
+                                  sampler_policy=sampler_policy)
         metrics["energy"] = {k: float(v) for k, v in rep.summary().items()}
-        ratios = aggregated_tips_ratios_per_iter(cfg, fetched)
-        # realized (not target) INT6 row fraction, per DDIM iteration —
-        # the number the active PrecisionPolicy actually delivered
-        metrics["tips_low_ratio_per_iter"] = [float(r) for r in ratios]
-        metrics["tips_workload_low_fraction"] = float(
-            tips.workload_low_precision_fraction(jnp.asarray(ratios),
-                                                 ddim=cfg.ddim))
-        # realized per-iteration temporal-reuse ratio (zeros when off)
-        metrics["reuse_ratio_per_iter"] = [
-            float(r) for r in
-            aggregated_reuse_ratios_per_iter(cfg, stats_per_batch)]
+        if steps == cfg.ddim.num_inference_steps:
+            # the per-iteration ratio extras index the CONFIG schedule;
+            # a policy with its own budget reports through the energy
+            # summary above (its TIPS window already step-scaled there)
+            ratios = aggregated_tips_ratios_per_iter(cfg, fetched)
+            # realized (not target) INT6 row fraction, per DDIM iteration
+            # — the number the active PrecisionPolicy actually delivered
+            metrics["tips_low_ratio_per_iter"] = [float(r) for r in ratios]
+            metrics["tips_workload_low_fraction"] = float(
+                tips.workload_low_precision_fraction(jnp.asarray(ratios),
+                                                     ddim=cfg.ddim))
+            # realized per-iteration temporal-reuse ratio (zeros when off)
+            metrics["reuse_ratio_per_iter"] = [
+                float(r) for r in
+                aggregated_reuse_ratios_per_iter(cfg, stats_per_batch)]
     return metrics
 
 
 def serve_continuous(cfg, num_requests: int, num_slots: int,
                      arrival_rate: float = 0.0, burst: int = 1,
                      key=None, ledger: bool = False, seed: int = 7,
-                     edit: bool = False) -> dict:
+                     edit: bool = False, bank=None) -> dict:
     """Serve a synthetic request trace through the continuous scheduler.
 
     ``arrival_rate`` is requests/second, arriving ``burst`` at a time
@@ -226,6 +252,11 @@ def serve_continuous(cfg, num_requests: int, num_slots: int,
     request class (``scheduler.make_edit_requests``): every request is
     the same base latent with a localized edit window — the workload
     ``--reuse temporal`` serves with most patch rows cached.
+
+    ``bank`` (tuple of ``solvers.SamplerPolicy``): mixed quality-tier
+    serving — requests cycle through the bank's tiers round-robin, all
+    inside one step executable, and the ``--ledger`` report becomes the
+    per-policy banked breakdown (``pipeline.energy_report_banked``).
     """
     import jax
 
@@ -236,12 +267,14 @@ def serve_continuous(cfg, num_requests: int, num_slots: int,
 
     key = key if key is not None else jax.random.PRNGKey(0)
     eng = DiffusionEngine(cfg, key=key)
-    make = make_edit_requests if edit else make_requests
-    requests = make(cfg, num_requests, seed=seed)
+    if edit:
+        requests = make_edit_requests(cfg, num_requests, seed=seed)
+    else:
+        requests = make_requests(cfg, num_requests, seed=seed, bank=bank)
     if arrival_rate > 0:
         gap = burst / arrival_rate
         apply_trace(requests, bursty_trace(num_requests, burst, gap))
-    sched = ContinuousScheduler(eng, num_slots)
+    sched = ContinuousScheduler(eng, num_slots, bank=bank)
     compile_s = sched.warmup()
     metrics = sched.run(requests, ledger=ledger)
     metrics.pop("state")
@@ -250,7 +283,8 @@ def serve_continuous(cfg, num_requests: int, num_slots: int,
         kernel_policy=cfg.unet.effective_kernel_policy().describe(),
         precision_policy=cfg.unet.effective_precision().describe(),
         reuse_policy=cfg.unet.reuse_policy.describe(),
-        steps_per_image=cfg.ddim.num_inference_steps,
+        steps_per_image=(cfg.ddim.num_inference_steps if bank is None
+                         else [p.num_steps for p in bank]),
         workload="edit" if edit else "t2i",
         arrival={"rate_per_s": arrival_rate, "burst": burst},
     )
@@ -286,6 +320,19 @@ def main():
                     help="temporal patch-reuse policy: 'off', 'temporal', "
                          "or overrides like 'temporal,threshold=0.1' "
                          "(see repro.core.reuse.ReusePolicy)")
+    ap.add_argument("--solver", default="",
+                    help="sampler policy for EVERY request: a tier name "
+                         "('draft'|'balanced'|'quality'), a solver "
+                         "('ddim'|'plms'|'dpm2m'), or overrides like "
+                         "'dpm2m,steps=10,phases=detail_guard' "
+                         "(see repro.diffusion.solvers.SamplerPolicy); "
+                         "empty = the config's DDIM schedule")
+    ap.add_argument("--tiers", nargs="+", default=None,
+                    help="mixed quality-tier serving bank for "
+                         "--continuous: one SamplerPolicy spec per tier "
+                         "(e.g. --tiers draft balanced quality); requests "
+                         "cycle through the tiers round-robin inside one "
+                         "step executable")
     ap.add_argument("--edit", action="store_true",
                     help="serve the img2img/editing request class (shared "
                          "base latent + localized per-request edits) — "
@@ -321,6 +368,16 @@ def main():
     if args.edit and not args.continuous:
         ap.error("--edit rides the slot scheduler's admit(latents=) path; "
                  "add --continuous")
+    if args.tiers and not args.continuous:
+        ap.error("--tiers is mixed-tier serving over the slot engine; "
+                 "add --continuous (micro-batches share one scan "
+                 "executable — use --solver for a single policy)")
+    if args.tiers and args.solver:
+        ap.error("--tiers and --solver are exclusive: a bank already "
+                 "names every policy in flight")
+    if args.tiers and args.edit:
+        ap.error("--edit traces share one base latent workload; tiered "
+                 "admission is t2i-only for now")
 
     if args.mesh > 1:
         # must run before the first jax backend init; only meaningful for
@@ -333,11 +390,20 @@ def main():
 
     from repro.launch.mesh import make_data_mesh
 
+    from repro.diffusion.solvers import SamplerPolicy, as_bank
+
     mesh = make_data_mesh(args.mesh) if args.mesh > 1 else None
     cfg = make_config(args)
+    sampler_policy = SamplerPolicy.parse(args.solver) if args.solver \
+        else None
+    bank = (as_bank(tuple(SamplerPolicy.parse(t) for t in args.tiers))
+            if args.tiers else None)
+    sampling = ("tiers " + "+".join(p.label() for p in bank) if bank
+                else sampler_policy.key() if sampler_policy
+                else f"ddim@{args.steps}")
     batching = (f"continuous slots={args.slots}" if args.continuous
                 else f"micro-batch {args.micro_batch}")
-    print(f"engine: latent {cfg.unet.latent_size}^2, {args.steps} steps, "
+    print(f"engine: latent {cfg.unet.latent_size}^2, sampling {sampling}, "
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
           f"{batching}, kernels {args.kernels}, "
@@ -345,14 +411,16 @@ def main():
           f"workload {'edit' if args.edit else 't2i'}, "
           f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
     if args.continuous:
+        if bank is None and sampler_policy is not None:
+            bank = (sampler_policy,)      # single-tier bank
         metrics = serve_continuous(cfg, args.requests, args.slots,
                                    arrival_rate=args.arrival_rate,
                                    burst=args.burst, ledger=args.ledger,
-                                   edit=args.edit)
+                                   edit=args.edit, bank=bank)
     else:
         reqs = synthetic_requests(cfg, args.requests)
         metrics = serve(cfg, reqs, args.micro_batch, ledger=args.ledger,
-                        mesh=mesh)
+                        mesh=mesh, sampler_policy=sampler_policy)
     print(json.dumps(metrics, indent=2))
 
 

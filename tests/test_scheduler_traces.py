@@ -25,6 +25,7 @@ import pytest
 
 from repro.diffusion.engine import DiffusionEngine
 from repro.diffusion.pipeline import PipelineConfig
+from repro.diffusion.solvers import SamplerPolicy, bank_max_steps
 from repro.launch.scheduler import (ContinuousScheduler, apply_trace,
                                     bursty_trace, make_edit_requests,
                                     make_requests)
@@ -103,6 +104,66 @@ def test_burst_larger_than_slot_count(cfg, eng):
     for i in (0, 1):
         np.testing.assert_array_equal(reqs[i].image, ref[i],
                                       err_msg=f"request {i}")
+
+
+def test_mixed_tier_trace_metrics_and_ledger(cfg, eng):
+    """Heterogeneous step budgets: per-tier percentile math, the
+    steps-normalized goodput, and ledger cleanliness when short-budget
+    rows retire early (their tail buckets must stay untouched)."""
+    bank = (SamplerPolicy.dpm2m(2, name="draft"),
+            SamplerPolicy.ddim(3, name="quality"))
+    sched = ContinuousScheduler(eng, num_slots=2, bank=bank)
+    reqs = make_requests(cfg, 4, seed=7, bank=bank)
+    m = sched.run(reqs, ledger=True)
+    state = m.pop("state")
+
+    assert all(r.image is not None for r in reqs)
+    # round-robin tiers: balanced populations, n=2 percentile math holds
+    assert m["per_tier"]["draft"]["requests"] == 2
+    assert m["per_tier"]["quality"]["requests"] == 2
+    for t in ("draft", "quality"):
+        lat = m["per_tier"][t]["latency_s"]
+        assert 0.0 <= lat["p50"] <= lat["p95"] <= lat["max"]
+    # steps-normalized goodput: total denoising steps / makespan
+    total_steps = sum(bank[r.policy_index].num_steps for r in reqs)
+    assert total_steps == 10
+    assert m["goodput_steps_per_s"] \
+        == pytest.approx(total_steps / m["makespan_s"])
+    assert [b["name"] for b in m["bank"]] == ["draft", "quality"]
+
+    # banked ledger: bucket p*N+i holds policy p's step-i row counts;
+    # the draft tier's early retirement leaves its step-2 bucket empty
+    n_max = bank_max_steps(bank)
+    rows = np.asarray(state.accum.rows)
+    assert rows.shape == (len(bank) * n_max,)
+    for p, pol in enumerate(bank):
+        seg = rows[p * n_max:(p + 1) * n_max]
+        assert list(seg[:pol.num_steps]) == [2] * pol.num_steps
+        assert not seg[pol.num_steps:].any()
+    assert rows.sum() == total_steps
+    # banked energy + phase breakdown rode along
+    assert m["energy"] and m["phase_breakdown"]
+
+
+def test_admit_after_retire_reuses_row_in_banked_state(cfg, eng):
+    """A freed slot row re-admitted mid-trace under a multistep solver:
+    the re-admission must reset the row's step counter and solver
+    history, so the second occupant's image is bit-identical to its own
+    one-shot run (same batch signature: B=1 oracle for 1 slot)."""
+    bank = (SamplerPolicy.plms(3, name="fast"),)
+    sched = ContinuousScheduler(eng, num_slots=1, bank=bank)
+    reqs = make_requests(cfg, 2, seed=8, bank=bank)
+    m = sched.run(reqs, ledger=False)
+    m.pop("state")
+    # both occupants of the single row, sequentially: 3 + 3 steps
+    assert m["engine_steps"] == 6
+    for r in reqs:
+        out = eng.generate(r.tokens, None,
+                           latents=jnp.array(r.latents),
+                           sampler_policy=bank[0], sampler_bank=bank)
+        np.testing.assert_array_equal(
+            r.image, np.asarray(jax.device_get(out.images[0])),
+            err_msg=f"request {r.rid} (row re-use leaked state)")
 
 
 def test_make_edit_requests_shape(cfg):

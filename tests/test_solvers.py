@@ -1,0 +1,240 @@
+"""SamplerPolicy runtime (repro.diffusion.solvers) — DESIGN.md §10.
+
+Pure-python coverage of the policy/bank/table layer (parsing, phase
+math, TIPS scheduling, coefficient tables) plus the two exactness
+contracts on the smoke engine:
+
+* a single-policy ``(ddim, cfg-steps)`` bank is bit-identical to the
+  policy-free legacy engine (one-shot), including a neutral phase
+  schedule (all scales 1.0, tips matching the legacy window);
+* a mixed-tier slot batch produces per-request images bit-identical to
+  one-shot runs of each request's own policy under the same bank AND
+  the same batch signature (request tiled to the slot count — the
+  structural-identity oracle: XLA specializes codegen per traced
+  program and batch size, so parity is defined at matching shapes).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import solvers
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import PipelineConfig
+from repro.diffusion.sampler import alphas_cumprod
+from repro.diffusion.solvers import (PLMS_WEIGHTS, SOLVER_ID, TIERS,
+                                     PhaseSchedule, SamplerPolicy, as_bank)
+from repro.launch.scheduler import ContinuousScheduler, make_requests
+
+
+# ----------------------------------------------------------------------------
+# policy / schedule parsing and identity
+# ----------------------------------------------------------------------------
+def test_policy_parse_round_trips():
+    assert SamplerPolicy.parse("draft") == TIERS["draft"]
+    assert SamplerPolicy.parse("balanced").num_steps == 12
+    # a bare solver keeps the default budget (tiers carry their own)
+    assert SamplerPolicy.parse("dpm2m") == SamplerPolicy.dpm2m(25)
+    p = SamplerPolicy.parse("dpm2m,steps=10,phases=detail_guard")
+    assert (p.solver, p.num_steps) == ("dpm2m", 10)
+    assert p.phases == PhaseSchedule.detail_guard()
+    p = SamplerPolicy.parse("solver=plms,steps=6,name=fast")
+    assert (p.solver, p.num_steps, p.name) == ("plms", 6, "fast")
+    # ';' separates phase-schedule items inside the policy spec
+    p = SamplerPolicy.parse("ddim,phases=boundaries=0.3:0.6;pssa=2:2:1")
+    assert p.phases.boundaries == (0.3, 0.6)
+    assert p.phases.pssa_scale == (2.0, 2.0, 1.0)
+
+
+def test_policy_validation_errors():
+    with pytest.raises(ValueError, match="solver"):
+        SamplerPolicy(solver="euler")
+    with pytest.raises(ValueError, match="num_steps"):
+        SamplerPolicy(num_steps=0)
+    with pytest.raises(ValueError, match="tier"):
+        SamplerPolicy.tier("ultra")
+    with pytest.raises(ValueError, match="unknown key"):
+        SamplerPolicy.parse("ddim,foo=1")
+    with pytest.raises(ValueError, match="empty"):
+        as_bank(())
+    with pytest.raises(TypeError, match="SamplerPolicy"):
+        as_bank(("ddim",))
+
+
+def test_policy_name_excluded_from_identity():
+    a = SamplerPolicy.dpm2m(8, name="draft")
+    b = SamplerPolicy.dpm2m(8, name="renamed")
+    assert a == b and hash(a) == hash(b)
+    assert a.label() == "draft" and a.key() == "dpm2m-8"
+
+
+def test_phase_schedule_parse_and_phase_of():
+    ph = PhaseSchedule.parse("boundaries=0.3:0.6,tips=on:on:off,pssa=2:2:1")
+    assert ph.boundaries == (0.3, 0.6)
+    assert ph.tips_on == (True, True, False)
+    assert ph.schedules_pssa and not ph.schedules_reuse
+    assert not PhaseSchedule().schedules_pssa
+    # ceil-based phase boundaries: 3 steps at (0.3, 0.6) -> one per phase
+    assert [ph.phase_of(i, 3) for i in range(3)] == [0, 1, 2]
+    # default (0.4, 0.8) over 25 steps: 10 / 10 / 5
+    d = PhaseSchedule()
+    counts = [0, 0, 0]
+    for i in range(25):
+        counts[d.phase_of(i, 25)] += 1
+    assert counts == [10, 10, 5]
+    with pytest.raises(ValueError, match="boundaries"):
+        PhaseSchedule(boundaries=(0.8, 0.4))
+    with pytest.raises(ValueError, match="> 0"):
+        PhaseSchedule(pssa_scale=(1.0, 0.0, 1.0))
+
+
+def test_tips_active_schedule(cfg):
+    ddim_cfg = cfg.ddim
+    # budget == config steps: EXACTLY the legacy i < tips_active_iters
+    legacy = tuple(i < ddim_cfg.tips_active_iters
+                   for i in range(ddim_cfg.num_inference_steps))
+    pol = SamplerPolicy.ddim(ddim_cfg.num_inference_steps)
+    assert solvers.tips_active_schedule(pol, ddim_cfg) == legacy
+    # other budgets scale the operating point (never fully off)
+    sched = solvers.tips_active_schedule(SamplerPolicy.dpm2m(6), ddim_cfg)
+    assert len(sched) == 6 and sched[0] and not sched[-1]
+    assert sum(sched) == max(1, 6 * ddim_cfg.tips_active_iters
+                             // ddim_cfg.num_inference_steps)
+    # phases override the window entirely
+    ph = PhaseSchedule(boundaries=(0.3, 0.6), tips_on=(False, True, False))
+    sched = solvers.tips_active_schedule(
+        SamplerPolicy.ddim(3, phases=ph), ddim_cfg)
+    assert sched == (False, True, False)
+
+
+def test_bank_views():
+    bank = as_bank((SamplerPolicy.ddim(3), SamplerPolicy.dpm2m(4),
+                    SamplerPolicy.plms(2)))
+    assert solvers.bank_max_steps(bank) == 4
+    assert solvers.bank_history(bank) == 3        # plms worst case
+    # single policy normalizes to a 1-bank
+    assert as_bank(SamplerPolicy.ddim(3)) == (SamplerPolicy.ddim(3),)
+    # unscheduled bank: no override lanes live
+    assert solvers.bank_schedules(bank) == (False, False, False)
+    guarded = as_bank((SamplerPolicy.ddim(
+        3, phases=PhaseSchedule.detail_guard()),))
+    assert solvers.bank_schedules(guarded) == (True, False, True)
+
+
+def test_plms_weights_are_adams_bashforth():
+    # every warmup order integrates a constant exactly: weights sum to 1
+    for row in PLMS_WEIGHTS:
+        assert abs(sum(row) - 1.0) < 1e-12
+
+
+def test_solver_tables_ddim_columns(cfg):
+    ddim_cfg = cfg.ddim
+    bank = (SamplerPolicy.ddim(3), SamplerPolicy.dpm2m(2))
+    tab = solvers.solver_tables(bank, ddim_cfg)
+    n_max = solvers.bank_max_steps(bank)
+    assert tab.t.shape == (2, n_max)
+    acp = np.asarray(alphas_cumprod(ddim_cfg))
+    # row 0: the legacy descending timestep ladder + its acp gathers
+    step = ddim_cfg.num_train_steps // 3
+    ts = np.arange(2, -1, -1) * step
+    assert np.array_equal(np.asarray(tab.t[0]), ts)
+    assert np.array_equal(np.asarray(tab.a_t[0]), acp[ts])
+    # final boundary lands on alpha_prev = 1.0 (t_prev < 0)
+    assert float(tab.a_prev[0, 2]) == 1.0
+    # short-budget rows pad by repeating the final step (never read:
+    # per-row step indices are clipped to the row's budget)
+    assert float(tab.t[1, 1]) == float(tab.t[1, 2])
+    assert np.array_equal(np.asarray(tab.budget), [3, 2])
+    assert np.array_equal(np.asarray(tab.solver),
+                          [SOLVER_ID["ddim"], SOLVER_ID["dpm2m"]])
+    # tips column mirrors tips_active_schedule per row
+    want = solvers.tips_active_schedule(bank[0], ddim_cfg)
+    assert tuple(bool(v) for v in np.asarray(tab.tips[0, :3])) == want
+
+
+# ----------------------------------------------------------------------------
+# engine exactness contracts (smoke geometry, 3 steps)
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cfg():
+    return PipelineConfig.smoke()
+
+
+@pytest.fixture(scope="module")
+def eng(cfg):
+    return DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def legacy_out(eng, cfg):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.text.max_len),
+                              0, cfg.text.vocab_size)
+    lat = np.asarray(eng.init_latents(2, jax.random.PRNGKey(2)))
+    out = eng.generate(toks, None, latents=jnp.array(lat))
+    return toks, lat, np.asarray(out.images)
+
+
+def test_single_policy_ddim_bank_matches_legacy(eng, cfg, legacy_out):
+    toks, lat, legacy_images = legacy_out
+    pol = SamplerPolicy.ddim(cfg.ddim.num_inference_steps)
+    out = eng.generate(toks, None, latents=jnp.array(lat),
+                       sampler_policy=pol)
+    assert np.array_equal(legacy_images, np.asarray(out.images))
+
+
+def test_neutral_phase_schedule_matches_legacy(eng, cfg, legacy_out):
+    toks, lat, legacy_images = legacy_out
+    # one step per phase; tips_on reproducing the legacy 2-of-3 window;
+    # all threshold scales 1.0 -> no override lane goes live, and the
+    # banked trace must reproduce the legacy program bit-for-bit
+    assert cfg.ddim.num_inference_steps == 3
+    assert cfg.ddim.tips_active_iters == 2
+    ph = PhaseSchedule(boundaries=(0.3, 0.6), tips_on=(True, True, False))
+    pol = SamplerPolicy.ddim(3, phases=ph)
+    out = eng.generate(toks, None, latents=jnp.array(lat),
+                       sampler_policy=pol)
+    assert np.array_equal(legacy_images, np.asarray(out.images))
+
+
+def test_generate_rejects_policy_outside_bank(eng, cfg):
+    toks = jnp.zeros((1, cfg.text.max_len), jnp.int32)
+    with pytest.raises(ValueError, match="bank"):
+        eng.generate(toks, jax.random.PRNGKey(0),
+                     sampler_policy=SamplerPolicy.ddim(3),
+                     sampler_bank=(SamplerPolicy.dpm2m(2),))
+
+
+def test_mixed_bank_slot_trace_bit_identical(eng, cfg):
+    num_slots = 2
+    bank = (SamplerPolicy.ddim(3, name="quality"),
+            SamplerPolicy.dpm2m(4, name="draft"))
+    reqs = make_requests(cfg, 3, seed=5, bank=bank)
+    sched = ContinuousScheduler(eng, num_slots=num_slots, bank=bank)
+    metrics = sched.run(reqs, ledger=True)
+    state = metrics.pop("state")
+
+    for r in reqs:
+        pol = bank[r.policy_index]
+        # the §10 oracle: one-shot under the SAME bank, policy_id a
+        # runtime operand, request tiled to the slot-batch signature
+        out = eng.generate(jnp.tile(r.tokens, (num_slots, 1)), None,
+                           latents=jnp.tile(jnp.array(r.latents),
+                                            (num_slots, 1, 1, 1)),
+                           sampler_policy=pol, sampler_bank=bank)
+        assert np.array_equal(r.image, np.asarray(out.images[0])), \
+            f"request {r.rid} ({pol.key()}) diverged from its one-shot run"
+
+    # banked ledger: bucket p*N+i holds policy p's step-i counters; a
+    # short-budget policy leaves its tail buckets untouched
+    n_max = solvers.bank_max_steps(bank)
+    rows = np.asarray(state.accum.rows)
+    assert rows.shape == (len(bank) * n_max,)
+    per_policy = [sum(r.policy_index == p for r in reqs)
+                  for p in range(len(bank))]
+    for p, pol in enumerate(bank):
+        seg = rows[p * n_max:(p + 1) * n_max]
+        assert list(seg[:pol.num_steps]) == [per_policy[p]] * pol.num_steps
+        assert not seg[pol.num_steps:].any()
+    assert rows.sum() == sum(bank[r.policy_index].num_steps for r in reqs)

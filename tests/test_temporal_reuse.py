@@ -98,6 +98,27 @@ class TestPolicy:
         with pytest.raises(ValueError, match="capacity"):
             DiffusionEngine(cfg, reuse_policy=ReusePolicy.edit())
 
+    def test_window_patch_mask(self):
+        from repro.core.reuse import window_patch_mask
+        # full-frame window: every patch active at every resolution
+        assert all(window_patch_mask((0, 0, 8, 8), 8, 4, 8))
+        assert all(window_patch_mask((0, 0, 8, 8), 4, 4, 8))
+        # a 2x2 window in an 8x8 latent at resolution 8, patch=4 tokens
+        # (half-row patches): rows 2-3 touch patches 4..7 -> exactly the
+        # two left-half patches of those rows are active
+        mask = window_patch_mask((2, 0, 2, 2), 8, 4, 8)
+        assert len(mask) == 16
+        assert [i for i, a in enumerate(mask) if a] == [4, 6]
+        # downscaled resolution rounds the window OUTWARD (conservative:
+        # boundary tokens always covered, never missed)
+        # (2,2,3,3) in 8px spans rows [1, 2.5) at res 4 -> rows 1-2 of
+        # the 4 row-patches active, first and last rows untouched
+        lo = window_patch_mask((2, 2, 3, 3), 4, 4, 8)
+        assert lo == (False, True, True, False)
+        # a priori mask is a static tuple of python bools (trace-time
+        # constant — what lets the edit engine skip the delta kernel)
+        assert all(isinstance(a, bool) for a in mask)
+
 
 # ---------------------------------------------------------------------------
 # Kernel parity
