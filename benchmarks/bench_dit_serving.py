@@ -1,0 +1,157 @@
+"""BENCH — DiT serving: UNet-vs-DiT throughput + energy behind one contract.
+
+The denoiser contract (DESIGN.md §11) makes the model family a config
+choice: the DiT denoiser serves through the SAME engine, kernel dispatch
+table, quality tiers and banked integer ledger as the UNet.  This bench
+pins that claim with numbers:
+
+  * UNet-vs-DiT imgs/s and modeled mJ/image at MATCHED parameter count —
+    the DiT depth is chosen (via ``abstract_params``, no allocation) so
+    its smoke geometry lands closest to the UNet smoke parameter count,
+    making the throughput/energy comparison a family comparison rather
+    than a size comparison;
+  * ``dit_counters_bit_identical`` — the DiT PSSA/TIPS integer counters
+    are bit-identical across ``reference`` and ``fused`` kernel routing
+    (the same §4/§5 contract the UNet carries);
+  * ``dit_banked_ledger_bit_identical`` — a mixed-tier DiT slot trace
+    produces a bit-identical banked energy summary across slot counts
+    {2, 4} (occupancy-invariant integer accumulation, §8/§10 on the new
+    family).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+STEPS = 5
+N_REQUESTS = 4
+DIT_DEPTH_SWEEP = range(1, 17)
+
+
+def _param_count(den) -> int:
+    import jax
+    return int(sum(np.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(den.abstract_params())))
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.diffusion import solvers
+    from repro.diffusion.denoiser import make_denoiser
+    from repro.diffusion.dit import DiTConfig
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.diffusion.pipeline import PipelineConfig, energy_report
+    from repro.diffusion.sampler import DDIMConfig
+    from repro.kernels.dispatch import KernelPolicy
+    from repro.launch.scheduler import ContinuousScheduler, make_requests
+
+    base = PipelineConfig.smoke()
+    ddim = DDIMConfig(num_inference_steps=STEPS, guidance_scale=1.0,
+                      tips_active_iters=max(1, STEPS * 20 // 25))
+
+    # ---- match DiT size to the UNet smoke parameter count ----
+    unet_params = _param_count(make_denoiser(base.unet))
+    dit_smoke = DiTConfig().smoke()
+    depth = min(DIT_DEPTH_SWEEP, key=lambda d: abs(
+        _param_count(make_denoiser(
+            dataclasses.replace(dit_smoke, depth=d))) - unet_params))
+    dit_cfg = dataclasses.replace(dit_smoke, depth=depth)
+
+    model_cfgs = {"unet": base.unet, "dit": dit_cfg}
+    families: dict = {}
+    engines: dict = {}
+    for fam, mcfg in model_cfgs.items():
+        cfg = dataclasses.replace(base, unet=mcfg, ddim=ddim)
+        eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+        engines[fam] = (cfg, eng)
+        toks = jax.random.randint(jax.random.PRNGKey(1),
+                                  (2, cfg.text.max_len), 0,
+                                  cfg.text.vocab_size)
+        lat0 = np.asarray(eng.init_latents(2, jax.random.PRNGKey(2)))
+        out = eng.generate(toks, None, latents=jnp.asarray(lat0))
+        # min-of-3 on the compiled executable (see bench_phase_sampling)
+        wall = min(
+            (eng.generate(toks, None, latents=jnp.asarray(lat0)),
+             eng.last_wall_s)[1] for _ in range(3))
+        rep = energy_report(cfg, out.stats)
+        families[fam] = {
+            "params": _param_count(eng.denoiser),
+            "latent": mcfg.latent_size,
+            "attn_layers": len(eng.denoiser.layer_order()),
+            "wall_s": wall,
+            "imgs_per_s": 2.0 / max(wall, 1e-9),
+            "energy": {
+                "mj_per_iter_with_ema": rep.mj_per_iter_with_ema,
+                "mj_per_image": rep.mj_per_iter_with_ema * STEPS,
+            },
+        }
+    families["dit"]["depth_matched"] = depth
+
+    # ---- contract: DiT counters bit-identical across kernel routing ----
+    counters = {}
+    for routing in ("reference", "fused"):
+        cfg = dataclasses.replace(
+            base, ddim=ddim, unet=dataclasses.replace(
+                dit_cfg, kernel_policy=getattr(KernelPolicy, routing)()))
+        eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(3),
+                                  (1, cfg.text.max_len), 0,
+                                  cfg.text.vocab_size)
+        out = eng.generate(toks, jax.random.PRNGKey(4))
+        # the contract leaf set (tests/test_denoiser_contract.py): all
+        # PSSAStats fields + folded TIPS low_precision_ratio; raw cas
+        # floats are fp-tolerance-only across the blocked softmax
+        counters[routing] = (
+            [np.asarray(x) for p in out.stats.pssa for x in p]
+            + [np.asarray(t.low_precision_ratio) for t in out.stats.tips])
+    dit_counters_bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(counters["reference"], counters["fused"]))
+
+    # ---- contract: banked DiT ledger bit-identical across slot counts ----
+    dit_pipe, dit_eng = engines["dit"]
+    bank = (solvers.SamplerPolicy(solver="dpm2m", num_steps=4,
+                                  name="draft"),
+            solvers.SamplerPolicy(solver="ddim", num_steps=STEPS,
+                                  name="quality"))
+    energies = {}
+    compile_s = 0.0
+    for slots in (2, 4):
+        sched = ContinuousScheduler(dit_eng, num_slots=slots, bank=bank)
+        compile_s += sched.warmup()
+        m = sched.run(make_requests(dit_pipe, N_REQUESTS, seed=11,
+                                    bank=bank), ledger=True)
+        m.pop("state")
+        energies[slots] = m["energy"]
+    dit_banked_ledger_bit_identical = (energies[2] == energies[4])
+
+    return {
+        "config": {"steps": STEPS, "requests": N_REQUESTS,
+                   "bank": [p.describe() for p in bank]},
+        "compile_s": compile_s,
+        "families": families,
+        "comparison": {
+            "param_ratio_dit_over_unet": (families["dit"]["params"]
+                                          / families["unet"]["params"]),
+            "imgs_per_s_ratio_dit_over_unet": (
+                families["dit"]["imgs_per_s"]
+                / families["unet"]["imgs_per_s"]),
+            "mj_per_image_dit_over_unet": (
+                families["dit"]["energy"]["mj_per_image"]
+                / families["unet"]["energy"]["mj_per_image"]),
+        },
+        "banked_ledger": {"energy": energies[2]},
+        "dit_counters_bit_identical": bool(dit_counters_bit_identical),
+        "dit_banked_ledger_bit_identical": bool(
+            dit_banked_ledger_bit_identical),
+        "meets_target": bool(dit_counters_bit_identical
+                             and dit_banked_ledger_bit_identical),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

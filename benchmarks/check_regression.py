@@ -50,7 +50,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 DEFAULT_BENCHES = ("ema_breakdown", "pssa", "tips", "dbsc", "energy_iter",
                    "engine", "fused_attention", "fused_cross_attention",
                    "sharded_engine", "continuous_serving", "temporal_reuse",
-                   "phase_sampling")
+                   "phase_sampling", "dit_serving")
 
 _WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
                  "goodput", "makespan", "scaling", "efficiency",

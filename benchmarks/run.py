@@ -35,6 +35,7 @@ BENCHES = {
     "continuous_serving": "benchmarks.bench_continuous_serving",
     "temporal_reuse": "benchmarks.bench_temporal_reuse",
     "phase_sampling": "benchmarks.bench_phase_sampling",
+    "dit_serving": "benchmarks.bench_dit_serving",
     "roofline": "benchmarks.roofline",
 }
 

@@ -11,7 +11,7 @@ scanned sampler, fused-CFG batched UNet, stacked stats pytree); pass
 same ledger.
 
 Run:  PYTHONPATH=src python examples/generate_image.py [--steps 5]
-          [--solver dpm2m,steps=12] [--solver balanced]
+          [--model unet|dit] [--solver dpm2m,steps=12] [--solver balanced]
 """
 import argparse
 import dataclasses
@@ -31,6 +31,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=5,
                     help="DDIM iterations (paper: 25; CPU demo default 5)")
+    ap.add_argument("--model", choices=("unet", "dit"), default="unet",
+                    help="denoiser family (DESIGN.md §11): BK-SDM UNet "
+                         "(default) or DiT-S/2; both run through the same "
+                         "engine, kernels and energy ledger")
     ap.add_argument("--guidance", type=float, default=1.0)
     ap.add_argument("--python-loop", action="store_true",
                     help="seed-style per-step dispatch instead of the "
@@ -64,6 +68,9 @@ def main():
         if "steps=" not in args.solver and args.solver not in TIERS:
             policy = dataclasses.replace(policy, num_steps=args.steps)
     cfg = PipelineConfig.smoke()
+    if args.model == "dit":
+        from repro.diffusion.dit import DiTConfig
+        cfg = dataclasses.replace(cfg, unet=DiTConfig().smoke())
     cfg = dataclasses.replace(
         cfg,
         unet=dataclasses.replace(cfg.unet,
@@ -78,7 +85,7 @@ def main():
     sampler_desc = (f"{policy.solver} x{policy.num_steps}"
                     + (" (phased)" if policy.phases else "")
                     if policy is not None else f"ddim x{args.steps}")
-    print(f"pipeline: latent {cfg.unet.latent_size}^2, "
+    print(f"pipeline: model {args.model}, latent {cfg.unet.latent_size}^2, "
           f"sampler {sampler_desc}, guidance {args.guidance}, "
           f"{'python loop' if args.python_loop else 'jitted engine'}, "
           f"kernels {args.kernels}, tips {args.tips}")
@@ -110,7 +117,9 @@ def main():
     print("saved /tmp/generated_image.npy")
 
     rep = energy_report(cfg, stats, sampler_policy=policy)
-    print("\nfull-geometry (BK-SDM-Tiny) energy ledger:")
+    geometry = "BK-SDM-Tiny" if args.model == "unet" else "DiT-S/2"
+    print(f"\nfull-geometry ({geometry}, family={args.model}) "
+          f"energy ledger:")
     for k, v in rep.summary().items():
         print(f"  {k:42s} {v:10.4f}")
     if policy is not None:

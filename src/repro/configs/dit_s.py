@@ -1,0 +1,41 @@
+"""DiT-S/2 text-conditioned diffusion-transformer pipeline presets.
+
+The second denoiser family behind the denoiser contract (DESIGN.md §11):
+patchify -> 12 transformer blocks with adaLN timestep conditioning ->
+unpatchify.  The transformer blocks are the SAME ``_transformer_block``
+the UNet uses, so PSSA sparsity augmentation, TIPS text-based mixed
+precision, DBSC and temporal patch reuse apply unchanged — these presets
+mirror ``configs.bk_sdm`` with the UNet geometry swapped for
+``repro.diffusion.dit.DiTConfig``.
+"""
+import dataclasses
+
+from repro.configs.bk_sdm import with_kernel_policy, with_precision
+from repro.core.precision import PrecisionPolicy
+from repro.diffusion.dit import DiTConfig
+from repro.diffusion.pipeline import PipelineConfig
+from repro.diffusion.sampler import DDIMConfig
+from repro.diffusion.text_encoder import TextEncoderConfig
+from repro.diffusion.vae import VAEConfig
+from repro.kernels.dispatch import KernelPolicy
+
+CONFIG = PipelineConfig(
+    unet=DiTConfig(),             # DiT-S/2 geometry (full): 12 x d=384
+    text=TextEncoderConfig(),     # CLIP ViT-L/14 text tower geometry
+    vae=VAEConfig(),
+    ddim=DDIMConfig(num_inference_steps=25),
+)
+
+# reduced geometry that runs a full fwd pass on CPU in seconds
+SMOKE = dataclasses.replace(PipelineConfig.smoke(),
+                            unet=DiTConfig().smoke())
+
+# Serving path: blocked Pallas attention (self + cross) + PSXU kernel —
+# identical kernel routing semantics to the UNet presets.
+FUSED = with_kernel_policy(CONFIG, KernelPolicy.fused())
+SMOKE_FUSED = with_kernel_policy(SMOKE, KernelPolicy.fused())
+
+# Paper operating point for the precision runtime (see configs.bk_sdm).
+ADAPTIVE = with_precision(CONFIG, PrecisionPolicy.adaptive())
+PAPER_PRECISION = with_precision(
+    CONFIG, PrecisionPolicy(spotting="fixed", ffn_mid=True))

@@ -257,10 +257,15 @@ def window_patch_mask(window, resolution: int, patch: int,
 def layer_channels(cfg, resolution: int) -> int:
     """Channel width of the transformer block at ``resolution``.
 
+    A config with a ``channels_at`` hook (every registered denoiser
+    family) is the source of truth; the fallback is the UNet rule —
     ``unet_forward`` visits resolution ``latent_size >> i`` with
     ``block_channels[i]`` on the way down and revisits the same width on
     the way up, so the resolution determines the stage index.
     """
+    ch_fn = getattr(cfg, "channels_at", None)
+    if callable(ch_fn):
+        return ch_fn(resolution)
     stage = (cfg.latent_size // resolution).bit_length() - 1
     return cfg.block_channels[stage]
 

@@ -40,11 +40,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.reuse import ReuseCache, reuse_cache_zeros
 from repro.diffusion import solvers as solvers_mod
+from repro.diffusion.denoiser import make_denoiser
 from repro.diffusion.sampler import (denoise_step, sample_scan,
                                      sample_scan_reuse)
 from repro.diffusion.stats import LedgerAccum, attn_layer_order
 from repro.diffusion.text_encoder import encode_text, init_text_encoder_params
-from repro.diffusion.unet import init_unet_params, unet_forward
 from repro.diffusion.vae import decode, init_vae_params
 from repro.launch.mesh import dp_axes_of, dp_size_of, mesh_signature
 
@@ -176,8 +176,13 @@ class DiffusionEngine:
         k1, k2, k3 = jax.random.split(key, 3)
         assert cfg.text.d_model == cfg.unet.context_dim, \
             (cfg.text.d_model, cfg.unet.context_dim)
+        # the denoiser contract resolves cfg.unet (ANY registered family
+        # config — UNet or DiT) to its forward/init; everything below this
+        # line is model-agnostic.  The attribute keeps its historical name:
+        # it is the denoiser's parameter pytree, whichever family owns it.
+        self.denoiser = make_denoiser(cfg.unet)
         self.text_params = init_text_encoder_params(k1, cfg.text)
-        self.unet_params = init_unet_params(k2, cfg.unet)
+        self.unet_params = self.denoiser.init_params(k2)
         self.vae_params = init_vae_params(k3, cfg.vae)
         # jitted executables keyed by (batch, use_cfg, stats_rows, mesh
         # signature); geometry is fixed per engine so the signature is the
@@ -232,8 +237,8 @@ class DiffusionEngine:
                   if uncond_tokens is not None else None)
 
         def unet_apply(lat, tvec, ctx, active, **kw):
-            return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
-                                tips_active=active, **kw)
+            return self.denoiser.apply(self.unet_params, lat, tvec, ctx,
+                                       tips_active=active, **kw)
 
         if cfg.unet.reuse_policy.enabled:
             cache = reuse_cache_zeros(cfg.unet, latents.shape[0],
@@ -263,6 +268,10 @@ class DiffusionEngine:
         self.cfg = dataclasses.replace(
             self.cfg, unet=dataclasses.replace(self.cfg.unet,
                                                precision=policy))
+        # the frozen handle closes over its config — rebuild it so the
+        # retrace actually traces the new policy (params are unaffected:
+        # precision never changes parameter shapes)
+        self.denoiser = make_denoiser(self.cfg.unet)
         return self
 
     def _get_compiled(self, batch: int, use_cfg: bool,
@@ -542,8 +551,8 @@ class DiffusionEngine:
         cfg = self.cfg
 
         def unet_apply(lat, tvec, ctx, act, **kw):
-            return unet_forward(self.unet_params, lat, tvec, ctx, cfg.unet,
-                                tips_active=act, **kw)
+            return self.denoiser.apply(self.unet_params, lat, tvec, ctx,
+                                       tips_active=act, **kw)
 
         if state.bank is not None:
             lat, stats, new_cache, new_hist = denoise_step(

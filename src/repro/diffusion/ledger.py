@@ -205,15 +205,57 @@ def unet_ledger(cfg: UNetConfig,
     return entries
 
 
-def iteration_report(cfg: UNetConfig,
+def dit_ledger(cfg, opts: LedgerOptions = LedgerOptions()) -> list:
+    """All LayerTraffic entries of ONE DiT iteration (full geometry).
+
+    ``cfg`` is a ``repro.diffusion.dit.DiTConfig``.  Patch embedding and
+    the final projection are the only non-transformer stages; every block
+    reuses ``_transformer_traffic`` at the (single) token resolution, so
+    the SAS/CAS/FFN accounting — and the measured-ratio injection points —
+    are IDENTICAL to the UNet's transformer stages.
+    """
+    b = opts.batch
+    g = cfg.latent_size // cfg.patch
+    d = cfg.hidden_size
+    t = g * g * b
+    pe = cfg.patch * cfg.patch * cfg.in_channels
+    po = cfg.patch * cfg.patch * cfg.out_channels
+    entries = [LayerTraffic(
+        name="patch_embed", stage="cnn",
+        weight_bytes=pe * d * WEIGHT_BYTES,
+        act_in_bytes=cfg.latent_size ** 2 * cfg.in_channels * b * ACT_BYTES,
+        act_out_bytes=t * d * ACT_BYTES,
+        macs_high=t * pe * d)]
+    for i in range(cfg.depth):
+        entries.extend(_transformer_traffic(f"block{i}", g, d, cfg, opts))
+    entries.append(LayerTraffic(
+        name="final_layer", stage="cnn",
+        weight_bytes=d * po * WEIGHT_BYTES,
+        act_in_bytes=t * d * ACT_BYTES,
+        act_out_bytes=cfg.latent_size ** 2 * cfg.out_channels * b * ACT_BYTES,
+        macs_high=t * d * po))
+    return entries
+
+
+def denoiser_ledger(cfg, opts: LedgerOptions = LedgerOptions()) -> list:
+    """Dispatch to the family's per-iteration ledger (denoiser contract)."""
+    if isinstance(cfg, UNetConfig):
+        return unet_ledger(cfg, opts)
+    from repro.diffusion.dit import DiTConfig
+    if isinstance(cfg, DiTConfig):
+        return dit_ledger(cfg, opts)
+    raise TypeError(f"no ledger for config type {type(cfg).__name__}")
+
+
+def iteration_report(cfg,
                      opts: LedgerOptions = LedgerOptions()) -> EnergyReport:
-    return report(unet_ledger(cfg, opts))
+    return report(denoiser_ledger(cfg, opts))
 
 
-def generation_report(cfg: UNetConfig, per_iter_opts: Iterable[LedgerOptions]
+def generation_report(cfg, per_iter_opts: Iterable[LedgerOptions]
                       ) -> EnergyReport:
-    """Whole text-to-image run: one UNet ledger per denoising iteration."""
+    """Whole text-to-image run: one denoiser ledger per iteration."""
     entries = []
     for opts in per_iter_opts:
-        entries.extend(unet_ledger(cfg, opts))
+        entries.extend(denoiser_ledger(cfg, opts))
     return report(entries)

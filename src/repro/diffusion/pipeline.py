@@ -23,10 +23,11 @@ from repro.diffusion import solvers as solvers_mod
 from repro.diffusion.sampler import DDIMConfig, sample
 from repro.diffusion.stats import (UNetStats, attn_layer_order,
                                    coerce_per_step_stats)
+from repro.diffusion.denoiser import make_denoiser
 from repro.diffusion.text_encoder import (TextEncoderConfig,
                                           encode_text,
                                           init_text_encoder_params)
-from repro.diffusion.unet import UNetConfig, init_unet_params, unet_forward
+from repro.diffusion.unet import UNetConfig
 from repro.diffusion.vae import VAEConfig, decode, init_vae_params
 
 
@@ -48,6 +49,10 @@ def _iter_layer_stats(stats_one_iter, kind: str):
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
+    # ``unet`` holds the DENOISER config — any registered family
+    # (``UNetConfig`` or ``dit.DiTConfig``); the field keeps its
+    # historical name because every consumer reads policies/geometry
+    # through it and both families expose the same contract hooks.
     unet: UNetConfig = UNetConfig()
     text: TextEncoderConfig = TextEncoderConfig()
     vae: VAEConfig = VAEConfig()
@@ -82,15 +87,16 @@ class StableDiffusionPipeline:
         # context width must match: text d_model == unet context_dim
         assert cfg.text.d_model == cfg.unet.context_dim, \
             (cfg.text.d_model, cfg.unet.context_dim)
+        self.denoiser = make_denoiser(cfg.unet)
         self.text_params = init_text_encoder_params(k1, cfg.text)
-        self.unet_params = init_unet_params(k2, cfg.unet)
+        self.unet_params = self.denoiser.init_params(k2)
         self.vae_params = init_vae_params(k3, cfg.vae)
 
         self._encode = jax.jit(
             lambda toks: encode_text(self.text_params, toks, cfg.text))
         self._unet = jax.jit(
-            lambda lat, t, ctx, act: unet_forward(
-                self.unet_params, lat, t, ctx, cfg.unet, tips_active=act))
+            lambda lat, t, ctx, act: self.denoiser.apply(
+                self.unet_params, lat, t, ctx, tips_active=act))
         self._decode = jax.jit(
             lambda lat: decode(self.vae_params, lat, cfg.vae))
 
@@ -274,11 +280,20 @@ def _report_from_terms(cfg: "PipelineConfig", per_iter_terms,
     if len(per_iter_terms) != n:
         raise ValueError(
             f"{len(per_iter_terms)} iteration terms, schedule says {n}")
-    geom = UNetConfig() if full_geometry else cfg.unet
+    # contract hooks: full_geometry() is the family's analytic-ledger
+    # extrapolation target, attn_resolutions() its measured-ratio remap
+    # keys; the fallbacks reproduce the UNet formulas for plain configs
+    if full_geometry:
+        geom_fn = getattr(cfg.unet, "full_geometry", None)
+        geom = geom_fn() if callable(geom_fn) else UNetConfig()
+    else:
+        geom = cfg.unet
     precision = cfg.unet.effective_precision()
-    geom_res = sorted({geom.latent_size >> s
-                       for s, a in enumerate(geom.down_attn) if a},
-                      reverse=True)
+    res_fn = getattr(geom, "attn_resolutions", None)
+    geom_res = (list(res_fn()) if callable(res_fn) else
+                sorted({geom.latent_size >> s
+                        for s, a in enumerate(geom.down_attn) if a},
+                       reverse=True))
 
     def remap(ratios: dict) -> dict:
         meas = sorted(ratios, reverse=True)

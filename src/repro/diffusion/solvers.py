@@ -64,6 +64,9 @@ import jax
 import jax.numpy as jnp
 
 SOLVERS = ("ddim", "plms", "dpm2m")
+# timestep spacing over the training trajectory (SamplerPolicy.schedule)
+SCHEDULES = ("uniform", "karras")
+KARRAS_RHO = 7.0
 # per-row solver family ids inside the coefficient tables
 SOLVER_ID = {name: i for i, name in enumerate(SOLVERS)}
 # previous-step model outputs each family reads (eps for plms, x0 for dpm2m)
@@ -205,10 +208,19 @@ class SamplerPolicy:
     ``name`` is a display label (tier name in traces); it is excluded
     from equality/hash so renaming a tier can never fork an executable
     cache entry.
+
+    ``schedule`` picks how the budget's timesteps are spaced over the
+    training trajectory: ``"uniform"`` (the legacy equispaced grid —
+    byte-identical tables to the pre-schedule code) or ``"karras"``
+    (the rho=7 sigma ramp of Karras et al. 2022, snapped to the nearest
+    discrete training timesteps so ``alphas_cumprod`` gathers stay
+    exact).  The schedule only changes WHICH (t, t_prev) boundaries the
+    tables hold; every solver family consumes them unchanged.
     """
     solver: str = "ddim"
     num_steps: int = 25
     phases: Optional[PhaseSchedule] = None
+    schedule: str = "uniform"
     name: str = dataclasses.field(default="", compare=False)
 
     def __post_init__(self):
@@ -219,6 +231,10 @@ class SamplerPolicy:
         if self.num_steps < 1:
             raise ValueError(
                 f"SamplerPolicy.num_steps={self.num_steps}: expected >= 1")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"SamplerPolicy.schedule={self.schedule!r}: expected one "
+                f"of {SCHEDULES}")
 
     # -- presets / tiers -------------------------------------------------
     @classmethod
@@ -247,8 +263,9 @@ class SamplerPolicy:
     def parse(cls, spec: str) -> "SamplerPolicy":
         """CLI spec: a tier name (``draft`` | ``balanced`` | ``quality``),
         a solver name, or a comma list with ``steps=N`` /
+        ``schedule=uniform|karras`` /
         ``phases=<PhaseSchedule spec with ; separators>`` overrides,
-        e.g. ``"dpm2m,steps=10,phases=detail_guard"``."""
+        e.g. ``"dpm2m,steps=10,schedule=karras,phases=detail_guard"``."""
         spec = spec.strip()
         if spec in TIERS:
             return TIERS[spec]
@@ -267,6 +284,8 @@ class SamplerPolicy:
                 fields["num_steps"] = int(val)
             elif key == "solver":
                 solver = val
+            elif key == "schedule":
+                fields["schedule"] = val
             elif key == "phases":
                 fields["phases"] = PhaseSchedule.parse(val.replace(";", ","))
             elif key == "name":
@@ -274,7 +293,7 @@ class SamplerPolicy:
             else:
                 raise ValueError(
                     f"sampler spec: unknown key {key!r} (expected steps, "
-                    f"solver, phases or name)")
+                    f"solver, schedule, phases or name)")
         base = cls() if solver is None else cls(solver=solver)
         return dataclasses.replace(base, **fields) if fields else base
 
@@ -290,14 +309,16 @@ class SamplerPolicy:
 
     def key(self) -> str:
         """Stable short label (bank dict keys, bench records)."""
-        return f"{self.solver}-{self.num_steps}"
+        base = f"{self.solver}-{self.num_steps}"
+        return base if self.schedule == "uniform" else \
+            f"{base}-{self.schedule}"
 
     def label(self) -> str:
         return self.name or self.key()
 
     def describe(self) -> dict:
         return {"solver": self.solver, "num_steps": self.num_steps,
-                "name": self.label(),
+                "schedule": self.schedule, "name": self.label(),
                 "phases": (None if self.phases is None
                            else self.phases.describe())}
 
@@ -429,9 +450,29 @@ def solver_tables(bank, ddim_cfg) -> SolverTables:
                   ("solver", "budget")}
     for p in bank:
         n = p.num_steps
-        step = ddim_cfg.num_train_steps // n
-        ts = jnp.arange(n - 1, -1, -1) * step
-        t_prev = ts - step
+        if p.schedule == "karras":
+            # Karras et al. 2022 rho-ramp over sigma = sqrt((1-a)/a),
+            # snapped to the nearest DISCRETE training timestep so the
+            # a_t/a_prev gathers below stay exact alphas_cumprod values
+            # (no interpolated alphas — the bit-identity contracts rely
+            # on gathered table entries).  t_prev chains the selected
+            # timesteps; -1 marks the final boundary (a_prev = 1).
+            all_sigmas = jnp.sqrt((1.0 - acp) / acp)
+            inv_rho = 1.0 / KARRAS_RHO
+            s_max, s_min = all_sigmas[-1], all_sigmas[0]
+            ramp = jnp.linspace(0.0, 1.0, n)
+            sigmas = (s_max ** inv_rho
+                      + ramp * (s_min ** inv_rho - s_max ** inv_rho)
+                      ) ** KARRAS_RHO
+            ts = jnp.argmin(
+                jnp.abs(all_sigmas[None, :] - sigmas[:, None]),
+                axis=1).astype(jnp.int32)
+            t_prev = jnp.concatenate(
+                [ts[1:], jnp.asarray([-1], jnp.int32)])
+        else:
+            step = ddim_cfg.num_train_steps // n
+            ts = jnp.arange(n - 1, -1, -1) * step
+            t_prev = ts - step
         a_t = acp[ts]
         a_prev = jnp.where(t_prev >= 0, acp[jnp.maximum(t_prev, 0)], 1.0)
         # DPM-Solver++(2M) exponential-integrator coefficients

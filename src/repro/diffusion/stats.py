@@ -46,10 +46,23 @@ class LayerKey:
 def attn_layer_order(cfg) -> Tuple[LayerKey, ...]:
     """Transformer blocks in forward-traversal order, derived from config.
 
-    Mirrors ``unet_forward`` exactly: down stages (attn at ``latent >> i``),
-    optional mid block, then up stages (stage ``j`` revisits resolution
-    ``latent >> rev[j]``).  This is the canonical leaf order of
-    ``UNetStats`` — the contract that makes stacked stats addressable.
+    The canonical leaf order of every stats pytree, ``LedgerAccum``
+    column order, and reuse-cache layer order — the denoiser contract's
+    layer-order rule (DESIGN.md §11).  A config that defines its own
+    ``layer_order()`` hook (every registered denoiser family does) is the
+    source of truth; plain UNet-shaped configs fall back to the UNet
+    traversal formula below.
+    """
+    order_fn = getattr(cfg, "layer_order", None)
+    if callable(order_fn):
+        return order_fn()
+    return _unet_attn_layer_order(cfg)
+
+
+def _unet_attn_layer_order(cfg) -> Tuple[LayerKey, ...]:
+    """UNet traversal: down stages (attn at ``latent >> i``), optional mid
+    block, then up stages (stage ``j`` revisits resolution
+    ``latent >> rev[j]``) — mirrors ``unet_forward`` exactly.
     """
     order = []
     nstages = len(cfg.block_channels)

@@ -37,7 +37,8 @@ import jax.numpy as jnp
 from repro.core.precision import PrecisionPolicy
 from repro.core.reuse import (LayerReuseCache, ReuseCache, ReusePolicy,
                               ReuseRowCounters, window_patch_mask)
-from repro.diffusion.stats import SlotStats, UNetStats, attn_layer_order
+from repro.diffusion.stats import (SlotStats, UNetStats, attn_layer_order,
+                                   _unet_attn_layer_order)
 from repro.kernels import dispatch
 from repro.kernels.dispatch import KernelPolicy
 from repro.kernels.patch_reuse import ops as reuse_ops
@@ -129,6 +130,28 @@ class UNetConfig:
             latent_size=16,
             groups=8,
         )
+
+    # --- denoiser-contract hooks (repro.diffusion.denoiser) ---
+    def layer_order(self) -> tuple:
+        """Canonical stats layer order for this config (contract hook)."""
+        return _unet_attn_layer_order(self)
+
+    def channels_at(self, resolution: int) -> int:
+        """Token width at a feature-map resolution (contract hook)."""
+        stage = (self.latent_size // resolution).bit_length() - 1
+        return self.block_channels[stage]
+
+    def full_geometry(self) -> "UNetConfig":
+        """Full-size config of this family — the analytic-ledger
+        extrapolation target (contract hook)."""
+        return UNetConfig()
+
+    def attn_resolutions(self) -> tuple:
+        """Distinct attention resolutions, sorted descending (contract
+        hook; measured-ratio remap keys for the energy ledger)."""
+        return tuple(sorted({self.latent_size >> s
+                             for s, a in enumerate(self.down_attn) if a},
+                            reverse=True))
 
     @property
     def num_down_attn_layers(self) -> int:
@@ -337,7 +360,7 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                        policy: KernelPolicy | None = None,
                        precision: PrecisionPolicy | None = None,
                        row_stats: bool = False, reuse=None,
-                       overrides=None):
+                       overrides=None, modulation=None):
     """x2d: (B, H, W, C) -> (out, PSSAStats, TIPSResult, reuse_out).
 
     ``tips_active`` is a scalar flag (whole-batch schedule) or a (B,) row
@@ -379,6 +402,17 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     [cond | uncond] where the hidden state was); each lane is None when
     the sampler bank never schedules it, which keeps the unscheduled
     trace — and its kernel routing — exactly the legacy one.
+
+    ``modulation``: adaLN-zero timestep conditioning (the DiT family).
+    ``None`` — what every UNet call passes — leaves the trace exactly as
+    before.  Otherwise a 9-tuple of (B, 1, C)-broadcastable arrays,
+    ``(shift, scale, gate)`` per stage in (self-attn, cross-attn, FFN)
+    order: after each stage's ``layer_norm`` the hidden state becomes
+    ``hn * (1 + scale) + shift``, and the stage's projection is
+    multiplied by ``gate`` before the residual add (and before any reuse
+    scatter, so the cache holds gated activations like it holds projected
+    ones).  Arrays carry request rows and are tiled to [cond | uncond]
+    by the same ``_per_rows`` rule as the override lanes.
     """
     b, hgt, wid, c = x2d.shape
     res = hgt  # feature-map resolution
@@ -449,6 +483,9 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
 
     # --- self-attention (PSSA) ---
     hn = layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"])
+    if modulation is not None:
+        hn = hn * (1.0 + _per_rows(modulation[1], hn.shape[0])) \
+            + _per_rows(modulation[0], hn.shape[0])
     # reuse: queries gathered to the active patch rows, K/V stay dense —
     # every gathered query still attends over the full token set
     hn_q = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
@@ -471,6 +508,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                  row_stats=row_stats)
     sa_proj = jnp.einsum("btd,dc->btc", _merge_heads(sa.out),
                          p["sa_o"]["w"]) + p["sa_o"]["b"]
+    if modulation is not None:
+        sa_proj = sa_proj * _per_rows(modulation[2], sa_proj.shape[0])
     if reuse is not None:
         sa_proj = reuse_ops.scatter_rows(cache.sa, rows, sa_proj, gate_rows)
     sa_full = sa_proj
@@ -489,6 +528,9 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     # --- cross-attention (TIPS CAS source) ---
     resid = h
     hn = layer_norm(h, p["ln2"]["scale"], p["ln2"]["bias"])
+    if modulation is not None:
+        hn = hn * (1.0 + _per_rows(modulation[4], hn.shape[0])) \
+            + _per_rows(modulation[3], hn.shape[0])
     hn_q = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
     q = _attn_heads(hn_q, p["ca_q"]["w"], heads)
     kt = _attn_heads(context, p["ca_k"]["w"], heads)
@@ -501,6 +543,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
                                   threshold_scale=tips_scale)
     ca_proj = jnp.einsum("btd,dc->btc", _merge_heads(ca.out),
                          p["ca_o"]["w"]) + p["ca_o"]["b"]
+    if modulation is not None:
+        ca_proj = ca_proj * _per_rows(modulation[5], ca_proj.shape[0])
     if reuse is not None:
         ca_proj = reuse_ops.scatter_rows(cache.ca, rows, ca_proj, gate_rows)
     ca_full = ca_proj
@@ -509,6 +553,9 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
     # --- FFN (GEGLU) with TIPS mixed precision ---
     resid = h
     hn = layer_norm(h, p["ln3"]["scale"], p["ln3"]["bias"])
+    if modulation is not None:
+        hn = hn * (1.0 + _per_rows(modulation[7], hn.shape[0])) \
+            + _per_rows(modulation[6], hn.shape[0])
     hn_f = hn if reuse is None else reuse_ops.gather_rows(hn, rows)
     if cfg.tips:
         active = tips_active
@@ -526,6 +573,8 @@ def _transformer_block(x2d, p, context, cfg: UNetConfig, tips_active,
         important = None
     ffn = dispatch.ffn_geglu(policy, hn_f, p, important,
                              precision=precision)
+    if modulation is not None:
+        ffn = ffn * _per_rows(modulation[8], ffn.shape[0])
     if reuse is not None:
         ffn = reuse_ops.scatter_rows(cache.ffn, rows, ffn, gate_rows)
     ffn_full = ffn
@@ -695,3 +744,15 @@ def unet_forward(params, latents, timesteps, context, cfg: UNetConfig,
 def abstract_unet_params(cfg: UNetConfig):
     return jax.eval_shape(lambda: init_unet_params(jax.random.PRNGKey(0),
                                                    cfg))
+
+
+# --- denoiser-contract registration (repro.diffusion.denoiser) ---
+from repro.diffusion import denoiser as _denoiser  # noqa: E402
+
+_denoiser.register_family(_denoiser.FamilySpec(
+    family="unet",
+    config_cls=UNetConfig,
+    init_params=init_unet_params,
+    forward=unet_forward,
+    abstract_params=abstract_unet_params,
+))

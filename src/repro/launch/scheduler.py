@@ -316,6 +316,7 @@ class ContinuousScheduler:
         makespan = time.perf_counter() - t0
         metrics = {
             "mode": "continuous",
+            "denoiser_family": eng.denoiser.family,
             "num_slots": self.num_slots,
             "engine_steps": steps,
             "step_wall_s": step_wall,
@@ -447,6 +448,7 @@ class FixedBatchScheduler:
         makespan = time.perf_counter() - t0
         metrics = {
             "mode": "fixed_micro_batch",
+            "denoiser_family": eng.denoiser.family,
             "micro_batch": self.micro_batch,
             "engine_calls": calls,
             "call_wall_s": call_wall,

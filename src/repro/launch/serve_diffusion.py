@@ -2,9 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
-      [--kernels fused] [--tips adaptive] [--mesh 4] [--ledger] \
-      [--continuous --slots 4 --arrival-rate 2.0 --burst 2] \
+      [--model unet|dit] [--kernels fused] [--tips adaptive] [--mesh 4] \
+      [--ledger] [--continuous --slots 4 --arrival-rate 2.0 --burst 2] \
       [--solver dpm2m,steps=12] [--tiers draft balanced quality]
+
+``--model`` selects the denoiser family behind the contract (DESIGN.md
+§11): the BK-SDM UNet (default) or the DiT-S/2 transformer.  Every
+serving mode, kernel policy, quality tier and the banked energy ledger
+work unchanged for both families; reports carry the active family under
+``denoiser_family``.
 
 Phase-aware sampling (DESIGN.md §10): ``--solver`` swaps the solver /
 step budget for every request (``SamplerPolicy`` spec: tier name, solver
@@ -82,6 +88,13 @@ def make_config(args):
     from repro.kernels.dispatch import KernelPolicy
 
     cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
+    if getattr(args, "model", "unet") == "dit":
+        # swap the denoiser family; the engine/sampler/serving spine is
+        # family-agnostic through the denoiser contract (DESIGN.md §11)
+        from repro.diffusion.dit import DiTConfig
+        dit = DiTConfig()
+        cfg = dataclasses.replace(
+            cfg, unet=dit.smoke() if args.smoke else dit)
     policy = KernelPolicy.parse(args.kernels)
     precision = PrecisionPolicy.parse(args.tips)
     reuse = ReusePolicy.parse(getattr(args, "reuse", "off"))
@@ -195,6 +208,7 @@ def serve(cfg, requests, micro_batch: int, key=None, ledger: bool = False,
              else sampler_policy.num_steps)
     metrics = {
         "requests": int(requests.shape[0]),
+        "denoiser_family": eng.denoiser.family,
         "kernel_policy": cfg.unet.effective_kernel_policy().describe(),
         "precision_policy": cfg.unet.effective_precision().describe(),
         "micro_batch": micro_batch,
@@ -295,6 +309,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced geometry (CPU-friendly)")
+    ap.add_argument("--model", choices=("unet", "dit"), default="unet",
+                    help="denoiser family (DESIGN.md §11): the BK-SDM "
+                         "UNet (default) or the DiT-S/2 transformer; both "
+                         "serve through the same engine/scheduler spine "
+                         "and kernel dispatch table")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--micro-batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=5,
@@ -403,7 +422,8 @@ def main():
                 else f"ddim@{args.steps}")
     batching = (f"continuous slots={args.slots}" if args.continuous
                 else f"micro-batch {args.micro_batch}")
-    print(f"engine: latent {cfg.unet.latent_size}^2, sampling {sampling}, "
+    print(f"engine: model {args.model}, latent {cfg.unet.latent_size}^2, "
+          f"sampling {sampling}, "
           f"guidance {args.guidance} "
           f"({'fused-CFG' if args.guidance != 1.0 else 'no CFG'}), "
           f"{batching}, kernels {args.kernels}, "

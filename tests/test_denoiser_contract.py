@@ -1,0 +1,242 @@
+"""Denoiser-contract parity tests — DESIGN.md §11.
+
+The contract under test, for BOTH registered families (``unet``, ``dit``):
+
+  * ``make_denoiser`` resolves the family from the config type alone,
+    the handle is frozen/hashable (it joins executable-cache keys), and
+    ``layer_order`` matches the stats traversal the forward emits;
+  * the PSSA/TIPS integer counters are BIT-IDENTICAL across
+    ``reference`` and ``fused`` kernel routing at the default operating
+    point — the fused Pallas path is an execution strategy, not a
+    different computation (same contract bench_fused_attention pins);
+  * the scanned engine reproduces the Python-loop pipeline on the same
+    parameters (scan-vs-loop latents parity);
+  * images served through the slot runtime are bit-identical to the
+    one-shot engine, and the drained ``LedgerAccum`` headline equals the
+    one-shot energy report (the §8 oracle, now family-generic);
+  * knife-edge thresholds keep every counter input-sensitive (positive
+    control: a different request set MUST move the counters, so the
+    equalities above cannot pass vacuously).
+
+Everything here drives the UNMODIFIED engine/sampler/stats/scheduler
+spine — a family only plugs in via ``repro.diffusion.denoiser``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import PrecisionPolicy
+from repro.diffusion.denoiser import FAMILIES, family_of, make_denoiser
+from repro.diffusion.dit import DiTConfig
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import (PipelineConfig,
+                                      StableDiffusionPipeline,
+                                      energy_report_from_accum,
+                                      energy_report_multi)
+from repro.diffusion.stats import attn_layer_order
+from repro.kernels.dispatch import KernelPolicy
+from repro.launch.scheduler import make_requests
+
+
+def _family_cfg(family: str) -> PipelineConfig:
+    """Smoke pipeline for one family at the default operating point."""
+    cfg = PipelineConfig.smoke()
+    if family == "dit":
+        cfg = dataclasses.replace(cfg, unet=DiTConfig().smoke())
+    return cfg
+
+
+def _knife_edge(cfg: PipelineConfig) -> PipelineConfig:
+    """Thresholds at the actual smoke-model score scale.
+
+    The untrained smoke models' near-uniform softmax rows saturate the
+    counters at the paper operating point; ~1/T and ~1/text_len make
+    every counter input-sensitive (same rationale as
+    tests/test_continuous.py) so the slot-oracle equality below has
+    teeth.  Knife-edge scores sit within fp noise of the threshold, so
+    these configs pin SINGLE-routing contracts; the cross-routing
+    bit-identity contract is defined at the default operating point
+    (margins above fp reassociation — same as bench_fused_attention).
+    """
+    t = cfg.unet.attn_resolutions()[0] ** 2
+    return dataclasses.replace(cfg, unet=dataclasses.replace(
+        cfg.unet,
+        pssa_threshold=1.0 / t,
+        precision=PrecisionPolicy.fixed(
+            threshold=1.0 / cfg.unet.text_len)))
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def family(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def cfg(family):
+    return _family_cfg(family)
+
+
+@pytest.fixture(scope="module")
+def knife(cfg):
+    return _knife_edge(cfg)
+
+
+@pytest.fixture(scope="module")
+def eng(knife):
+    return DiffusionEngine(knife, key=jax.random.PRNGKey(0))
+
+
+def _toks(cfg, batch=1, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (batch, cfg.text.max_len), 0,
+                              cfg.text.vocab_size)
+
+
+def _counters(stats):
+    """The counter leaves whose bit-identity we pin across routing.
+
+    All PSSAStats fields plus the folded TIPS ``low_precision_ratio`` —
+    the same set tests/test_dispatch.py pins.  The raw per-query ``cas``
+    floats are NOT in the contract: the fused kernel's blocked softmax
+    reassociates their reduction (they agree to fp tolerance only), and
+    nothing downstream consumes them un-thresholded.
+    """
+    leaves = [jnp.asarray(x) for p in stats.pssa for x in p]
+    leaves += [jnp.asarray(t.low_precision_ratio) for t in stats.tips]
+    return leaves
+
+
+# ----------------------------------------------------------------------------
+# The handle itself
+# ----------------------------------------------------------------------------
+def test_make_denoiser_resolves_family(family, cfg):
+    den = make_denoiser(cfg.unet)
+    assert den.family == family == family_of(cfg.unet)
+    assert den.cfg is cfg.unet
+    # frozen/hashable: the handle can join executable-cache keys
+    assert {den: 1}[make_denoiser(cfg.unet)] == 1
+    # the canonical stats traversal comes from the config hook
+    assert den.layer_order() == attn_layer_order(cfg.unet)
+    assert len(den.layer_order()) > 0
+
+
+def test_family_of_rejects_unknown_configs():
+    with pytest.raises(TypeError):
+        family_of(object())
+
+
+def test_abstract_params_match_init(cfg):
+    den = make_denoiser(cfg.unet)
+    concrete = den.init_params(jax.random.PRNGKey(3))
+    abstract = den.abstract_params()
+    c_leaves = jax.tree_util.tree_leaves(concrete)
+    a_leaves = jax.tree_util.tree_leaves(abstract)
+    assert len(c_leaves) == len(a_leaves)
+    for c, a in zip(c_leaves, a_leaves):
+        assert c.shape == a.shape and c.dtype == a.dtype
+
+
+# ----------------------------------------------------------------------------
+# Kernel-routing bit-identity (reference | fused)
+# ----------------------------------------------------------------------------
+def test_counters_bit_identical_across_kernel_routing(cfg):
+    outs = {}
+    for routing in ("reference", "fused"):
+        c = dataclasses.replace(cfg, unet=dataclasses.replace(
+            cfg.unet,
+            kernel_policy=getattr(KernelPolicy, routing)()))
+        e = DiffusionEngine(c, key=jax.random.PRNGKey(0))
+        outs[routing] = e.generate(_toks(cfg), jax.random.PRNGKey(2))
+    ref = _counters(outs["reference"].stats)
+    fus = _counters(outs["fused"].stats)
+    assert len(ref) == len(fus)
+    for a, b in zip(ref, fus):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------------
+# Scan-vs-loop parity
+# ----------------------------------------------------------------------------
+def test_scan_engine_matches_python_loop_pipeline(cfg):
+    pipe = StableDiffusionPipeline(cfg, key=jax.random.PRNGKey(0))
+    e = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))  # same params
+    toks = _toks(cfg)
+    img_loop, _ = pipe.generate(toks, jax.random.PRNGKey(2))
+    out = e.generate(toks, jax.random.PRNGKey(2))
+    assert out.images.shape == img_loop.shape
+    assert bool(jnp.all(jnp.isfinite(out.images)))
+    # eager loop vs scanned-jit execution reassociates fp ops
+    np.testing.assert_allclose(np.asarray(out.images),
+                               np.asarray(img_loop), rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------------------------
+# Slot-vs-one-shot oracle (images + banked ledger)
+# ----------------------------------------------------------------------------
+def _drain(eng, requests, num_slots):
+    """Serve all requests through the slot runtime; (state, images)."""
+    queue = list(range(len(requests)))
+    owner, images = {}, {}
+    state = eng.init_slots(num_slots)
+
+    def fill(state):
+        for s in range(num_slots):
+            if s not in owner and queue:
+                r = requests[queue.pop(0)]
+                state = eng.admit(state, s, r.tokens, None,
+                                  uncond_tokens=r.uncond_tokens,
+                                  latents=r.latents)
+                owner[s] = r
+        return state
+
+    state = fill(state)
+    while owner:
+        state = eng.slot_step(state)
+        done = eng.finished_slots(state)
+        if done:
+            decoded = np.asarray(jax.device_get(
+                eng.decode_slots(state, done)))
+            for j, s in enumerate(done):
+                images[owner.pop(s).rid] = decoded[j]
+            state = eng.retire(state, done)
+            state = fill(state)
+    return state, images
+
+
+def test_slot_runtime_matches_one_shot_oracle(knife):
+    cfg_g = dataclasses.replace(knife, ddim=dataclasses.replace(
+        knife.ddim, guidance_scale=7.5))      # CFG rows exercise cfg_dup
+    e = DiffusionEngine(cfg_g, key=jax.random.PRNGKey(0))
+    reqs = make_requests(cfg_g, 4)
+    assert reqs[0].uncond_tokens is not None
+
+    # one-shot oracle: one generate call over all four requests
+    toks = jnp.concatenate([r.tokens for r in reqs], axis=0)
+    lats = jnp.concatenate([r.latents for r in reqs], axis=0)
+    uncond = jnp.concatenate([r.uncond_tokens for r in reqs], axis=0)
+    out = e.generate(toks, None, uncond_tokens=uncond, latents=lats)
+    ref_imgs = np.asarray(out.images)
+    ref_rep = energy_report_multi(cfg_g, [out.stats]).summary()
+
+    state, imgs = _drain(e, reqs, num_slots=3)   # uneven drain at the tail
+    for j, r in enumerate(reqs):
+        np.testing.assert_array_equal(imgs[r.rid], ref_imgs[j],
+                                      err_msg=f"request {r.rid}")
+    rep = energy_report_from_accum(cfg_g, state.accum).summary()
+    assert rep == ref_rep
+
+
+# ----------------------------------------------------------------------------
+# Positive control: the knife edge keeps the counters input-sensitive
+# ----------------------------------------------------------------------------
+def test_knife_edge_counters_are_input_sensitive(knife, eng):
+    a = eng.generate(_toks(knife, seed=7), jax.random.PRNGKey(2))
+    b = eng.generate(_toks(knife, seed=23), jax.random.PRNGKey(3))
+    nnz_a = np.concatenate(
+        [np.asarray(p.nnz).ravel() for p in a.stats.pssa])
+    nnz_b = np.concatenate(
+        [np.asarray(p.nnz).ravel() for p in b.stats.pssa])
+    assert not np.array_equal(nnz_a, nnz_b)
