@@ -1,0 +1,280 @@
+"""BENCH — Compiled-path kernels: reference vs fused vs autotuned blocks + int8 FFN.
+
+The fused-attention trajectory benches run at small interpret-friendly
+geometry; this bench makes the PERFORMANCE claim at the geometry the
+serving paths actually run (64x64 latents -> T=4096 self-attention rows,
+Tk=77 text keys, 4096-row GEGLU FFN) and is explicit about what machine
+made it: every record carries ``backend`` and ``interpreted``, so the
+regression gate can tell an interpret-mode trajectory (CPU CI — the
+committed numbers) from a compiled claim (TPU/GPU, where ``interpreted``
+is false and the Pallas kernels execute natively).
+
+Three routes per attention geometry, timed with donation + warmup and
+the shared min-of-k convention (``benchmarks.timing``):
+
+* ``reference``      — materializing XLA path (the stats oracle)
+* ``fused_default``  — blocked Pallas kernel, ``KernelPolicy`` defaults
+* ``fused_tuned``    — same kernel, blocks from the committed autotune
+  table (``kernels.autotune``); ``tuned_vs_default_speedup`` is the
+  number the autotuner has to defend.  The PSSA/TIPS integer statistics
+  must not move with routing or block shape: at engine geometry that is
+  the bit-identical contract (tests/test_autotune.py pins it), while at
+  this geometry's 134M stochastic softmax samples a handful of
+  probabilities land within an ulp of the 2^-13 prune threshold (the
+  normalizer's summation order differs per block size), so the
+  self-attention counter claim here is BOUNDED knife-edge drift with
+  the raw mismatch counts in the record.
+
+The FFN section runs the DBSC integer matmul both ways —
+``quant_path="model"`` (int32 simulation) vs ``"int8"`` (real int8 x
+int8 -> int32 ``lax.dot_general``) — and pins the accumulators
+bit-identical.  The int8 wall is reported honestly: it maps to MXU /
+dp4a integer units on accelerators, while CPU XLA may simulate it
+SLOWER than f32; the claim here is exactness + the routing existing,
+not a CPU speedup.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+# full geometry: smoke-model channels at the top resolution
+SELF_GEOMS = ((1, 8, 4096, 40, 64),)
+CROSS_GEOMS = ((1, 8, 1024, 40, 77), (1, 8, 4096, 40, 77))
+FFN_GEOM = (4096, 320, 1280)                 # (rows, c, dff)
+
+SMOKE_SELF = ((1, 2, 256, 32, 16),)
+SMOKE_CROSS = ((1, 2, 256, 32, 77),)
+SMOKE_FFN = (256, 64, 128)
+
+
+def _donated_wall(op, make_args, *, donate, reps):
+    """Min-of-k wall of ``op`` with donated, freshly-staged operands.
+
+    Donation lets the compiled path reuse operand buffers for outputs
+    (the serving posture) — which also means a timed call CONSUMES its
+    operands, so each repetition stages fresh device copies outside the
+    clock; ``benchmarks.timing.min_over`` keeps the min-of-k convention.
+    """
+    import jax
+
+    from benchmarks.timing import min_over
+
+    fn = jax.jit(op, donate_argnums=donate)
+    jax.block_until_ready(fn(*make_args()))            # compile + warm up
+
+    def sample():
+        args = make_args()
+        jax.block_until_ready(args)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        return time.perf_counter() - t0
+
+    return min_over(reps, sample)
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.core.attention                        # noqa: F401  (cycle)
+    from repro.kernels import autotune
+    from repro.kernels.bitslice_matmul.ops import bitslice_matmul
+    from repro.kernels.dispatch import KernelPolicy
+    from repro.kernels.pssa_attention.ops import pssa_attention
+    from repro.kernels.cross_attention_tips.ops import cross_attention_cas
+    from repro.kernels.runtime import default_interpret
+
+    reps = 1 if smoke else 2
+    threshold = 1.0 / 8192.0
+    defaults = KernelPolicy()
+    backend = jax.default_backend()
+    interpreted = default_interpret()
+
+    def tuned_or_default(op, geom, names):
+        won = autotune.lookup(op, geom) or {}
+        return {n: won.get(n, getattr(defaults, n)) for n in names}
+
+    # ---- self-attention: reference vs fused-default vs fused-tuned ---
+    self_attn = {}
+    for geom in (SMOKE_SELF if smoke else SELF_GEOMS):
+        b, h, t, d, patch = geom
+        arrs = [np.random.default_rng(i).standard_normal(
+            (b, h, t, d), dtype=np.float32) for i in range(3)]
+        make_args = lambda: tuple(jnp.array(a) for a in arrs)
+
+        default_blk = {"attn_block_q": defaults.attn_block_q,
+                       "attn_block_k": defaults.attn_block_k}
+        tuned_blk = tuned_or_default("self_attention", geom, default_blk)
+
+        def attn_op(bq, bk, use_kernel=True):
+            return functools.partial(
+                pssa_attention, threshold=threshold, patch=patch,
+                use_kernel=use_kernel, bq=bq, bk=bk)
+
+        walls = {
+            "reference_wall_s": _donated_wall(
+                attn_op(128, 128, use_kernel=False), make_args,
+                donate=(0, 1, 2), reps=reps),
+            "fused_default_wall_s": _donated_wall(
+                attn_op(default_blk["attn_block_q"],
+                        default_blk["attn_block_k"]), make_args,
+                donate=(0, 1, 2), reps=reps),
+            "fused_tuned_wall_s": _donated_wall(
+                attn_op(tuned_blk["attn_block_q"],
+                        tuned_blk["attn_block_k"]), make_args,
+                donate=(0, 1, 2), reps=reps),
+        }
+        # counters (surviving-score nnz + patch-XOR popcount): at engine
+        # geometry these are bit-identical across routing and block
+        # shape (tests/test_autotune.py pins it); at this many-sample
+        # geometry a handful of softmax probabilities land within an ulp
+        # of the 2^-13 prune threshold, and the normalizer's summation
+        # order differs per block size — so the full-geometry claim is
+        # BOUNDED knife-edge drift (a few rows, +-1..2 counts), reported
+        # with the raw mismatch numbers
+        outs = {name: f(*make_args()) for name, f in [
+            ("reference", attn_op(128, 128, use_kernel=False)),
+            ("default", attn_op(default_blk["attn_block_q"],
+                                default_blk["attn_block_k"])),
+            ("tuned", attn_op(tuned_blk["attn_block_q"],
+                              tuned_blk["attn_block_k"]))]}
+        rows = b * h * t
+        mismatch = max(
+            int(jnp.sum(outs["reference"][i] != o[i]))
+            for o in (outs["default"], outs["tuned"]) for i in (1, 2))
+        max_diff = max(
+            int(jnp.max(jnp.abs(outs["reference"][i] - o[i])))
+            for o in (outs["default"], outs["tuned"]) for i in (1, 2))
+        counters_ok = mismatch <= max(1, rows // 1000) and max_diff <= 4
+        self_attn[f"t={t}"] = {
+            "geom": list(geom),
+            **walls,
+            "default_blocks": default_blk,
+            "tuned_blocks": tuned_blk,
+            "tuned_vs_default_speedup": walls["fused_default_wall_s"]
+            / max(walls["fused_tuned_wall_s"], 1e-9),
+            "fused_tuned_vs_reference_speedup": walls["reference_wall_s"]
+            / max(walls["fused_tuned_wall_s"], 1e-9),
+            "counter_mismatch_rows": mismatch,
+            "counter_max_abs_diff": max_diff,
+            "counters_knife_edge_bounded": bool(counters_ok),
+        }
+
+    # ---- cross-attention ---------------------------------------------
+    cross_attn = {}
+    for geom in (SMOKE_CROSS if smoke else CROSS_GEOMS):
+        b, h, tq, d, tk = geom
+        rng = np.random.default_rng(7)
+        qa = rng.standard_normal((b, h, tq, d), dtype=np.float32)
+        ka = rng.standard_normal((b, h, tk, d), dtype=np.float32)
+        va = rng.standard_normal((b, h, tk, d), dtype=np.float32)
+        make_args = lambda: (jnp.array(qa), jnp.array(ka), jnp.array(va))
+
+        default_blk = {"cross_block_q": defaults.cross_block_q}
+        tuned_blk = tuned_or_default("cross_attention", geom, default_blk)
+
+        def cross_op(bq, use_kernel=True):
+            return functools.partial(cross_attention_cas,
+                                     use_kernel=use_kernel, bq=bq)
+
+        walls = {
+            "reference_wall_s": _donated_wall(
+                cross_op(128, use_kernel=False), make_args,
+                donate=(0, 1, 2), reps=reps),
+            "fused_default_wall_s": _donated_wall(
+                cross_op(default_blk["cross_block_q"]), make_args,
+                donate=(0, 1, 2), reps=reps),
+            "fused_tuned_wall_s": _donated_wall(
+                cross_op(tuned_blk["cross_block_q"]), make_args,
+                donate=(0, 1, 2), reps=reps),
+        }
+        # the TIPS contract (DESIGN.md §7): the head-averaged CAS feeds
+        # ``important <=> cas < threshold`` and THAT mask must not move
+        # with routing or block shape (raw per-head CAS floats may differ
+        # in final ulps between the online-softmax kernel and the
+        # materializing reference; the decision integers may not)
+        tips_thr = 0.05                      # PrecisionPolicy.fixed()
+        masks = {name: jnp.mean(f(*make_args())[1], axis=1) < tips_thr
+                 for name, f in [
+                     ("reference", cross_op(128, use_kernel=False)),
+                     ("default", cross_op(default_blk["cross_block_q"])),
+                     ("tuned", cross_op(tuned_blk["cross_block_q"]))]}
+        cas_ok = (jnp.array_equal(masks["reference"], masks["default"])
+                  and jnp.array_equal(masks["reference"], masks["tuned"]))
+        cross_attn[f"tq={tq}"] = {
+            "geom": list(geom),
+            **walls,
+            "default_blocks": default_blk,
+            "tuned_blocks": tuned_blk,
+            "tuned_vs_default_speedup": walls["fused_default_wall_s"]
+            / max(walls["fused_tuned_wall_s"], 1e-9),
+            "fused_tuned_vs_reference_speedup": walls["reference_wall_s"]
+            / max(walls["fused_tuned_wall_s"], 1e-9),
+            "tips_mask_bit_identical": bool(cas_ok),
+        }
+
+    # ---- FFN int8 datapath -------------------------------------------
+    rows, c, dff = SMOKE_FFN if smoke else FFN_GEOM
+    rng = np.random.default_rng(11)
+    xa = rng.standard_normal((rows, c), dtype=np.float32)
+    wa = (rng.standard_normal((c, 2 * dff), dtype=np.float32)
+          / np.sqrt(c)).astype(np.float32)
+    imp = rng.random(rows) < 0.5
+    w_dev = jnp.array(wa)                    # weights stay resident
+    make_x = lambda: (jnp.array(xa),)
+
+    def ffn_op(quant_path):
+        return functools.partial(bitslice_matmul, w=w_dev,
+                                 important=jnp.array(imp),
+                                 use_kernel=False, quant_path=quant_path)
+
+    model_wall = _donated_wall(ffn_op("model"), make_x, donate=(0,),
+                               reps=reps)
+    int8_wall = _donated_wall(ffn_op("int8"), make_x, donate=(0,),
+                              reps=reps)
+    acc_model = ffn_op("model")(*make_x())
+    acc_int8 = ffn_op("int8")(*make_x())
+    ffn = {
+        "geom": {"rows": rows, "c": c, "dff": dff,
+                 "important_ratio": float(np.mean(imp))},
+        "model_wall_s": model_wall,
+        "int8_wall_s": int8_wall,
+        "int8_vs_model_speedup": model_wall / max(int8_wall, 1e-9),
+        "int8_bit_identical": bool(jnp.array_equal(acc_model, acc_int8)),
+    }
+
+    tuned_wins = all(
+        rec["tuned_vs_default_speedup"] >= 1.0
+        for section in (self_attn, cross_attn) for rec in section.values())
+    exact = (all(r["counters_knife_edge_bounded"]
+                 for r in self_attn.values())
+             and all(r["tips_mask_bit_identical"]
+                     for r in cross_attn.values())
+             and ffn["int8_bit_identical"])
+
+    return {
+        "backend": backend,
+        "interpreted": bool(interpreted),
+        "smoke": bool(smoke),
+        "reps": reps,
+        "table_entries": len(autotune.load_table()["entries"]),
+        "self_attention": self_attn,
+        "cross_attention": cross_attn,
+        "ffn_int8": ffn,
+        "tuned_beats_default": bool(tuned_wins),
+        "exactness_bit_identical": bool(exact),
+        "meets_target": bool(tuned_wins and exact),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry, 1 rep (CI wiring check)")
+    args = ap.parse_args()
+    print(json.dumps(run(smoke=args.smoke), indent=2))

@@ -20,11 +20,10 @@ Emits ``benchmarks/results/bench_fused_attention.json``.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
+from benchmarks.timing import min_wall_s
 from repro.core.attention import (self_attention_pssa,
                                   self_attention_pssa_fused)
 from repro.diffusion.engine import DiffusionEngine
@@ -45,17 +44,6 @@ def _layer_fns(patch):
     return {"reference": ref, "fused": fused}
 
 
-def _time(fn, args, reps):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
 def _layer_record(b, h, t, d, patch, reps):
     q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (b, h, t, d))
                for i in range(3))
@@ -68,7 +56,7 @@ def _layer_record(b, h, t, d, patch, reps):
         mem = comp.memory_analysis()
         rec[name] = {
             "peak_temp_bytes": int(mem.temp_size_in_bytes),
-            "wall_s": _time(fn, (q, k, v), reps),
+            "wall_s": min_wall_s(fn, q, k, v, reps=reps),
         }
         outs[name] = fn(q, k, v)
     rec["peak_temp_reduction"] = 1.0 - (

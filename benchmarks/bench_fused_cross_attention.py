@@ -21,11 +21,10 @@ Emits ``benchmarks/results/bench_fused_cross_attention.json``.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
+from benchmarks.timing import min_wall_s
 from repro.core.attention import (cross_attention_tips,
                                   cross_attention_tips_fused)
 from repro.core.precision import PrecisionPolicy
@@ -50,17 +49,6 @@ def _layer_fns(policy):
     return {"reference": ref, "fused": fused}
 
 
-def _time(fn, args, reps):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
 def _layer_record(b, h, tq, d, tk, policy_name, reps):
     policy = POLICIES[policy_name]
     q, k, v = (jax.random.normal(jax.random.PRNGKey(i), shape)
@@ -76,7 +64,7 @@ def _layer_record(b, h, tq, d, tk, policy_name, reps):
         mem = comp.memory_analysis()
         rec[name] = {
             "peak_temp_bytes": int(mem.temp_size_in_bytes),
-            "wall_s": _time(fn, (q, k, v), reps),
+            "wall_s": min_wall_s(fn, q, k, v, reps=reps),
         }
         outs[name] = fn(q, k, v)
     rec["peak_temp_reduction"] = 1.0 - (

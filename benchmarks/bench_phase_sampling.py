@@ -31,6 +31,8 @@ import dataclasses
 
 import numpy as np
 
+from benchmarks import timing
+
 SOLVER_SWEEP = ("ddim", "plms", "dpm2m")
 BUDGET_SWEEP = (8, 12, 25)
 REFERENCE = "ddim-25"
@@ -77,14 +79,12 @@ def run() -> dict:
             pol = solvers.SamplerPolicy(solver=solver, num_steps=n)
             out = eng.generate(toks, None, latents=jnp.array(lat0),
                                sampler_policy=pol)
-            # repeat the compiled executable and take the MIN wall: a
-            # single post-compile call drifts with machine warm-up
-            # across the sweep (earlier pairs measure slower), which
-            # would bias the cross-pair speedup ratios
-            wall = min(
-                (eng.generate(toks, None, latents=jnp.array(lat0),
-                              sampler_policy=pol), eng.last_wall_s)[1]
-                for _ in range(3))
+            # repeat the compiled executable and take the MIN wall
+            # (benchmarks.timing rationale); the engine carries its own
+            # clock, so min_over samples last_wall_s
+            wall = timing.min_over(3, lambda: (
+                eng.generate(toks, None, latents=jnp.array(lat0),
+                             sampler_policy=pol), eng.last_wall_s)[1])
             rep = energy_report(cfg, out.stats, sampler_policy=pol)
             latents_by_key[pol.key()] = np.asarray(out.latents[0])
             sweep[pol.key()] = {

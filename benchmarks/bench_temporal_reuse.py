@@ -25,20 +25,8 @@ step, which is the regime the gather/scatter pays off in.
 from __future__ import annotations
 
 import dataclasses
-import time
 
-
-def _timed(fn, *args, repeats: int = 3):
-    import jax
-    out = fn(*args)
-    jax.block_until_ready(out)          # compile outside the clock
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+from benchmarks.timing import timed as _timed
 
 
 def run() -> dict:

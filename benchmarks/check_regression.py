@@ -15,6 +15,10 @@ record against the committed one:
       ``mj_per_iter*`` / ``*ema_reduction*``) — integer-counter exactness
       means these are deterministic on a fixed jax/platform; ANY drift is
       an accounting change and must ship with regenerated results.
+    * ``interpreted`` flipping false -> true — committed results that
+      claim a compiled backend may not be re-validated by an interpret-
+      mode machine (the fresh numbers would measure the Pallas
+      interpreter, not the kernels).
 
   tolerance band (ratio within [1/tol, tol], default tol=4)
     * wall-clock-derived leaves (``*wall*``, ``imgs_per_s``, ``speedup``,
@@ -49,7 +53,8 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 # JSON — its table is machine-shape-dependent — so it stays out)
 DEFAULT_BENCHES = ("ema_breakdown", "pssa", "tips", "dbsc", "energy_iter",
                    "engine", "fused_attention", "fused_cross_attention",
-                   "sharded_engine", "continuous_serving", "temporal_reuse",
+                   "compiled_kernels", "sharded_engine",
+                   "continuous_serving", "temporal_reuse",
                    "phase_sampling", "dit_serving")
 
 _WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
@@ -100,6 +105,17 @@ def compare_records(name: str, committed, fresh,
             if bool(f) != bool(c):
                 problems.append(
                     f"{name}: {path} flipped {c} -> {f} (parity contract)")
+        elif key == "interpreted":
+            # committed false = a COMPILED-path claim; a fresh interpret
+            # run cannot stand in for it (the numbers measure the Pallas
+            # interpreter, not the kernels) — regenerate on the same
+            # class of machine.  true -> false only widens the claim.
+            if bool(c) is False and bool(f) is True:
+                problems.append(
+                    f"{name}: {path} flipped false -> true (committed "
+                    f"results claim a compiled backend; this machine "
+                    f"only interprets — regenerate on a compiled backend "
+                    f"or drop the claim)")
         elif isinstance(c, bool) or isinstance(f, bool):
             continue                       # other booleans: informational
         elif isinstance(c, (int, float)) and isinstance(f, (int, float)):

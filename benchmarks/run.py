@@ -31,6 +31,7 @@ BENCHES = {
     "engine": "benchmarks.bench_engine",
     "fused_attention": "benchmarks.bench_fused_attention",
     "fused_cross_attention": "benchmarks.bench_fused_cross_attention",
+    "compiled_kernels": "benchmarks.bench_compiled_kernels",
     "sharded_engine": "benchmarks.bench_sharded_engine",
     "continuous_serving": "benchmarks.bench_continuous_serving",
     "temporal_reuse": "benchmarks.bench_temporal_reuse",
@@ -153,6 +154,15 @@ def main() -> None:
                          "and diff against the committed results "
                          "(delegates to benchmarks/check_regression.py; "
                          "combine with --only to gate one section)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="run only the compiled-path kernel bench "
+                         "(reference vs fused vs autotuned blocks at full "
+                         "serving geometry + the int8 FFN datapath); "
+                         "records backend/interpreted so the claim is "
+                         "machine-honest.  With --smoke: tiny geometry, "
+                         "printed only — committed results stay untouched")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --compiled: tiny-geometry wiring check")
     ap.add_argument("--summary", action="store_true",
                     help="write benchmarks/results/summary.json (one "
                          "headline line per bench, from the results JSON "
@@ -177,6 +187,14 @@ def main() -> None:
         for name, line in lines.items():
             print(f"{name:<{width}}  {line}")
         raise SystemExit(0)
+    if args.compiled:
+        from benchmarks.bench_compiled_kernels import run as run_compiled
+        if args.smoke:
+            rec = run_compiled(smoke=True)
+            print(json.dumps(rec, indent=2))
+            raise SystemExit(0)
+        raise SystemExit(0 if _section("compiled_kernels",
+                                       run_compiled) else 1)
     if args.check:
         from benchmarks.check_regression import DEFAULT_BENCHES, check
         names = (args.only,) if args.only is not None else DEFAULT_BENCHES

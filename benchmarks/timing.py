@@ -1,0 +1,16 @@
+"""Shared min-of-k block-until-ready wall-clock helpers (bench-facing).
+
+Every bench times jitted callables the same way: compile/warm up OUTSIDE
+the clock, then take the MINIMUM of k block-until-ready repetitions.
+This module is the one import point the previously-duplicated
+``_time``/``_timed`` helpers collapse into; the implementation lives in
+``repro.kernels.runtime`` so the block autotuner (``kernels.autotune``,
+which runs without the bench tree on the path) shares it byte for byte.
+
+  ``timed(fn, *args, reps=3, warmup=1)``  -> (last output, min wall s)
+  ``min_wall_s(fn, *args, reps=3)``       -> min wall s only
+  ``min_over(reps, sample)``              -> min of self-clocked samples
+"""
+from __future__ import annotations
+
+from repro.kernels.runtime import min_over, min_wall_s, timed  # noqa: F401

@@ -41,8 +41,10 @@ def main():
                          "jitted engine")
     ap.add_argument("--kernels", default="auto",
                     help="kernel policy: 'auto' (backend-aware), "
-                         "'reference', 'fused', or per-op "
-                         "overrides (see repro.kernels.dispatch)")
+                         "'reference', 'fused', 'autotuned' (fused with "
+                         "the committed block-size table), or per-op "
+                         "overrides like 'ffn=dbsc,ffn_quant=int8' "
+                         "(see repro.kernels.dispatch)")
     ap.add_argument("--tips", default="fixed",
                     help="precision policy: 'fixed', 'adaptive', or field "
                          "overrides like 'adaptive,target=0.5,mid=true' "

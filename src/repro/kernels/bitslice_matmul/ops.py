@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.kernels.bitslice_matmul.kernel import bitslice_matmul_kernel
-from repro.kernels.bitslice_matmul.ref import bitslice_matmul_ref
+from repro.kernels.bitslice_matmul.ref import (bitslice_matmul_int8,
+                                               bitslice_matmul_ref)
 
 
 def _pad_to(x, mult, axis):
@@ -27,16 +28,26 @@ def _pad_to(x, mult, axis):
 
 
 @functools.partial(jax.jit, static_argnames=("dataflow", "use_kernel",
-                                             "interpret"))
+                                             "interpret", "quant_path"))
 def bitslice_matmul(x: jax.Array, w: jax.Array,
                     important: jax.Array | None = None,
                     dataflow: str = "weight_stationary",
                     use_kernel: bool = True,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    quant_path: str = "model") -> jax.Array:
     """``x (M,K) @ w (K,N)`` through the DBSC integer datapath.
 
     ``important``: bool (M,) TIPS mask; None -> all rows INT12.
+    ``quant_path``: ``"model"`` runs the int32 simulation (Pallas kernel
+    or jnp oracle per ``use_kernel``); ``"int8"`` runs the same integer
+    semantics as two real int8 x int8 -> int32 ``lax.dot_general`` calls
+    (XLA maps them onto the hardware integer units) — bit-identical
+    accumulators, so every downstream counter and the rescaled float
+    output match the model path exactly.
     """
+    if quant_path not in ("model", "int8"):
+        raise ValueError(f"bitslice_matmul quant_path={quant_path!r}: "
+                         f"expected 'model' or 'int8'")
     m, k = x.shape
     _, n = w.shape
     qx = quant.quantize_act(x, quant.ACT_BITS_HIGH)
@@ -50,7 +61,9 @@ def bitslice_matmul(x: jax.Array, w: jax.Array,
         prec = important.astype(jnp.int32)[:, None]
     hi, lo = quant.bitslice_split(vals)
 
-    if use_kernel:
+    if quant_path == "int8":
+        acc = bitslice_matmul_int8(hi, lo, qw.values, prec)
+    elif use_kernel:
         bm = bn = bk = 128
         hi_p = _pad_to(_pad_to(hi, bm, 0), bk, 1)
         lo_p = _pad_to(_pad_to(lo, bm, 0), bk, 1)

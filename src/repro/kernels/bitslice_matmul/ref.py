@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the DBSC bit-slice matmul."""
+"""Pure-jnp oracle + int8 datapath for the DBSC bit-slice matmul."""
 from __future__ import annotations
 
 import jax
@@ -14,4 +14,34 @@ def bitslice_matmul_ref(x_hi: jax.Array, x_lo: jax.Array, w: jax.Array,
     lo = x_lo * prec
     acc_hi = jnp.matmul(x_hi, w, preferred_element_type=jnp.int32)
     acc_lo = jnp.matmul(lo, w, preferred_element_type=jnp.int32)
+    return (acc_hi << 6) + acc_lo
+
+
+_DOT_2D = (((1,), (0,)), ((), ()))      # plain (M,K) @ (K,N)
+
+
+def bitslice_matmul_int8(x_hi: jax.Array, x_lo: jax.Array, w: jax.Array,
+                         prec: jax.Array) -> jax.Array:
+    """The same integers through real int8 x int8 -> int32 ``dot_general``.
+
+    The DBSC operands already fit int8 exactly: each activation slice is
+    unsigned 6-bit (``quant.bitslice_split`` -> [0, 63]) and the weights
+    are signed INT8 ([-128, 127]), so narrowing the operand dtypes loses
+    nothing and ``preferred_element_type=int32`` keeps the accumulator
+    wide (worst-case |acc| = K * 63 * 128 — int32-safe for any K the
+    model uses).  XLA maps this operand/accumulator combination onto the
+    hardware integer units (TPU MXU int8 mode, GPU dp4a/imma) instead of
+    simulating the arithmetic in int32 lanes, which is the point: same
+    bits as ``bitslice_matmul_ref``, PE-shaped execution.
+
+    ``prec`` gates the low slice BEFORE the narrowing (0 * [0,63] and
+    1 * [0,63] both fit int8), mirroring the ref exactly.
+    """
+    hi8 = x_hi.astype(jnp.int8)
+    lo8 = (x_lo * prec).astype(jnp.int8)
+    w8 = w.astype(jnp.int8)
+    acc_hi = jax.lax.dot_general(hi8, w8, _DOT_2D,
+                                 preferred_element_type=jnp.int32)
+    acc_lo = jax.lax.dot_general(lo8, w8, _DOT_2D,
+                                 preferred_element_type=jnp.int32)
     return (acc_hi << 6) + acc_lo

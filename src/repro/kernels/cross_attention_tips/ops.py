@@ -50,3 +50,34 @@ def cross_attention_cas(q: jax.Array, k: jax.Array, v: jax.Array,
     else:
         out, cas = cross_attention_tips_ref(qf, kf, vf, cls_index)
     return out.reshape(b, h, tq, d), cas.reshape(b, h, tq)
+
+
+# ---------------------------------------------------------------------------
+# Autotune hooks (repro.kernels.autotune): geometry = (b, h, tq, d, tk)
+# ---------------------------------------------------------------------------
+AUTOTUNE_KNOBS = ("cross_block_q",)
+
+
+def autotune_candidates(geom: tuple) -> tuple:
+    """Query-block candidates for a (b, h, tq, d, tk) geometry.
+
+    The text keys are tiny (Tk=77) so the only knob is the query block;
+    candidates cap at ``tq`` (larger blocks only pad).
+    """
+    b, h, tq, d, tk = geom
+    sizes = sorted({min(s, tq) for s in (128, 256, 512, 1024, 2048)})
+    return tuple({"cross_block_q": s} for s in sizes)
+
+
+def autotune_probe(geom: tuple, blocks: dict, *,
+                   interpret: bool | None = None):
+    """(jitted fn, args) the autotuner times for one block config."""
+    import jax.numpy as jnp
+    b, h, tq, d, tk = geom
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, tq, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, h, tk, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, tk, d), jnp.float32)
+    fn = jax.jit(functools.partial(
+        cross_attention_cas, interpret=interpret,
+        bq=blocks["cross_block_q"]))
+    return fn, (q, k, v)

@@ -45,7 +45,17 @@ _CHOICES = {
     "bitmap": ("reference", "kernel"),
     "reuse": ("reference", "kernel"),
 }
-_PRESETS = ("reference", "fused", "auto")
+_PRESETS = ("reference", "fused", "auto", "autotuned")
+_FFN_QUANT = ("model", "int8")
+
+# op -> the KernelPolicy block fields its kernels consume (also the knob
+# names the autotune table stores — kept identical on purpose)
+_OP_KNOBS = {
+    "self_attention": ("attn_block_q", "attn_block_k"),
+    "cross_attention": ("cross_block_q",),
+    "bitmap": ("bitmap_block_rows",),
+    "reuse": ("reuse_block_patches",),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +78,16 @@ class KernelPolicy:
     cross_block_q: int = 128
     bitmap_block_rows: int = 64
     reuse_block_patches: int = 8
+    # tuned=True: override the block fields above with the committed
+    # autotune table's winners, looked up per (backend, op, geometry) AT
+    # TRACE TIME from the static operand shapes (kernels.autotune).  The
+    # table never joins an executable cache key — only this bool does —
+    # so swapping tables cannot cause retracing churn.
+    tuned: bool = False
+    # ffn_quant="int8": the DBSC route's integer matmuls run as real
+    # int8 x int8 -> int32 ``lax.dot_general`` (MXU/dp4a-mappable)
+    # instead of the int32 simulation; integers are bit-identical.
+    ffn_quant: str = "model"
 
     def __post_init__(self):
         for op, allowed in _CHOICES.items():
@@ -75,6 +95,10 @@ class KernelPolicy:
             if val not in allowed:
                 raise ValueError(
                     f"KernelPolicy.{op}={val!r}: expected one of {allowed}")
+        if self.ffn_quant not in _FFN_QUANT:
+            raise ValueError(
+                f"KernelPolicy.ffn_quant={self.ffn_quant!r}: expected one "
+                f"of {_FFN_QUANT}")
 
     # -- presets ---------------------------------------------------------
     @classmethod
@@ -111,14 +135,28 @@ class KernelPolicy:
         return cls.fused() if not resolve_interpret(None) else cls.reference()
 
     @classmethod
+    def autotuned(cls) -> "KernelPolicy":
+        """``fused()`` with the committed autotune table's block winners.
+
+        Block sizes come from ``kernels.autotune``'s per-(backend, op,
+        geometry) lookup at trace time; geometries the table has never
+        seen silently keep the defaults, so this preset is always safe to
+        select.  Routing (which impl runs) is identical to ``fused()`` —
+        only block shapes differ, and stats/counters are block-invariant.
+        """
+        return cls(self_attention="fused", cross_attention="fused",
+                   bitmap="kernel", reuse="kernel", tuned=True)
+
+    @classmethod
     def parse(cls, spec: str) -> "KernelPolicy":
         """Build a policy from a CLI spec.
 
-        ``spec`` is a preset name (``reference`` | ``fused`` | ``auto`` —
-        the latter resolved from the backend at parse time) or a
-        comma-separated list of ``op=impl`` / ``interpret={auto,true,false}``
-        overrides applied on top of the reference preset, e.g.
-        ``"self_attention=fused,ffn=dbsc"``.
+        ``spec`` is a preset name (``reference`` | ``fused`` | ``auto`` |
+        ``autotuned`` — ``auto`` resolved from the backend at parse time)
+        or a comma-separated list of ``op=impl`` /
+        ``interpret={auto,true,false}`` / ``tuned={true,false}`` /
+        ``ffn_quant={model,int8}`` overrides applied on top of the
+        reference preset, e.g. ``"self_attention=fused,ffn=dbsc"``.
         """
         spec = spec.strip()
         if spec in _PRESETS:
@@ -138,7 +176,14 @@ class KernelPolicy:
                     raise ValueError(
                         f"kernel policy spec: interpret={impl!r} (expected "
                         f"auto, true or false)") from None
-            elif op in _CHOICES:
+            elif op == "tuned":
+                try:
+                    fields[op] = {"true": True, "false": False}[impl.lower()]
+                except KeyError:
+                    raise ValueError(
+                        f"kernel policy spec: tuned={impl!r} (expected "
+                        f"true or false)") from None
+            elif op == "ffn_quant" or op in _CHOICES:
                 fields[op] = impl
             else:
                 raise ValueError(f"kernel policy spec: unknown op {op!r} "
@@ -155,7 +200,30 @@ class KernelPolicy:
                 "interpret": ("auto" if self.interpret is None
                               else self.interpret),
                 "interpret_resolved": self.resolve_interpret(),
-                "backend": jax.default_backend()}
+                "backend": jax.default_backend(),
+                "tuned": self.tuned,
+                "ffn_quant": self.ffn_quant}
+
+
+# ----------------------------------------------------------------------------
+# Autotuned block resolution
+# ----------------------------------------------------------------------------
+def _blocks(policy: KernelPolicy, op: str, geom: tuple) -> dict:
+    """Resolved block sizes for one dispatch call.
+
+    Policy defaults, overridden by the committed autotune table's winner
+    for this exact (backend, op, geometry) when ``policy.tuned`` — a
+    TRACE-TIME lookup from static shapes (``geom`` is built from
+    ``.shape`` tuples, never traced values), so the table feeds plain
+    block arguments and only the hashable policy reaches cache keys.
+    """
+    blocks = {name: getattr(policy, name) for name in _OP_KNOBS[op]}
+    if policy.tuned:
+        from repro.kernels import autotune     # lazy: autotune imports ops
+        won = autotune.lookup(op, geom)
+        if won:
+            blocks.update(won)
+    return blocks
 
 
 # ----------------------------------------------------------------------------
@@ -195,20 +263,27 @@ def _ffn_dbsc(policy: KernelPolicy, hn, p, important, precision=None):
     grid (low 6 bits dropped on the shared scale), matching the
     reference's mid-activation fake-quant and the ledger's
     ``LedgerOptions.tips_mid`` MAC split.
+
+    ``policy.ffn_quant`` picks the execution of those integer matmuls:
+    ``model`` (the int32 simulation) or ``int8`` (real int8 x int8 ->
+    int32 ``lax.dot_general``) — bit-identical accumulators either way,
+    so routing never moves a counter or the energy ledger.
     """
     b, t, c = hn.shape
     bt = b * t
     imp_flat = important.reshape(bt) if important is not None else None
     gu = bitslice_matmul(hn.reshape(bt, c), p["ff_geglu"]["w"],
                          important=imp_flat,
-                         interpret=policy.interpret).reshape(b, t, -1) \
+                         interpret=policy.interpret,
+                         quant_path=policy.ffn_quant).reshape(b, t, -1) \
         + p["ff_geglu"]["b"]
     g, u = jnp.split(gu, 2, axis=-1)
     mid = jax.nn.gelu(g) * u
     mid_imp = imp_flat if _ffn_mid_covered(precision, important) else None
     return bitslice_matmul(mid.reshape(bt, mid.shape[-1]), p["ff_out"]["w"],
                            important=mid_imp,
-                           interpret=policy.interpret).reshape(b, t, c) \
+                           interpret=policy.interpret,
+                           quant_path=policy.ffn_quant).reshape(b, t, c) \
         + p["ff_out"]["b"]
 
 
@@ -264,10 +339,11 @@ def self_attention(policy: KernelPolicy, q, k, v, *, patch: int,
                             or per_row_threshold):
         impl = "reference"
     if impl == "fused":
+        blk = _blocks(policy, "self_attention", (*q.shape, patch))
         return attention.self_attention_pssa_fused(
             q, k, v, patch=patch, threshold=threshold,
             stats_rows=stats_rows, interpret=policy.interpret,
-            bq=policy.attn_block_q, bk=policy.attn_block_k,
+            bq=blk["attn_block_q"], bk=blk["attn_block_k"],
             row_stats=row_stats)
     return attention.self_attention_pssa(
         q, k, v, patch=patch, threshold=threshold,
@@ -293,9 +369,11 @@ def cross_attention(policy: KernelPolicy, q, k_text, v_text, *,
     honours it identically.
     """
     if policy.cross_attention == "fused":
+        blk = _blocks(policy, "cross_attention",
+                      (*q.shape, k_text.shape[2]))
         return attention.cross_attention_tips_fused(
             q, k_text, v_text, precision=precision, stats_rows=stats_rows,
-            interpret=policy.interpret, bq=policy.cross_block_q,
+            interpret=policy.interpret, bq=blk["cross_block_q"],
             row_stats=row_stats, threshold_scale=threshold_scale)
     return attention.cross_attention_tips(
         q, k_text, v_text, precision=precision, stats_rows=stats_rows,
@@ -317,9 +395,12 @@ def ffn_geglu(policy: KernelPolicy, hn, p, important, precision=None):
 def patch_bitmap(policy: KernelPolicy, sas, patch: int, threshold: float):
     """PSXU payload op: packed XOR bitmap + per-patch popcounts."""
     if policy.bitmap == "kernel":
+        tk = sas.shape[-1]
+        rows = sas.size // tk
+        blk = _blocks(policy, "bitmap", (rows, tk, patch))
         return _patch_bitmap_op(sas, patch, threshold, use_kernel=True,
                                 interpret=policy.interpret,
-                                br=policy.bitmap_block_rows)
+                                br=blk["bitmap_block_rows"])
     return _patch_bitmap_op(sas, patch, threshold, use_kernel=False)
 
 
@@ -333,9 +414,10 @@ def patch_delta(policy: KernelPolicy, x, x_ref, *, patch: int,
     reuse counter downstream of it — is bit-identical across routing.
     """
     if policy.reuse == "kernel":
+        blk = _blocks(policy, "reuse", (*x.shape, patch))
         return _patch_delta_op(x, x_ref, patch=patch, threshold=threshold,
                                use_kernel=True, interpret=policy.interpret,
-                               bp=policy.reuse_block_patches)
+                               bp=blk["reuse_block_patches"])
     return _patch_delta_op(x, x_ref, patch=patch, threshold=threshold,
                            use_kernel=False)
 

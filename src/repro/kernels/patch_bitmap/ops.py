@@ -37,3 +37,29 @@ def patch_bitmap(sas: jax.Array, patch: int, threshold: float,
         packed, counts = patch_bitmap_ref(flat, patch, threshold)
     return (packed.reshape(*lead, tq, tk // 32),
             counts.reshape(*lead, tq, tk // patch))
+
+
+# ---------------------------------------------------------------------------
+# Autotune hooks (repro.kernels.autotune): geometry = (rows, tk, patch)
+# ---------------------------------------------------------------------------
+AUTOTUNE_KNOBS = ("bitmap_block_rows",)
+_PROBE_THRESHOLD = 1.0 / 8192.0       # the paper's PSSA operating point
+
+
+def autotune_candidates(geom: tuple) -> tuple:
+    """Row-block candidates for a (rows, tk, patch) geometry."""
+    rows, tk, patch = geom
+    sizes = sorted({min(s, rows) for s in (64, 128, 256, 512, 1024)})
+    return tuple({"bitmap_block_rows": s} for s in sizes)
+
+
+def autotune_probe(geom: tuple, blocks: dict, *,
+                   interpret: bool | None = None):
+    """(jitted fn, args) the autotuner times for one block config."""
+    rows, tk, patch = geom
+    sas = jax.random.uniform(jax.random.PRNGKey(0), (rows, tk),
+                             jnp.float32) * 2e-4
+    fn = jax.jit(functools.partial(
+        patch_bitmap, patch=patch, threshold=_PROBE_THRESHOLD,
+        interpret=interpret, br=blocks["bitmap_block_rows"]))
+    return fn, (sas,)

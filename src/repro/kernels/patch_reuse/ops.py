@@ -53,6 +53,33 @@ def patch_delta(x: jax.Array, x_ref: jax.Array, patch: int,
     return delta, delta >= threshold
 
 
+# ---------------------------------------------------------------------------
+# Autotune hooks (repro.kernels.autotune): geometry = (b, t, c, patch)
+# ---------------------------------------------------------------------------
+AUTOTUNE_KNOBS = ("reuse_block_patches",)
+
+
+def autotune_candidates(geom: tuple) -> tuple:
+    """Patch-block candidates for a (b, t, c, patch) geometry."""
+    b, t, c, patch = geom
+    n_patches = t // patch
+    sizes = sorted({min(s, n_patches) for s in (8, 16, 32, 64, 128)})
+    return tuple({"reuse_block_patches": s} for s in sizes)
+
+
+def autotune_probe(geom: tuple, blocks: dict, *,
+                   interpret: bool | None = None):
+    """(jitted fn, args) the autotuner times for one block config."""
+    b, t, c, patch = geom
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, t, c), jnp.float32)
+    x_ref = x + 1e-4 * jax.random.normal(jax.random.PRNGKey(1), (b, t, c),
+                                         jnp.float32)
+    fn = jax.jit(functools.partial(
+        patch_delta, patch=patch, threshold=1e-3, interpret=interpret,
+        bp=blocks["reuse_block_patches"]))
+    return fn, (x, x_ref)
+
+
 def reuse_plan(active: jax.Array, cap: int):
     """(B, P) active bitmap -> static-width gather plan (order, gate).
 

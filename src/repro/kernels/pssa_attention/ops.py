@@ -61,3 +61,43 @@ def pssa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out, counts = res[0], res[1:]
     return (out.reshape(b, h, t, d),) + tuple(
         c.reshape(b, h, t) for c in counts)
+
+
+# ---------------------------------------------------------------------------
+# Autotune hooks (repro.kernels.autotune): geometry = (b, h, t, d, patch)
+# ---------------------------------------------------------------------------
+AUTOTUNE_KNOBS = ("attn_block_q", "attn_block_k")
+_PROBE_THRESHOLD = 1.0 / 8192.0       # the paper's PSSA operating point
+
+
+def autotune_candidates(geom: tuple) -> tuple:
+    """Block-dict candidates for a (b, h, t, d, patch) geometry.
+
+    Square (bq, bk) pairs plus the asymmetric neighbours of each —
+    capped at ``t`` (larger blocks would only pad) and deduplicated, so
+    degenerate geometries sweep a short list.
+    """
+    b, h, t, d, patch = geom
+    sizes = sorted({min(s, t) for s in (128, 256, 512, 1024)})
+    cands = [(s, s) for s in sizes]
+    cands += [(q, k) for q, k in zip(sizes, sizes[1:])]
+    cands += [(q, k) for k, q in zip(sizes, sizes[1:])]
+    seen, out = set(), []
+    for bq, bk in cands:
+        if (bq, bk) not in seen:
+            seen.add((bq, bk))
+            out.append({"attn_block_q": bq, "attn_block_k": bk})
+    return tuple(out)
+
+
+def autotune_probe(geom: tuple, blocks: dict, *,
+                   interpret: bool | None = None):
+    """(jitted fn, args) the autotuner times for one block config."""
+    b, h, t, d, patch = geom
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (b, h, t, d),
+                                 jnp.float32) for i in range(3))
+    fn = jax.jit(functools.partial(
+        pssa_attention, threshold=_PROBE_THRESHOLD, patch=patch,
+        interpret=interpret, bq=blocks["attn_block_q"],
+        bk=blocks["attn_block_k"]))
+    return fn, (q, k, v)

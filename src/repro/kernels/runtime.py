@@ -1,6 +1,6 @@
 """Shared runtime policy helpers for the Pallas op wrappers.
 
-Two concerns every ``ops.py`` wrapper has in common:
+Three concerns every ``ops.py`` wrapper (and the autotuner) has in common:
 
 * **interpret selection** — the kernels must run in Pallas interpret mode on
   CPU (the test/CI container) and compiled on a real accelerator.  The seed
@@ -13,21 +13,36 @@ Two concerns every ``ops.py`` wrapper has in common:
   blocks for non-power-of-two extents; ``pad_axis_to`` pads the operand up
   to the block multiple instead (callers slice the result back), matching
   what ``bitslice_matmul/ops.py`` always did.
+* **min-of-k wall-clock** — the block autotuner (``kernels.autotune``) and
+  every bench time jitted callables the same way: warm up outside the
+  clock, then take the MINIMUM of k block-until-ready repetitions (one
+  implementation here; ``benchmarks/timing.py`` re-exports it for the
+  bench tree).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 
 
+# backends with a real Pallas lowering: Mosaic on TPU, triton-pallas on
+# GPU (jax.default_backend() has reported the CUDA platform as "gpu"
+# historically and "cuda" in newer releases; ROCm reports "rocm")
+COMPILING_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
 def default_interpret() -> bool:
     """Pallas interpret mode iff the default backend has no real lowering.
 
-    These kernels are written against the TPU lowering (pltpu memory
-    spaces, MXU-shaped blocks), so every other backend — CPU *and* GPU —
-    runs the interpreter; only TPU compiles.
+    TPU compiles via Mosaic and GPU via triton-pallas, so both run the
+    kernels natively; only backends without a Pallas lowering (CPU — the
+    test/CI container) fall back to the interpreter.  (The seed treated
+    TPU as the only compiling backend, which forced interpret mode — and
+    with it ``KernelPolicy.auto()``'s reference routing — on GPU.)
     """
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in COMPILING_BACKENDS
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
@@ -47,3 +62,41 @@ def pad_axis_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def timed(fn, *args, reps: int = 3, warmup: int = 1):
+    """(last output, min wall seconds) of ``fn(*args)`` over ``reps``.
+
+    ``warmup`` un-timed calls run first (the first one compiles); each
+    timed call is bracketed by ``jax.block_until_ready`` so async
+    dispatch never masquerades as execution.  Min — not mean — because
+    the quantity under test is the compiled program's cost: everything
+    that inflates a sample (GC, another process, lazy page-in) is
+    one-sided noise, and a single post-compile sample drifts with
+    machine warm-up across a sweep, biasing cross-config ratios.
+    """
+    out = None
+    for _ in range(max(1, warmup)):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def min_wall_s(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Just the min wall seconds of ``timed`` (drop the output)."""
+    return timed(fn, *args, reps=reps, warmup=warmup)[1]
+
+
+def min_over(reps: int, sample) -> float:
+    """Min of ``reps`` calls to ``sample()`` (a wall-seconds thunk).
+
+    For callables that carry their own clock (e.g. the engine's
+    ``last_wall_s``) where ``timed`` cannot bracket the work itself.
+    """
+    return min(sample() for _ in range(max(1, reps)))

@@ -61,8 +61,10 @@ single host read.
 ``--kernels`` selects the per-op kernel routing (``KernelPolicy``):
 ``reference`` (materializing pure-JAX), ``fused`` (blocked Pallas
 attention, self AND cross — neither the SAS nor the cross-attention
-probability tensor materializes; stats bit-identical), or per-op
-overrides like ``self_attention=fused,ffn=dbsc``.  Interpret mode is
+probability tensor materializes; stats bit-identical), ``autotuned``
+(``fused`` with block sizes from the committed autotune table —
+``kernels.autotune``), or per-op overrides like
+``self_attention=fused,ffn=dbsc,ffn_quant=int8``.  Interpret mode is
 auto-selected per backend, so the same flag works on CPU and TPU.
 
 ``--tips`` selects the precision runtime (``PrecisionPolicy``): ``fixed``
@@ -328,8 +330,10 @@ def main():
     ap.add_argument("--kernels", default="auto",
                     help="kernel policy: 'auto' (fused on compiled "
                          "backends, reference on interpret backends), "
-                         "'reference', 'fused', or per-op overrides like "
-                         "'self_attention=fused,ffn=dbsc' "
+                         "'reference', 'fused', 'autotuned' (fused with "
+                         "the committed block-size table), or per-op "
+                         "overrides like 'self_attention=fused,ffn=dbsc,"
+                         "ffn_quant=int8' "
                          "(see repro.kernels.dispatch.KernelPolicy)")
     ap.add_argument("--tips", default="fixed",
                     help="precision policy: 'fixed', 'adaptive', or field "

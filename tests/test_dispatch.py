@@ -72,20 +72,34 @@ def test_policy_presets_and_parse():
         KernelPolicy(ffn="nope")
 
 
-def test_interpret_auto_selects_from_backend():
-    # the kernels only have a real lowering on TPU: interpret must resolve
-    # True on every other backend (CPU *and* GPU) and False on TPU — the
-    # wrappers never hardcode it (the seed's interpret=True made TPU runs
-    # interpreted).
-    assert resolve_interpret(None) == (jax.default_backend() != "tpu")
-    assert default_interpret() == (jax.default_backend() != "tpu")
-    assert default_interpret()        # this container has no TPU
+def test_interpret_auto_selects_from_backend(monkeypatch):
+    # Pallas has a real lowering on TPU (Mosaic) AND GPU (triton-pallas):
+    # interpret must resolve False on both and True only where nothing
+    # compiles (CPU — this container).  The earlier mapping treated TPU
+    # as the only compiling backend, which forced interpret mode — and
+    # ``KernelPolicy.auto()``'s reference routing — on GPU.
+    from repro.kernels import runtime
+
+    assert default_interpret()        # this container is CPU-only
+    assert resolve_interpret(None) == default_interpret()
     assert resolve_interpret(True) is True
     assert resolve_interpret(False) is False
     assert KernelPolicy().resolve_interpret() == default_interpret()
     desc = KernelPolicy.fused().describe()
     assert desc["interpret"] == "auto"
     assert desc["interpret_resolved"] == default_interpret()
+
+    # the full backend -> interpret mapping, including the two names
+    # jax has used for the CUDA platform and ROCm
+    for backend, expect in [("cpu", True), ("tpu", False), ("gpu", False),
+                            ("cuda", False), ("rocm", False)]:
+        monkeypatch.setattr(runtime.jax, "default_backend",
+                            lambda b=backend: b)
+        assert runtime.default_interpret() is expect, backend
+        assert runtime.resolve_interpret(None) is expect, backend
+        # explicit values always win over the backend
+        assert runtime.resolve_interpret(True) is True
+        assert runtime.resolve_interpret(False) is False
 
 
 def test_dispatch_table_covers_policy_choices():
