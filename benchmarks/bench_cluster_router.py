@@ -1,0 +1,195 @@
+"""BENCH — Cluster router: replica scaling, SLO degradation, ledger identity.
+
+Three claims from DESIGN.md §13, measured on one engine config:
+
+1. **Replica sweep** {1, 2, 4}: the same saturating trace served by N
+   slot-state replicas behind occupancy routing.  Records p50/p95
+   enqueue->image latency and steps-normalized goodput per replica
+   count, plus the invariant that matters: the MERGED integer ledger
+   (``pipeline.energy_report_cluster``) is bit-identical at every
+   replica count AND to the same requests served one-shot.
+
+2. **Overload**: a burst larger than the whole cluster's slots, with a
+   round-denominated SLO.  Degrade-don't-queue admission serves late
+   requests at a lower bank tier; the queueing baseline (the positive
+   control) serves everyone at the requested tier, late.  Round
+   arithmetic makes both attainments DETERMINISTIC — the committed
+   numbers reproduce exactly on any machine.
+
+3. **Streaming previews**: progressive preview decode every K rounds;
+   time-to-first-pixel (first preview latency) lands well before the
+   finished image.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.diffusion.pipeline import PipelineConfig, energy_report_multi
+    from repro.diffusion.sampler import DDIMConfig
+    from repro.diffusion.solvers import SamplerPolicy
+    from repro.launch.router import ClusterRouter, RouterSLO
+    from repro.launch.scheduler import make_requests
+
+    steps = 5
+    n_requests = 12
+    slots = 2
+    replica_counts = (1, 2, 4)
+
+    cfg = PipelineConfig.smoke()
+    cfg = dataclasses.replace(
+        cfg,
+        ddim=DDIMConfig(num_inference_steps=steps, guidance_scale=1.0,
+                        tips_active_iters=max(1, steps * 20 // 25)))
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+
+    # ---- 1. replica sweep (saturating trace: whole queue at t=0) -------
+    sweep = {}
+    energies = {}
+    compile_s = 0.0
+    request_sets = {}
+    for r in replica_counts:
+        router = ClusterRouter(eng, r, slots)
+        compile_s += router.warmup()   # shared executables: ~free after 1
+        reqs = make_requests(cfg, n_requests, seed=7)
+        m = router.run(reqs, ledger=True)
+        m.pop("states")
+        assert m["dropped"] == 0
+        energies[r] = m["energy"]
+        request_sets[r] = reqs
+        sweep[f"replicas_{r}"] = {
+            "latency_s": m["latency_s"],
+            "queue_wait_s": m["queue_wait_s"],
+            "goodput_imgs_per_s": m["goodput_imgs_per_s"],
+            "goodput_steps_per_s": m["goodput_steps_per_s"],
+            "makespan_s": m["makespan_s"],
+            "mean_occupancy": m["mean_occupancy"],
+            "rounds": m["rounds"],
+        }
+    ledger_bit_identical_across_replicas = all(
+        energies[r] == energies[replica_counts[0]] for r in replica_counts)
+    images_bit_identical_across_replicas = all(
+        np.array_equal(a.image, b.image)
+        for r in replica_counts[1:]
+        for a, b in zip(request_sets[replica_counts[0]], request_sets[r]))
+
+    # one-shot oracle at the slot batch width (the bit-identity contract
+    # is per batch signature)
+    fetched = []
+    reqs0 = request_sets[replica_counts[0]]
+    images_bit_identical_vs_one_shot = True
+    for i in range(0, n_requests, slots):
+        chunk = reqs0[i:i + slots]
+        out = eng.generate(
+            jnp.concatenate([q.tokens for q in chunk], axis=0), None,
+            latents=jnp.concatenate([q.latents for q in chunk], axis=0))
+        arr = np.asarray(out.images)
+        images_bit_identical_vs_one_shot &= all(
+            np.array_equal(arr[j], q.image) for j, q in enumerate(chunk))
+        fetched.append(out.stats.ledger_fetch())
+    one_shot_energy = {k: float(v) for k, v in
+                       energy_report_multi(cfg, fetched).summary().items()}
+    energy_bit_identical_vs_one_shot = (
+        energies[replica_counts[0]] == one_shot_energy)
+
+    # ---- 2. overload: degrade-don't-queue vs queueing ------------------
+    bank = (SamplerPolicy.parse("ddim,steps=4"),
+            SamplerPolicy.parse("ddim,steps=2"))
+    deadline = 6
+
+    def overload_requests():
+        reqs = make_requests(cfg, 6, seed=7, bank=bank)
+        for q in reqs:                 # everyone asks the expensive tier
+            q.policy_index = 0
+            q.tier = bank[0].label()
+        return reqs
+
+    def overload_run(degrade):
+        router = ClusterRouter(
+            eng, 1, slots, bank=bank,
+            slo=RouterSLO(deadline_steps=deadline, degrade=degrade))
+        router.warmup()
+        reqs = overload_requests()
+        m = router.run(reqs, ledger=True)
+        m.pop("states")
+        assert m["dropped"] == 0
+        return {
+            "slo_attainment": m["slo"]["attainment"],
+            "slo_met": m["slo"]["met"],
+            "finish_rounds": sorted(q.finish_round - q.arrival_round
+                                    for q in reqs),
+            "degraded_per_tier": m.get("degraded_per_tier", {}),
+            "per_policy_images": [e["images"]
+                                  for e in m["energy"]["per_policy"]],
+            "latency_s": m["latency_s"],
+        }
+
+    degrade = overload_run(True)
+    queue = overload_run(False)
+    degradation_beats_queueing = (degrade["slo_attainment"]
+                                  > queue["slo_attainment"])
+
+    # ---- 3. streaming previews (time-to-first-pixel) -------------------
+    router = ClusterRouter(eng, 2, slots, preview_every=2)
+    router.warmup()
+    reqs = make_requests(cfg, 8, seed=7)
+    m = router.run(reqs, ledger=False)
+    m.pop("states")
+    firsts = [q.first_preview_s - q.arrival_s for q in reqs
+              if q.first_preview_s is not None]
+    preview = {
+        "every": 2,
+        "decodes": m["events"]["preview"],
+        "requests_previewed": len(firsts),
+        "first_preview_latency_s": float(np.mean(firsts)),
+        "finished_latency_s": m["latency_s"]["mean"],
+        "ttfp_improvement": m["latency_s"]["mean"]
+        / max(float(np.mean(firsts)), 1e-9),
+    }
+
+    meets_target = bool(
+        ledger_bit_identical_across_replicas
+        and images_bit_identical_across_replicas
+        and energy_bit_identical_vs_one_shot
+        and images_bit_identical_vs_one_shot
+        and degradation_beats_queueing)
+    return {
+        "config": {"steps": steps, "requests": n_requests,
+                   "slots_per_replica": slots,
+                   "replica_counts": list(replica_counts),
+                   "latent": cfg.unet.latent_size},
+        "compile_s": compile_s,
+        "replica_sweep": sweep,
+        "ledger_bit_identical_across_replicas":
+            ledger_bit_identical_across_replicas,
+        "images_bit_identical_across_replicas":
+            images_bit_identical_across_replicas,
+        "energy_bit_identical_vs_one_shot":
+            energy_bit_identical_vs_one_shot,
+        "images_bit_identical_vs_one_shot":
+            images_bit_identical_vs_one_shot,
+        "energy_headline_mj_per_iter":
+            energies[replica_counts[0]]["mj_per_iter_with_ema"],
+        "overload": {
+            "bank": [p.label() for p in bank],
+            "deadline_steps": deadline,
+            "degrade": degrade,
+            "queue_baseline": queue,
+            "degradation_beats_queueing": degradation_beats_queueing,
+        },
+        "preview": preview,
+        "meets_target": meets_target,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -26,6 +26,7 @@ import numpy as np
 from benchmarks.timing import min_wall_s
 from repro.core.attention import (self_attention_pssa,
                                   self_attention_pssa_fused)
+from repro.core.policies import ServePolicies
 from repro.diffusion.engine import DiffusionEngine
 from repro.diffusion.pipeline import PipelineConfig
 from repro.kernels.dispatch import KernelPolicy
@@ -86,7 +87,8 @@ def _engine_record(steps, batch, reps):
     stats = {}
     for name, policy in [("reference", KernelPolicy.reference()),
                          ("fused", KernelPolicy.fused())]:
-        eng = DiffusionEngine(cfg, key=key, kernel_policy=policy)
+        eng = DiffusionEngine(cfg, key=key,
+                              policies=ServePolicies(kernels=policy))
         eng.generate(toks, jax.random.PRNGKey(2))          # compile
         best = float("inf")
         for r in range(reps):

@@ -55,7 +55,7 @@ DEFAULT_BENCHES = ("ema_breakdown", "pssa", "tips", "dbsc", "energy_iter",
                    "engine", "fused_attention", "fused_cross_attention",
                    "compiled_kernels", "sharded_engine",
                    "continuous_serving", "temporal_reuse",
-                   "phase_sampling", "dit_serving")
+                   "phase_sampling", "dit_serving", "cluster_router")
 
 _WALL_MARKERS = ("wall", "imgs_per_s", "speedup", "compile_s", "latency",
                  "goodput", "makespan", "scaling", "efficiency",

@@ -37,6 +37,7 @@ BENCHES = {
     "temporal_reuse": "benchmarks.bench_temporal_reuse",
     "phase_sampling": "benchmarks.bench_phase_sampling",
     "dit_serving": "benchmarks.bench_dit_serving",
+    "cluster_router": "benchmarks.bench_cluster_router",
     "roofline": "benchmarks.roofline",
 }
 

@@ -22,67 +22,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.diffusion.engine import DiffusionEngine
-from repro.diffusion.pipeline import (PipelineConfig, StableDiffusionPipeline,
-                                      energy_report)
-from repro.diffusion.sampler import DDIMConfig
+from repro.diffusion.pipeline import StableDiffusionPipeline, energy_report
 
 
 def main():
+    from repro.launch.cli import (add_policy_args, config_from_args,
+                                  policies_from_args)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=5,
                     help="DDIM iterations (paper: 25; CPU demo default 5)")
-    ap.add_argument("--model", choices=("unet", "dit"), default="unet",
-                    help="denoiser family (DESIGN.md §11): BK-SDM UNet "
-                         "(default) or DiT-S/2; both run through the same "
-                         "engine, kernels and energy ledger")
     ap.add_argument("--guidance", type=float, default=1.0)
     ap.add_argument("--python-loop", action="store_true",
                     help="seed-style per-step dispatch instead of the "
                          "jitted engine")
-    ap.add_argument("--kernels", default="auto",
-                    help="kernel policy: 'auto' (backend-aware), "
-                         "'reference', 'fused', 'autotuned' (fused with "
-                         "the committed block-size table), or per-op "
-                         "overrides like 'ffn=dbsc,ffn_quant=int8' "
-                         "(see repro.kernels.dispatch)")
-    ap.add_argument("--tips", default="fixed",
-                    help="precision policy: 'fixed', 'adaptive', or field "
-                         "overrides like 'adaptive,target=0.5,mid=true' "
-                         "(see repro.core.precision)")
-    ap.add_argument("--solver", default="",
-                    help="sampler policy: a tier (draft|balanced|quality), "
-                         "a solver (ddim|plms|dpm2m), or a spec like "
-                         "'dpm2m,steps=12,phases=detail_guard' "
-                         "(see repro.diffusion.solvers); overrides --steps "
-                         "when the spec carries its own budget")
+    # the policy surface (--model/--kernels/--tips/--reuse/--solver) is
+    # the SAME wiring serve_diffusion and the cluster router register —
+    # one ServePolicies bundle behind every CLI (DESIGN.md §13)
+    add_policy_args(ap, tiers=False)
     args = ap.parse_args()
 
-    from repro.core.precision import PrecisionPolicy
-    from repro.diffusion.solvers import SamplerPolicy, TIERS
-    from repro.kernels.dispatch import KernelPolicy
+    from repro.diffusion.solvers import TIERS
 
-    policy = None
-    if args.solver:
-        if args.python_loop:
-            ap.error("--solver needs the jitted engine (the seed-style "
-                     "python loop has no SamplerPolicy runtime)")
-        policy = SamplerPolicy.parse(args.solver)
-        if "steps=" not in args.solver and args.solver not in TIERS:
-            policy = dataclasses.replace(policy, num_steps=args.steps)
-    cfg = PipelineConfig.smoke()
-    if args.model == "dit":
-        from repro.diffusion.dit import DiTConfig
-        cfg = dataclasses.replace(cfg, unet=DiTConfig().smoke())
-    cfg = dataclasses.replace(
-        cfg,
-        unet=dataclasses.replace(cfg.unet,
-                                 kernel_policy=KernelPolicy.parse(
-                                     args.kernels),
-                                 precision=PrecisionPolicy.parse(args.tips)),
-        ddim=DDIMConfig(
-            num_inference_steps=args.steps,
-            guidance_scale=args.guidance,
-            tips_active_iters=max(1, args.steps * 20 // 25)))
+    if args.solver and args.python_loop:
+        ap.error("--solver needs the jitted engine (the seed-style "
+                 "python loop has no SamplerPolicy runtime)")
+    policies = policies_from_args(args)
+    policy = policies.sampler
+    if policy is not None and "steps=" not in args.solver \
+            and args.solver not in TIERS:
+        policy = dataclasses.replace(policy, num_steps=args.steps)
+    cfg = config_from_args(args, policies=policies)
     n_steps = policy.num_steps if policy is not None else args.steps
     sampler_desc = (f"{policy.solver} x{policy.num_steps}"
                     + (" (phased)" if policy.phases else "")

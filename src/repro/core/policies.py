@@ -1,0 +1,191 @@
+"""ServePolicies — the unified serving-policy bundle (DESIGN.md §13).
+
+The engine/serving surface grew four parallel policy objects — kernel
+routing (``kernels.dispatch.KernelPolicy``), TIPS/DBSC precision
+(``core.precision.PrecisionPolicy``), temporal patch reuse
+(``core.reuse.ReusePolicy``) and sampling (``diffusion.solvers
+.SamplerPolicy`` / bank) — each threaded as its own kwarg through
+``DiffusionEngine``, ``generate``, both CLIs and the schedulers, plus two
+legacy fold-in knobs on ``UNetConfig``.  Every call site had to agree on
+all four or silently fork an executable-cache entry.
+
+``ServePolicies`` is the one frozen/hashable bundle they all consume:
+
+* ``parse()`` builds it from the CLI flag specs (``--kernels``,
+  ``--tips``, ``--reuse``, ``--solver``, ``--tiers``) — the shared
+  wiring in ``repro.launch.cli`` feeds both CLIs and the cluster router
+  through this single entry point;
+* ``key()`` is the single policy component of the engine's executable
+  cache keys — legacy spellings (per-policy kwargs, ``UNetConfig``
+  fold-in knobs) normalize through the ``effective_*`` accessors into
+  the SAME key, so old and new call sites share executables;
+* ``describe()`` is the JSON view serving metrics and bench records
+  embed, and it round-trips: ``parse(**specs_of(describe()))``
+  reconstructs an equal bundle.
+
+The legacy kwargs keep working as deprecated aliases (they emit
+``DeprecationWarning`` with the ``repro legacy:`` message prefix — the
+tier-1 suite runs with ``-W error::DeprecationWarning`` plus an
+exclusion list for exactly this prefix, proving internal code paths are
+warning-free while tests exercise the aliases deliberately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.reuse import ReusePolicy
+from repro.kernels.dispatch import KernelPolicy
+
+if False:  # typing only — see _solvers() for the runtime import
+    from repro.diffusion.solvers import SamplerPolicy  # noqa: F401
+
+
+def _solvers():
+    # repro.diffusion.engine imports this module at its top level, and
+    # the repro.diffusion package __init__ pulls engine in — importing
+    # solvers lazily keeps ServePolicies importable from either side of
+    # that cycle (the function runs only after this module is complete)
+    from repro.diffusion import solvers
+
+    return solvers
+
+#: Message prefix of every legacy-alias DeprecationWarning in this repo.
+#: pyproject.toml's filterwarnings exclusion list keys on it: the tier-1
+#: suite errors on any OTHER DeprecationWarning, so internal code paths
+#: are proven warning-free while the aliases stay usable (and tested).
+LEGACY_WARNING_PREFIX = "repro legacy: "
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicies:
+    """Frozen bundle of every serving-policy axis.
+
+    ``sampler`` / ``bank`` follow the engine's contract: ``sampler`` is
+    the per-request solver/step-budget policy, ``bank`` the static tuple
+    of DISTINCT policies a mixed-tier slot batch may carry (``sampler``
+    must be an entry of ``bank`` when both are set; a bank without a
+    sampler serves tiered traffic where each request picks its entry by
+    ``policy_index``).  ``None`` on either keeps the config's DDIM
+    schedule — byte-identical to the pre-bundle default path.
+    """
+    kernels: KernelPolicy = KernelPolicy()
+    precision: PrecisionPolicy = PrecisionPolicy()
+    reuse: ReusePolicy = ReusePolicy()
+    sampler: Optional[SamplerPolicy] = None
+    bank: Optional[Tuple[SamplerPolicy, ...]] = None
+
+    def __post_init__(self):
+        if self.bank is not None:
+            object.__setattr__(self, "bank",
+                               _solvers().as_bank(self.bank))
+            if self.sampler is not None and self.sampler not in self.bank:
+                raise ValueError(
+                    f"ServePolicies.sampler {self.sampler.key()} is not an "
+                    f"entry of the bank {[p.key() for p in self.bank]}")
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def parse(cls, kernels: str = "auto", tips: str = "fixed",
+              reuse: str = "off", solver: str = "",
+              tiers=None) -> "ServePolicies":
+        """Build the bundle from the CLI flag specs.
+
+        Mirrors the flags ``launch.cli.add_policy_args`` registers:
+        ``kernels``/``tips``/``reuse`` are the per-axis policy specs,
+        ``solver`` a single ``SamplerPolicy`` spec applied to every
+        request, ``tiers`` a list of specs forming a mixed-tier bank.
+        ``solver`` and ``tiers`` are exclusive (a bank already names
+        every policy in flight — the same contract the CLIs enforce).
+        """
+        if solver and tiers:
+            raise ValueError(
+                "ServePolicies.parse: solver= and tiers= are exclusive "
+                "(a bank already names every policy in flight)")
+        bank = (_solvers().as_bank(tuple(_solvers().SamplerPolicy.parse(t)
+                                          for t in tiers))
+                if tiers else None)
+        return cls(kernels=KernelPolicy.parse(kernels),
+                   precision=PrecisionPolicy.parse(tips),
+                   reuse=ReusePolicy.parse(reuse),
+                   sampler=(_solvers().SamplerPolicy.parse(solver)
+                        if solver else None),
+                   bank=bank)
+
+    @classmethod
+    def from_config(cls, unet_cfg, sampler=None, bank=None
+                    ) -> "ServePolicies":
+        """Bundle the EFFECTIVE policies of a denoiser config.
+
+        Reads through the ``effective_*`` accessors, so a config still
+        carrying the legacy fold-in knobs (``use_dbsc_kernel``,
+        ``tips_threshold``) lands on the same bundle — and therefore the
+        same executable-cache key — as the modern spelling.
+        """
+        return cls(kernels=unet_cfg.effective_kernel_policy(),
+                   precision=unet_cfg.effective_precision(),
+                   reuse=unet_cfg.reuse_policy,
+                   sampler=sampler,
+                   bank=_solvers().as_bank(bank) if bank is not None
+                   else None)
+
+    # -- application -----------------------------------------------------
+    def apply(self, cfg):
+        """Pipeline config with this bundle's per-axis policies installed.
+
+        Returns ``cfg`` (a ``pipeline.PipelineConfig``) with
+        ``cfg.unet``'s ``kernel_policy`` / ``precision`` /
+        ``reuse_policy`` replaced; the sampler axes are runtime
+        arguments, not config fields, so they don't touch the config.
+        """
+        return dataclasses.replace(
+            cfg, unet=dataclasses.replace(cfg.unet,
+                                          kernel_policy=self.kernels,
+                                          precision=self.precision,
+                                          reuse_policy=self.reuse))
+
+    def with_sampling(self, sampler=None, bank=None) -> "ServePolicies":
+        """Copy with the sampling axes replaced (kernel/precision/reuse
+        untouched) — how the engine folds per-call sampler arguments into
+        the cache key."""
+        return dataclasses.replace(
+            self, sampler=sampler,
+            bank=_solvers().as_bank(bank) if bank is not None else None)
+
+    # -- views -----------------------------------------------------------
+    def key(self) -> tuple:
+        """The single policy component of an executable-cache key.
+
+        A plain tuple of the five frozen/hashable axes.  Everything that
+        can change traced computation is in here; nothing else is —
+        equal bundles (however spelled: modern kwargs, legacy aliases,
+        config fold-ins) share executables.
+        """
+        return (self.kernels, self.precision, self.reuse,
+                self.sampler, self.bank)
+
+    def describe(self) -> dict:
+        """JSON-friendly view for serving metrics / bench records."""
+        return {
+            "kernels": self.kernels.describe(),
+            "precision": self.precision.describe(),
+            "reuse": self.reuse.describe(),
+            "sampler": (None if self.sampler is None
+                        else self.sampler.describe()),
+            "bank": (None if self.bank is None
+                     else [p.describe() for p in self.bank]),
+        }
+
+
+def legacy_warning(message: str) -> None:
+    """Emit one repo-standard legacy-alias DeprecationWarning.
+
+    All deprecation messages share ``LEGACY_WARNING_PREFIX`` so the
+    tier-1 ``filterwarnings`` exclusion list can single them out while
+    every other DeprecationWarning stays an error.
+    """
+    import warnings
+
+    warnings.warn(LEGACY_WARNING_PREFIX + message, DeprecationWarning,
+                  stacklevel=3)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.policies import ServePolicies, legacy_warning
 from repro.core.reuse import ReuseCache, reuse_cache_zeros
 from repro.diffusion import solvers as solvers_mod
 from repro.diffusion.denoiser import make_denoiser
@@ -133,33 +134,50 @@ class DiffusionEngine:
     ``generate(prompt_tokens, key, uncond_tokens=...)``; pass
     ``uncond_tokens`` iff ``cfg.ddim.guidance_scale != 1.0`` (a mismatch
     raises ``ValueError``).
-    ``kernel_policy`` (a ``repro.kernels.dispatch.KernelPolicy``) overrides
-    the UNet's per-op kernel routing — e.g. ``KernelPolicy.fused()`` runs
-    self-attention through the blocked Pallas kernel so the score matrix
-    never materializes; stats stay bit-identical to the reference policy.
-    ``precision_policy`` (a ``repro.core.precision.PrecisionPolicy``)
-    overrides the UNet's TIPS/DBSC precision runtime; both policies are
-    part of the executable-cache key, so changing either on a live engine
-    (``set_precision``) retraces instead of reusing a stale executable.
+
+    ``policies`` (a ``repro.core.policies.ServePolicies``) is THE policy
+    surface (DESIGN.md §13): one frozen bundle of kernel routing,
+    TIPS/DBSC precision, temporal patch reuse, and the sampling defaults
+    (``sampler`` for ``generate``, ``bank`` for ``init_slots``).  The
+    bundle — re-derived through the config's ``effective_*`` accessors —
+    is the single policy component of every executable-cache key, so any
+    spelling (``policies=``, the deprecated per-policy kwargs below, or
+    the legacy ``UNetConfig`` fold-in knobs) that resolves to the same
+    effective policies shares executables.
+
+    ``kernel_policy`` / ``precision_policy`` / ``reuse_policy`` are
+    deprecated aliases that fold into the bundle (DeprecationWarning);
     ``mesh`` switches on data-parallel sharded execution (see module
     docstring); ``None`` keeps the seed single-device behaviour untouched.
     """
 
     def __init__(self, cfg, key=None, kernel_policy=None, mesh=None,
-                 precision_policy=None, reuse_policy=None):
-        if kernel_policy is not None:
-            # route the UNet hot path per the policy (kernels.dispatch)
-            cfg = dataclasses.replace(
-                cfg, unet=dataclasses.replace(cfg.unet,
-                                              kernel_policy=kernel_policy))
-        if precision_policy is not None:
-            cfg = dataclasses.replace(
-                cfg, unet=dataclasses.replace(cfg.unet,
-                                              precision=precision_policy))
-        if reuse_policy is not None:
-            cfg = dataclasses.replace(
-                cfg, unet=dataclasses.replace(cfg.unet,
-                                              reuse_policy=reuse_policy))
+                 precision_policy=None, reuse_policy=None, policies=None):
+        if (kernel_policy is not None or precision_policy is not None
+                or reuse_policy is not None):
+            if policies is not None:
+                raise ValueError(
+                    "pass either policies=ServePolicies(...) or the "
+                    "legacy per-policy kwargs, not both")
+            legacy_warning(
+                "DiffusionEngine(kernel_policy=/precision_policy=/"
+                "reuse_policy=) are deprecated aliases — pass "
+                "policies=ServePolicies(kernels=..., precision=..., "
+                "reuse=...); cache keys and ledgers are identical")
+            policies = ServePolicies.from_config(cfg.unet)
+            if kernel_policy is not None:
+                policies = dataclasses.replace(policies,
+                                               kernels=kernel_policy)
+            if precision_policy is not None:
+                policies = dataclasses.replace(policies,
+                                               precision=precision_policy)
+            if reuse_policy is not None:
+                policies = dataclasses.replace(policies,
+                                               reuse=reuse_policy)
+        self._default_sampler = policies.sampler if policies else None
+        self._default_bank = policies.bank if policies else None
+        if policies is not None:
+            cfg = policies.apply(cfg)
         if cfg.unet.reuse_policy.enabled and cfg.unet.reuse_policy.capacity < 1.0:
             # a fresh engine run starts from an INVALID cache: every patch
             # of every row is active on step 0, so a sub-1.0 static gather
@@ -274,15 +292,46 @@ class DiffusionEngine:
         self.denoiser = make_denoiser(self.cfg.unet)
         return self
 
+    @property
+    def policies(self) -> ServePolicies:
+        """The engine's effective ``ServePolicies`` bundle.
+
+        Re-derived from the live config through the ``effective_*``
+        accessors (so legacy fold-in knobs and ``set_precision`` swaps
+        are reflected), with the engine-level sampling defaults riding
+        along.  This is what routers/schedulers read instead of the four
+        per-axis kwargs.
+        """
+        return ServePolicies.from_config(self.cfg.unet,
+                                         sampler=self._default_sampler,
+                                         bank=self._default_bank)
+
+    def _policy_key(self, sampler_policy=None,
+                    sampler_bank=None) -> ServePolicies:
+        """The single policy component of an executable-cache key.
+
+        One frozen ``ServePolicies`` value per distinct effective policy
+        set — legacy spellings normalize through ``effective_*`` to the
+        same bundle, so they share executables with the modern API.
+        """
+        return ServePolicies.from_config(self.cfg.unet,
+                                         sampler=sampler_policy,
+                                         bank=sampler_bank)
+
+    def _cache_key(self, batch: int, use_cfg: bool,
+                   stats_rows: Optional[int] = None,
+                   sampler_policy=None, sampler_bank=None) -> tuple:
+        # positions 0-3 are load-bearing (tests introspect them); the
+        # ServePolicies bundle is THE policy tail — a change on any
+        # policy axis retraces
+        return (batch, use_cfg, stats_rows, mesh_signature(self.mesh),
+                self._policy_key(sampler_policy, sampler_bank))
+
     def _get_compiled(self, batch: int, use_cfg: bool,
                       stats_rows: Optional[int] = None,
                       sampler_policy=None, sampler_bank=None):
-        # positions 0-3 are load-bearing (tests introspect them); the
-        # policy objects are appended so a policy change retraces
-        key = (batch, use_cfg, stats_rows, mesh_signature(self.mesh),
-               self.cfg.unet.effective_kernel_policy(),
-               self.cfg.unet.effective_precision(),
-               self.cfg.unet.reuse_policy, sampler_policy, sampler_bank)
+        key = self._cache_key(batch, use_cfg, stats_rows, sampler_policy,
+                              sampler_bank)
         fn = self._compiled.get(key)
         if fn is None:
             # under a bank the policy index is a RUNTIME operand (a (B,)
@@ -347,8 +396,20 @@ class DiffusionEngine:
         (DESIGN.md §10).  It joins the cache key too.
         """
         cfg = self.cfg
+        if (sampler_policy is None and sampler_bank is None
+                and self._default_sampler is not None):
+            # engine-level sampling defaults from the ServePolicies
+            # bundle (a bank without a sampler only feeds init_slots —
+            # one-shot generate needs a concrete policy)
+            sampler_policy = self._default_sampler
+            sampler_bank = self._default_bank
         if sampler_bank is not None:
             sampler_bank = solvers_mod.as_bank(sampler_bank)
+            if sampler_policy not in sampler_bank:
+                raise ValueError(
+                    f"sampler_policy {sampler_policy and sampler_policy.key()}"
+                    f" is not an entry of sampler_bank "
+                    f"{[p.key() for p in sampler_bank]}")
         use_cfg = _check_cfg_inputs(cfg.ddim.guidance_scale, uncond_tokens)
         batch = prompt_tokens.shape[0]
         if self.mesh is not None and batch % self.dp_size:
@@ -364,11 +425,6 @@ class DiffusionEngine:
         fn = self._get_compiled(batch, use_cfg, stats_rows, sampler_policy,
                                 sampler_bank)
         if sampler_bank is not None:
-            if sampler_policy not in sampler_bank:
-                raise ValueError(
-                    f"sampler_policy {sampler_policy and sampler_policy.key()}"
-                    f" is not an entry of sampler_bank "
-                    f"{[p.key() for p in sampler_bank]}")
             pid = jnp.full((batch,), sampler_bank.index(sampler_policy),
                            jnp.int32)
         t0 = time.perf_counter()
@@ -431,6 +487,16 @@ class DiffusionEngine:
         ``p``'s step-``i`` counters, so per-policy energy normalization
         stays exact (``pipeline.energy_report_banked``).  ``bank=None``
         is the legacy single-schedule state, untouched.
+
+        Replica safety (DESIGN.md §13): the slot API is functional —
+        state in, state out, with donation consuming only the PASSED
+        state's buffers — so one engine may drive N independent
+        ``SlotState``s ("replicas") through the SAME cached executables.
+        Each replica's ``accum`` is its own integer ledger; summing them
+        (``pipeline.merge_ledger_accums``) reproduces the one-shot
+        headline bit-for-bit at any replica count or admission order.
+        The cluster router (``repro.launch.router``) is built on exactly
+        this: call ``init_slots`` once per replica.
         """
         if self.mesh is not None:
             raise ValueError(
@@ -439,6 +505,8 @@ class DiffusionEngine:
                 "serving for mesh execution)")
         if num_slots < 1:
             raise ValueError(f"num_slots={num_slots} must be >= 1")
+        if bank is None:
+            bank = self._default_bank
         cfg = self.cfg
         s, c = cfg.unet.latent_size, cfg.unet.in_channels
         ctx_shape = (num_slots, cfg.text.max_len, cfg.text.d_model)
@@ -603,9 +671,7 @@ class DiffusionEngine:
         serving run.  Wall seconds land in ``self.last_wall_s``.
         """
         key = (state.num_slots, state.uncond_context is not None,
-               self.cfg.unet.effective_kernel_policy(),
-               self.cfg.unet.effective_precision(),
-               self.cfg.unet.reuse_policy, state.bank)
+               self._policy_key(None, state.bank))
         fn = self._slot_compiled.get(key)
         if fn is None:
             fn = jax.jit(self._slot_step_traced, donate_argnums=(0,))
@@ -668,6 +734,21 @@ class DiffusionEngine:
             out.append(self._decode_fn(state.latents[sel]))
             i += c
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
+
+    def decode_preview(self, state: SlotState, slots) -> jax.Array:
+        """Progressive preview decode of IN-FLIGHT slot latents.
+
+        Decodes the named rows at whatever denoising iteration each has
+        reached — the time-to-first-pixel path: a router calls this every
+        K steps so a client sees the image sharpen while its slot is
+        still denoising.  Runs through the SAME cached power-of-two
+        chunked decode executables as retirement decode (``decode_slots``
+        — a preview of a row that just finished is bit-identical to its
+        final image), and the call is dispatched asynchronously like any
+        jax computation: the router materializes the pixels off the hot
+        ``slot_step`` loop.
+        """
+        return self.decode_slots(state, list(slots))
 
     def retire(self, state: SlotState, slots) -> SlotState:
         """Free finished slots (after decoding); rows become admissible."""

@@ -461,6 +461,51 @@ def energy_report_from_accum(cfg: "PipelineConfig", accum,
                               full_geometry=full_geometry)
 
 
+def merge_ledger_accums(accums) -> "LedgerAccum":
+    """Sum per-replica ``LedgerAccum``s into one cluster accumulator.
+
+    The multi-replica ledger primitive (DESIGN.md §13): every replica's
+    slot runtime scatters INTEGER counters into the same per-iteration
+    (or per-(policy, step)) bucket layout, and integer addition is exact,
+    associative and commutative — so the merged accumulator, and every
+    report derived from it, is bit-identical at ANY replica count,
+    routing decision, or admission order that serves the same requests.
+    This is the cluster-scale analogue of ``energy_report_multi``'s
+    sum-before-divide rule for micro-batch serving.
+    """
+    accums = list(accums)
+    if not accums:
+        raise ValueError("merge_ledger_accums: no accumulators")
+    shapes = {tuple(a.nnz.shape) for a in accums}
+    if len(shapes) > 1:
+        raise ValueError(
+            f"merge_ledger_accums: mismatched bucket layouts {shapes} — "
+            f"replicas must share one bank/schedule")
+    merged = accums[0]
+    for a in accums[1:]:
+        merged = jax.tree_util.tree_map(lambda x, y: x + y, merged, a)
+    return merged
+
+
+def energy_report_cluster(cfg: "PipelineConfig", accums, bank=None,
+                          full_geometry: bool = True):
+    """Energy report for a multi-replica (cluster-router) serving run.
+
+    ``accums``: one drained ``LedgerAccum`` per replica.  Merged with
+    :func:`merge_ledger_accums`, then reported through the same tail as
+    single-replica slot serving — :func:`energy_report_banked` when the
+    replicas served a sampler ``bank``, :func:`energy_report_from_accum`
+    otherwise — so the cluster headline is bit-identical to one replica,
+    and to the same requests served one-shot.
+    """
+    merged = merge_ledger_accums(accums)
+    if bank is not None:
+        return energy_report_banked(cfg, merged, bank,
+                                    full_geometry=full_geometry)
+    return energy_report_from_accum(cfg, merged,
+                                    full_geometry=full_geometry)
+
+
 def phase_breakdown_from_accum(cfg: "PipelineConfig", accum, bank) -> list:
     """Per-policy, per-phase realized ratios from a banked accumulator.
 

@@ -91,6 +91,30 @@ class UNetConfig:
 
     dtype: str = "float32"
 
+    def __post_init__(self):
+        # the legacy fold-in knobs are deprecated aliases of the policy
+        # objects (DESIGN.md §13): warn at the spelling site — the
+        # construction that sets a non-default value — not in the
+        # effective_* reads, which internal code calls on every trace.
+        # Function-local import: core.policies imports diffusion.solvers,
+        # and this module loads first in the package __init__.
+        legacy_default = next(f.default for f in dataclasses.fields(self)
+                              if f.name == "tips_threshold")
+        if self.use_dbsc_kernel:
+            from repro.core.policies import legacy_warning
+            legacy_warning(
+                "UNetConfig.use_dbsc_kernel is a deprecated alias — set "
+                "kernel_policy=KernelPolicy(ffn='dbsc') (or "
+                "ServePolicies(kernels=...)); the cache key and ledger "
+                "are identical either way")
+        if self.tips_threshold != legacy_default:
+            from repro.core.policies import legacy_warning
+            legacy_warning(
+                "UNetConfig.tips_threshold is a deprecated alias — set "
+                "precision=PrecisionPolicy(threshold=...) (or "
+                "ServePolicies(precision=...)); the cache key and ledger "
+                "are identical either way")
+
     def patch_size(self, resolution: int) -> int:
         """PSXU patch width at a given feature-map resolution (16/32/64)."""
         return min(64, max(16, resolution))

@@ -53,6 +53,13 @@ class Request:
     admitted_s: Optional[float] = None
     finished_s: Optional[float] = None
     image: object = None
+    # filled by the cluster router (repro.launch.router):
+    replica: Optional[int] = None   # replica that served the request
+    degraded_from: str = ""         # original tier label if SLO-degraded
+    arrival_round: Optional[int] = None   # router round of arrival
+    finish_round: Optional[int] = None    # router round the image finished
+    previews: int = 0               # progressive preview decodes streamed
+    first_preview_s: Optional[float] = None  # time-to-first-pixel proxy
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -172,6 +179,17 @@ def apply_trace(requests: list, arrivals: list) -> list:
     return requests
 
 
+def poll_arrivals(pending: list, ready: list, now: float) -> None:
+    """Move every request whose ``arrival_s`` has passed onto ``ready``.
+
+    ``pending`` must be sorted by ``(arrival_s, rid)``; FIFO order within
+    the ready queue follows from that sort.  Shared by both schedulers
+    and the cluster router so arrival gating cannot drift between them.
+    """
+    while pending and pending[0].arrival_s <= now:
+        ready.append(pending.pop(0))
+
+
 def _lat_summary(lats) -> dict:
     lats = np.asarray(lats, dtype=np.float64)
     return {
@@ -211,6 +229,14 @@ def _latency_metrics(requests: list, makespan_s: float,
                 "latency_s": _lat_summary(
                     [r.latency_s for r in requests if r.tier == t])}
             for t in tiers}
+    degraded = sorted({r.degraded_from for r in requests if r.degraded_from})
+    if degraded:
+        # SLO-aware admission (router): per ORIGINAL tier, how many
+        # requests were served at a lower tier instead of queueing
+        out["degraded_per_tier"] = {
+            t: sum(r.degraded_from == t for r in requests) for t in degraded}
+        out["degraded_requests"] = sum(bool(r.degraded_from)
+                                       for r in requests)
     return out
 
 
@@ -235,6 +261,10 @@ class ContinuousScheduler:
 
         self.engine = engine
         self.num_slots = num_slots
+        if bank is None:
+            # engine built with ServePolicies(bank=...) — the scheduler
+            # serves that bank without restating it
+            bank = engine.policies.bank
         self.bank = solvers.as_bank(bank) if bank is not None else None
 
     def warmup(self) -> float:
@@ -280,8 +310,7 @@ class ContinuousScheduler:
         t0 = time.perf_counter()
         while completed < len(requests):
             now = time.perf_counter() - t0
-            while pending and pending[0].arrival_s <= now:
-                ready.append(pending.pop(0))
+            poll_arrivals(pending, ready, now)
             free = [s for s in range(self.num_slots) if s not in owner]
             for slot in free:
                 if not ready:
@@ -405,8 +434,7 @@ class FixedBatchScheduler:
         completed = 0
         while completed < len(requests):
             now = time.perf_counter() - t0
-            while pending and pending[0].arrival_s <= now:
-                ready.append(pending.pop(0))
+            poll_arrivals(pending, ready, now)
             if len(ready) < self.micro_batch and pending:
                 # wait for a full batch while more arrivals are due
                 time.sleep(max(pending[0].arrival_s - now, 0.0))

@@ -4,7 +4,22 @@
       --requests 8 --micro-batch 4 --steps 5 [--guidance 7.5] \
       [--model unet|dit] [--kernels fused] [--tips adaptive] [--mesh 4] \
       [--ledger] [--continuous --slots 4 --arrival-rate 2.0 --burst 2] \
-      [--solver dpm2m,steps=12] [--tiers draft balanced quality]
+      [--solver dpm2m,steps=12] [--tiers draft balanced quality] \
+      [--replicas 2 --slo-steps 12 --preview-every 2]
+
+The policy flags (``--kernels``/``--tips``/--reuse/``--solver``/
+``--tiers``) are the shared ``launch.cli`` wiring: they parse into ONE
+frozen ``core.policies.ServePolicies`` bundle consumed by this CLI,
+``examples/generate_image.py`` and the cluster router alike.
+
+Cluster mode (``--replicas N``, DESIGN.md §13): N slot-state replicas
+behind occupancy-routed FIFO admission with decode off the hot step
+loop (``launch.router.ClusterRouter``).  ``--slo-steps D`` sets a
+round-denominated deadline — under overload requests degrade to a lower
+``--tiers`` bank entry instead of queueing (``--no-degrade`` for the
+queueing baseline); ``--preview-every K`` decodes in-flight latents
+every K rounds for streaming previews.  The merged ledger keeps the
+``--ledger`` headline bit-identical across replica counts.
 
 ``--model`` selects the denoiser family behind the contract (DESIGN.md
 §11): the BK-SDM UNet (default) or the DiT-S/2 transformer.  Every
@@ -83,38 +98,16 @@ import time
 
 
 def make_config(args):
-    from repro.core.precision import PrecisionPolicy
-    from repro.core.reuse import ReusePolicy
-    from repro.diffusion.pipeline import PipelineConfig
-    from repro.diffusion.sampler import DDIMConfig
-    from repro.kernels.dispatch import KernelPolicy
+    """Config for a CLI namespace — delegates to the shared wiring.
 
-    cfg = PipelineConfig.smoke() if args.smoke else PipelineConfig()
-    if getattr(args, "model", "unet") == "dit":
-        # swap the denoiser family; the engine/sampler/serving spine is
-        # family-agnostic through the denoiser contract (DESIGN.md §11)
-        from repro.diffusion.dit import DiTConfig
-        dit = DiTConfig()
-        cfg = dataclasses.replace(
-            cfg, unet=dit.smoke() if args.smoke else dit)
-    policy = KernelPolicy.parse(args.kernels)
-    precision = PrecisionPolicy.parse(args.tips)
-    reuse = ReusePolicy.parse(getattr(args, "reuse", "off"))
-    if reuse.enabled and reuse.capacity < 1.0:
-        # the serving engine runs the TEMPORAL path (cache starts
-        # invalid), where a sub-1.0 static gather capacity is illegal —
-        # clamp instead of tripping the engine guard so
-        # `--reuse edit,threshold=...` selects the edit threshold defaults
-        # while serving stays exact
-        reuse = dataclasses.replace(reuse, capacity=1.0)
-    return dataclasses.replace(
-        cfg,
-        unet=dataclasses.replace(cfg.unet, kernel_policy=policy,
-                                 precision=precision, reuse_policy=reuse),
-        ddim=DDIMConfig(
-            num_inference_steps=args.steps,
-            guidance_scale=args.guidance,
-            tips_active_iters=max(1, args.steps * 20 // 25)))
+    Kept as the module's historical entry point (benches build bare
+    namespaces for it); the flag semantics now live once in
+    ``repro.launch.cli`` so this CLI, the example, and the cluster
+    router cannot drift.
+    """
+    from repro.launch.cli import config_from_args
+
+    return config_from_args(args)
 
 
 def synthetic_requests(cfg, n: int, seed: int = 7):
@@ -307,15 +300,64 @@ def serve_continuous(cfg, num_requests: int, num_slots: int,
     return metrics
 
 
+def serve_cluster(cfg, num_requests: int, replicas: int, num_slots: int,
+                  arrival_rate: float = 0.0, burst: int = 1, key=None,
+                  ledger: bool = False, seed: int = 7, bank=None,
+                  slo_steps: int = 0, degrade: bool = True,
+                  preview_every: int = 0) -> dict:
+    """Serve a synthetic trace through the multi-replica cluster router.
+
+    ``replicas`` independent slot states share one engine's executables
+    (``launch.router.ClusterRouter``); ``slo_steps`` (>0) turns on
+    round-denominated SLO admission — under overload a request degrades
+    to a lower bank tier instead of queueing (``degrade=False`` is the
+    queueing baseline).  ``preview_every`` streams progressive preview
+    decodes of in-flight rows.  The ``--ledger`` headline merges every
+    replica's integer accumulator (``pipeline.energy_report_cluster``)
+    and is bit-identical at any replica count.
+    """
+    import jax
+
+    from repro.diffusion.engine import DiffusionEngine
+    from repro.launch.router import ClusterRouter, RouterSLO
+    from repro.launch.scheduler import (apply_trace, bursty_trace,
+                                        make_requests)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    eng = DiffusionEngine(cfg, key=key)
+    router = ClusterRouter(eng, replicas, num_slots, bank=bank,
+                           slo=RouterSLO(deadline_steps=slo_steps or None,
+                                         degrade=degrade),
+                           preview_every=preview_every)
+    requests = make_requests(cfg, num_requests, seed=seed,
+                             bank=router.bank)
+    if arrival_rate > 0:
+        gap = burst / arrival_rate
+        apply_trace(requests, bursty_trace(num_requests, burst, gap))
+    compile_s = router.warmup()
+    metrics = router.run(requests, ledger=ledger)
+    metrics.pop("states")
+    metrics.update(
+        compile_s=compile_s,
+        kernel_policy=cfg.unet.effective_kernel_policy().describe(),
+        precision_policy=cfg.unet.effective_precision().describe(),
+        reuse_policy=cfg.unet.reuse_policy.describe(),
+        steps_per_image=(cfg.ddim.num_inference_steps
+                         if router.bank is None
+                         else [p.num_steps for p in router.bank]),
+        workload="t2i",
+        arrival={"rate_per_s": arrival_rate, "burst": burst},
+    )
+    return metrics
+
+
 def main():
+    from repro.launch.cli import add_policy_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced geometry (CPU-friendly)")
-    ap.add_argument("--model", choices=("unet", "dit"), default="unet",
-                    help="denoiser family (DESIGN.md §11): the BK-SDM "
-                         "UNet (default) or the DiT-S/2 transformer; both "
-                         "serve through the same engine/scheduler spine "
-                         "and kernel dispatch table")
+    add_policy_args(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--micro-batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=5,
@@ -327,35 +369,6 @@ def main():
                     help="data-parallel degree: shard micro-batches over N "
                          "devices (simulated host devices on CPU, real on "
                          "TPU); 0 = single-device")
-    ap.add_argument("--kernels", default="auto",
-                    help="kernel policy: 'auto' (fused on compiled "
-                         "backends, reference on interpret backends), "
-                         "'reference', 'fused', 'autotuned' (fused with "
-                         "the committed block-size table), or per-op "
-                         "overrides like 'self_attention=fused,ffn=dbsc,"
-                         "ffn_quant=int8' "
-                         "(see repro.kernels.dispatch.KernelPolicy)")
-    ap.add_argument("--tips", default="fixed",
-                    help="precision policy: 'fixed', 'adaptive', or field "
-                         "overrides like 'adaptive,target=0.5,mid=true' "
-                         "(see repro.core.precision.PrecisionPolicy)")
-    ap.add_argument("--reuse", default="off",
-                    help="temporal patch-reuse policy: 'off', 'temporal', "
-                         "or overrides like 'temporal,threshold=0.1' "
-                         "(see repro.core.reuse.ReusePolicy)")
-    ap.add_argument("--solver", default="",
-                    help="sampler policy for EVERY request: a tier name "
-                         "('draft'|'balanced'|'quality'), a solver "
-                         "('ddim'|'plms'|'dpm2m'), or overrides like "
-                         "'dpm2m,steps=10,phases=detail_guard' "
-                         "(see repro.diffusion.solvers.SamplerPolicy); "
-                         "empty = the config's DDIM schedule")
-    ap.add_argument("--tiers", nargs="+", default=None,
-                    help="mixed quality-tier serving bank for "
-                         "--continuous: one SamplerPolicy spec per tier "
-                         "(e.g. --tiers draft balanced quality); requests "
-                         "cycle through the tiers round-robin inside one "
-                         "step executable")
     ap.add_argument("--edit", action="store_true",
                     help="serve the img2img/editing request class (shared "
                          "base latent + localized per-request edits) — "
@@ -370,6 +383,21 @@ def main():
                          "(0 = whole queue available at t=0)")
     ap.add_argument("--burst", type=int, default=1,
                     help="arrivals per burst for --arrival-rate")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="cluster-router mode (DESIGN.md §13): run N "
+                         "slot-engine replicas behind occupancy routing "
+                         "(0 = single scheduler); uses --slots per replica")
+    ap.add_argument("--slo-steps", type=int, default=0,
+                    help="router SLO: enqueue->image deadline in router "
+                         "rounds; under overload requests degrade to a "
+                         "lower --tiers entry instead of queueing "
+                         "(0 = no SLO)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="queue instead of degrading when the SLO cannot "
+                         "be met (the positive-control baseline)")
+    ap.add_argument("--preview-every", type=int, default=0,
+                    help="router streaming: decode progressive previews "
+                         "of in-flight rows every K rounds (0 = off)")
     args = ap.parse_args()
     if args.steps < 1:
         ap.error("--steps must be >= 1")
@@ -391,10 +419,30 @@ def main():
     if args.edit and not args.continuous:
         ap.error("--edit rides the slot scheduler's admit(latents=) path; "
                  "add --continuous")
-    if args.tiers and not args.continuous:
+    if args.tiers and not (args.continuous or args.replicas):
         ap.error("--tiers is mixed-tier serving over the slot engine; "
-                 "add --continuous (micro-batches share one scan "
-                 "executable — use --solver for a single policy)")
+                 "add --continuous or --replicas (micro-batches share one "
+                 "scan executable — use --solver for a single policy)")
+    if args.replicas < 0:
+        ap.error("--replicas must be >= 0")
+    if args.replicas:
+        if args.mesh > 1:
+            ap.error("--replicas runs the single-device slot runtime per "
+                     "replica (DESIGN.md §13); drop --mesh")
+        if args.edit:
+            ap.error("--replicas serves t2i traces; --edit rides the "
+                     "single-replica --continuous path")
+        if args.continuous:
+            ap.error("--replicas IS continuous batching across N slot "
+                     "states; drop --continuous")
+    if args.slo_steps and not args.replicas:
+        ap.error("--slo-steps is cluster-router admission; add --replicas")
+    if args.slo_steps and not args.no_degrade and not args.tiers:
+        ap.error("SLO degradation picks lower tiers from a bank; add "
+                 "--tiers (or --no-degrade for the queueing baseline)")
+    if args.preview_every and not args.replicas:
+        ap.error("--preview-every is cluster-router streaming; add "
+                 "--replicas")
     if args.tiers and args.solver:
         ap.error("--tiers and --solver are exclusive: a bank already "
                  "names every policy in flight")
@@ -411,20 +459,23 @@ def main():
             from repro.launch.mesh import simulate_host_devices
             simulate_host_devices(args.mesh)
 
+    from repro.launch.cli import config_from_args, policies_from_args
     from repro.launch.mesh import make_data_mesh
 
-    from repro.diffusion.solvers import SamplerPolicy, as_bank
-
     mesh = make_data_mesh(args.mesh) if args.mesh > 1 else None
-    cfg = make_config(args)
-    sampler_policy = SamplerPolicy.parse(args.solver) if args.solver \
-        else None
-    bank = (as_bank(tuple(SamplerPolicy.parse(t) for t in args.tiers))
-            if args.tiers else None)
+    # ONE parse of the policy surface feeds the config, the engine's
+    # bundle, and the scheduler/router bank — the CLIs cannot drift from
+    # each other or from the programmatic ServePolicies API
+    policies = policies_from_args(args)
+    cfg = config_from_args(args, policies=policies)
+    sampler_policy = policies.sampler
+    bank = policies.bank
     sampling = ("tiers " + "+".join(p.label() for p in bank) if bank
                 else sampler_policy.key() if sampler_policy
                 else f"ddim@{args.steps}")
-    batching = (f"continuous slots={args.slots}" if args.continuous
+    batching = (f"router replicas={args.replicas} slots={args.slots}"
+                if args.replicas
+                else f"continuous slots={args.slots}" if args.continuous
                 else f"micro-batch {args.micro_batch}")
     print(f"engine: model {args.model}, latent {cfg.unet.latent_size}^2, "
           f"sampling {sampling}, "
@@ -434,7 +485,17 @@ def main():
           f"tips {args.tips}, reuse {args.reuse}, "
           f"workload {'edit' if args.edit else 't2i'}, "
           f"mesh {'dp=' + str(args.mesh) if mesh is not None else 'none'}")
-    if args.continuous:
+    if args.replicas:
+        if bank is None and sampler_policy is not None:
+            bank = (sampler_policy,)      # single-tier bank
+        metrics = serve_cluster(cfg, args.requests, args.replicas,
+                                args.slots,
+                                arrival_rate=args.arrival_rate,
+                                burst=args.burst, ledger=args.ledger,
+                                bank=bank, slo_steps=args.slo_steps,
+                                degrade=not args.no_degrade,
+                                preview_every=args.preview_every)
+    elif args.continuous:
         if bank is None and sampler_policy is not None:
             bank = (sampler_policy,)      # single-tier bank
         metrics = serve_continuous(cfg, args.requests, args.slots,

@@ -1,0 +1,238 @@
+"""ServePolicies bundle tests — the unified serving-policy API (§13).
+
+The api_redesign contract: one frozen/hashable ``ServePolicies`` bundle
+is the single policy component of the engine's executable-cache keys,
+and every legacy spelling — per-policy engine kwargs, ``UNetConfig``
+fold-in knobs — normalizes onto the SAME bundle: identical cache keys
+(old and new call sites share executables), bit-identical images and
+ledgers, plus a ``repro legacy:``-prefixed DeprecationWarning naming the
+modern spelling.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.core.policies import (LEGACY_WARNING_PREFIX, ServePolicies)
+from repro.core.precision import PrecisionPolicy
+from repro.core.reuse import ReusePolicy
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import PipelineConfig, energy_report
+from repro.diffusion.solvers import TIERS, SamplerPolicy
+from repro.kernels.dispatch import KernelPolicy
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return PipelineConfig.smoke()
+
+
+# -- bundle semantics ------------------------------------------------------
+
+def test_parse_describe_round_trip():
+    specs = dict(kernels="fused", tips="adaptive,target=0.5",
+                 reuse="temporal,threshold=0.1",
+                 tiers=["draft", "balanced"])
+    pol = ServePolicies.parse(**specs)
+    d = pol.describe()
+    json.dumps(d)  # JSON-clean for serving metrics / bench records
+    assert d["kernels"] == KernelPolicy.parse("fused").describe()
+    assert d["precision"]["spotting"] == "adaptive"
+    assert d["precision"]["target_low_ratio"] == 0.5
+    assert d["reuse"]["enabled"] and d["reuse"]["threshold"] == 0.1
+    assert d["sampler"] is None
+    assert len(d["bank"]) == 2
+    # the same specs reconstruct an EQUAL (and hash-equal) bundle
+    again = ServePolicies.parse(**specs)
+    assert again == pol and hash(again) == hash(pol)
+    assert again.key() == pol.key()
+
+
+def test_parse_defaults_are_default_bundle():
+    assert ServePolicies.parse() == ServePolicies()
+    assert ServePolicies().key() == (KernelPolicy(), PrecisionPolicy(),
+                                     ReusePolicy(), None, None)
+
+
+def test_parse_solver_and_tiers_exclusive():
+    with pytest.raises(ValueError, match="exclusive"):
+        ServePolicies.parse(solver="draft", tiers=["draft", "quality"])
+
+
+def test_sampler_must_be_bank_entry():
+    bank = (TIERS["draft"], TIERS["quality"])
+    ok = ServePolicies(sampler=TIERS["draft"], bank=bank)
+    assert ok.sampler in ok.bank
+    with pytest.raises(ValueError, match="not an entry"):
+        ServePolicies(sampler=TIERS["balanced"], bank=bank)
+
+
+def test_with_sampling_keeps_other_axes():
+    pol = ServePolicies.parse(kernels="fused", tips="adaptive")
+    pol2 = pol.with_sampling(sampler=TIERS["draft"],
+                             bank=(TIERS["draft"],))
+    assert pol2.kernels == pol.kernels
+    assert pol2.precision == pol.precision
+    assert pol2.sampler == TIERS["draft"]
+    assert pol.sampler is None  # frozen: original untouched
+
+
+def test_apply_installs_axes_on_config(cfg):
+    pol = ServePolicies.parse(kernels="fused", tips="adaptive",
+                              reuse="temporal")
+    cfg2 = pol.apply(cfg)
+    assert cfg2.unet.kernel_policy == pol.kernels
+    assert cfg2.unet.precision == pol.precision
+    assert cfg2.unet.reuse_policy == pol.reuse
+    assert cfg.unet.kernel_policy != pol.kernels  # original untouched
+
+
+# -- legacy aliases: warnings ---------------------------------------------
+
+def test_legacy_config_knobs_warn(cfg):
+    with pytest.warns(DeprecationWarning,
+                      match="^" + LEGACY_WARNING_PREFIX):
+        dataclasses.replace(cfg.unet, use_dbsc_kernel=True)
+    with pytest.warns(DeprecationWarning,
+                      match="^" + LEGACY_WARNING_PREFIX):
+        dataclasses.replace(cfg.unet, tips_threshold=0.1)
+
+
+def test_legacy_engine_kwargs_warn(cfg):
+    with pytest.warns(DeprecationWarning,
+                      match="^" + LEGACY_WARNING_PREFIX):
+        DiffusionEngine(cfg, key=jax.random.PRNGKey(0),
+                        kernel_policy=KernelPolicy.parse("reference"))
+
+
+def test_legacy_kwargs_exclusive_with_policies(cfg):
+    with pytest.raises(ValueError, match="not both"):
+        DiffusionEngine(cfg, key=jax.random.PRNGKey(0),
+                        policies=ServePolicies(),
+                        precision_policy=PrecisionPolicy())
+
+
+# -- legacy aliases: identical cache keys ---------------------------------
+
+def _key_of(eng):
+    return eng._cache_key(2, False, None, None, None)
+
+
+def test_legacy_config_knobs_share_cache_key(cfg):
+    with pytest.warns(DeprecationWarning):
+        legacy_unet = dataclasses.replace(cfg.unet, use_dbsc_kernel=True,
+                                          tips_threshold=0.1)
+    legacy_cfg = dataclasses.replace(cfg, unet=legacy_unet)
+    modern = ServePolicies(
+        kernels=KernelPolicy(ffn="dbsc"),
+        precision=PrecisionPolicy(threshold=0.1))
+    key = jax.random.PRNGKey(0)
+    eng_legacy = DiffusionEngine(legacy_cfg, key=key)
+    eng_modern = DiffusionEngine(cfg, key=key, policies=modern)
+    assert _key_of(eng_legacy) == _key_of(eng_modern)
+    assert eng_legacy.policies == eng_modern.policies == modern
+
+
+def test_legacy_engine_kwargs_share_cache_key(cfg):
+    key = jax.random.PRNGKey(0)
+    with pytest.warns(DeprecationWarning):
+        eng_legacy = DiffusionEngine(
+            cfg, key=key,
+            kernel_policy=KernelPolicy.parse("reference"),
+            precision_policy=PrecisionPolicy.parse("adaptive"))
+    eng_modern = DiffusionEngine(
+        cfg, key=key,
+        policies=ServePolicies(kernels=KernelPolicy.parse("reference"),
+                               precision=PrecisionPolicy.parse("adaptive")))
+    assert _key_of(eng_legacy) == _key_of(eng_modern)
+    # and the sampler axes fold per call through the same bundle
+    pol = SamplerPolicy.parse("draft")
+    assert (eng_legacy._cache_key(1, False, None, pol, None)
+            == eng_modern._cache_key(1, False, None, pol, None))
+
+
+def test_bundle_is_single_cache_key_component(cfg):
+    eng = DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+    k = eng._cache_key(2, True, None, None, None)
+    # positions 0-3 stay load-bearing (batch, use_cfg, stats_rows, mesh);
+    # position 4 is the ONE policy component — a ServePolicies key tuple
+    assert k[:4] == (2, True, None, None)
+    assert k[4] == eng.policies
+    assert k[4].key() == ServePolicies.from_config(cfg.unet).key()
+
+
+# -- legacy aliases: bit-identical images and ledgers ---------------------
+
+def test_legacy_and_modern_spellings_bit_identical(cfg):
+    steps = 3
+    small = dataclasses.replace(
+        cfg, ddim=dataclasses.replace(cfg.ddim, num_inference_steps=steps,
+                                      tips_active_iters=2))
+    with pytest.warns(DeprecationWarning):
+        legacy_cfg = dataclasses.replace(
+            small, unet=dataclasses.replace(small.unet,
+                                            tips_threshold=0.02))
+    modern = ServePolicies(precision=PrecisionPolicy(threshold=0.02))
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(jax.random.PRNGKey(7),
+                              (2, small.text.max_len), 0,
+                              small.text.vocab_size)
+    out_legacy = DiffusionEngine(legacy_cfg, key=key).generate(
+        toks, jax.random.PRNGKey(1))
+    out_modern = DiffusionEngine(small, key=key, policies=modern).generate(
+        toks, jax.random.PRNGKey(1))
+    assert (out_legacy.images == out_modern.images).all()
+    rep_legacy = energy_report(legacy_cfg, out_legacy.stats)
+    rep_modern = energy_report(small, out_modern.stats)
+    assert rep_legacy.summary() == rep_modern.summary()
+
+
+# -- shared CLI wiring -----------------------------------------------------
+
+def test_cli_wiring_round_trips_policies():
+    import argparse
+
+    from repro.launch.cli import add_policy_args, policies_from_args
+
+    ap = argparse.ArgumentParser()
+    add_policy_args(ap)
+    args = ap.parse_args(["--kernels", "fused", "--tips", "adaptive",
+                          "--reuse", "temporal", "--tiers", "draft",
+                          "balanced"])
+    pol = policies_from_args(args)
+    assert pol == ServePolicies.parse(kernels="fused", tips="adaptive",
+                                      reuse="temporal",
+                                      tiers=["draft", "balanced"])
+
+
+def test_cli_wiring_clamps_serving_reuse_capacity():
+    import argparse
+
+    from repro.launch.cli import add_policy_args, policies_from_args
+
+    ap = argparse.ArgumentParser()
+    add_policy_args(ap)
+    args = ap.parse_args(["--reuse", "edit"])
+    pol = policies_from_args(args)
+    assert pol.reuse.enabled and pol.reuse.capacity == 1.0
+    raw = policies_from_args(args, clamp_reuse_capacity=False)
+    assert raw.reuse.capacity < 1.0
+
+
+def test_both_clis_consume_shared_wiring():
+    """The two CLIs and the router register flags through launch.cli."""
+    import ast
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    for rel in ("src/repro/launch/serve_diffusion.py",
+                "examples/generate_image.py",
+                "src/repro/launch/router.py"):
+        src = (root / rel).read_text()
+        assert "add_policy_args" in src, rel
+        tree = ast.parse(src)
+        dupes = [n.value for n in ast.walk(tree)
+                 if isinstance(n, ast.Constant)
+                 and n.value in ("--kernels", "--tips", "--solver")]
+        assert not dupes, f"{rel} re-registers shared policy flags {dupes}"

@@ -1,0 +1,214 @@
+"""Cluster-router tests — multi-replica serving, DESIGN.md §13.
+
+The contract under test:
+
+  * replicas are independent ``SlotState``s through ONE engine's cached
+    executables — per-request images are bit-identical to the one-shot
+    engine at any replica count, and the MERGED integer ledger
+    (``pipeline.merge_ledger_accums``) yields an energy headline
+    bit-identical across replica counts, routing decisions and admission
+    orders;
+  * admission is FIFO into the least-occupied replica;
+  * under overload with a ``RouterSLO``, requests DEGRADE to a lower
+    bank tier instead of queueing — deterministically, in round
+    arithmetic — and that beats the queueing baseline on SLO attainment
+    (the positive control);
+  * streaming previews decode in-flight latents between steps;
+  * the router never drops a request.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.precision import PrecisionPolicy
+from repro.diffusion.engine import DiffusionEngine
+from repro.diffusion.pipeline import (PipelineConfig,
+                                      energy_report_cluster,
+                                      energy_report_multi,
+                                      merge_ledger_accums)
+from repro.diffusion.solvers import SamplerPolicy
+from repro.launch.router import ClusterRouter, RouterSLO
+from repro.launch.scheduler import make_requests
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # knife-edge thresholds (modern spelling) keep every ledger counter
+    # input-sensitive — see tests/test_continuous.py
+    base = PipelineConfig.smoke()
+    t = base.unet.latent_size ** 2
+    return dataclasses.replace(
+        base,
+        unet=dataclasses.replace(
+            base.unet, pssa_threshold=1.0 / t,
+            precision=PrecisionPolicy(threshold=1.0 / base.unet.text_len)),
+        ddim=dataclasses.replace(base.ddim, num_inference_steps=3,
+                                 tips_active_iters=2))
+
+
+@pytest.fixture(scope="module")
+def eng(cfg):
+    return DiffusionEngine(cfg, key=jax.random.PRNGKey(0))
+
+
+BANK = (SamplerPolicy.parse("ddim,steps=4"),
+        SamplerPolicy.parse("ddim,steps=2"))
+
+
+def _serve(eng, replicas, slots, n=6, bank=None, slo=None,
+           preview_every=0, seed=7):
+    router = ClusterRouter(eng, replicas, slots, bank=bank, slo=slo,
+                           preview_every=preview_every)
+    reqs = make_requests(eng.cfg, n, seed=seed, bank=router.bank)
+    metrics = router.run(reqs, ledger=True)
+    return metrics, reqs
+
+
+def test_bit_identical_across_replica_counts_and_vs_one_shot(cfg, eng):
+    m1, reqs1 = _serve(eng, replicas=1, slots=2)
+    m2, reqs2 = _serve(eng, replicas=2, slots=2)
+    assert m1["dropped"] == 0 and m2["dropped"] == 0
+    # images: replica count is a pure scheduling change
+    for a, b in zip(reqs1, reqs2):
+        assert np.array_equal(a.image, b.image), a.rid
+    # merged ledger: bit-identical energy headline at any replica count
+    assert m1["energy"] == m2["energy"]
+    accums1 = [st.accum for st in m1["states"]]
+    accums2 = [st.accum for st in m2["states"]]
+    merged1, merged2 = (merge_ledger_accums(a) for a in (accums1, accums2))
+    for f in ("nnz", "ones_xor", "imp", "rows"):
+        assert (getattr(merged1, f) == getattr(merged2, f)).all(), f
+    # ... and to the SAME requests served one-shot (extends the slot
+    # oracle of tests/test_continuous.py to the router).  One-shot
+    # batches match the slot width — the bit-identity contract is per
+    # batch signature (a batch-1 UNet call is a different XLA program)
+    import jax.numpy as jnp
+
+    fetched = []
+    for i in range(0, len(reqs1), 2):
+        chunk = reqs1[i:i + 2]
+        out = eng.generate(
+            jnp.concatenate([r.tokens for r in chunk], axis=0), None,
+            latents=jnp.concatenate([r.latents for r in chunk], axis=0))
+        arr = np.asarray(out.images)
+        for j, r in enumerate(chunk):
+            assert np.array_equal(arr[j], r.image), r.rid
+        fetched.append(out.stats.ledger_fetch())
+    rep_oneshot = energy_report_multi(cfg, fetched)
+    assert m1["energy"] == {k: float(v)
+                            for k, v in rep_oneshot.summary().items()}
+
+
+def test_fifo_admission_into_least_occupied_replica(cfg, eng):
+    router = ClusterRouter(eng, replicas=2, slots_per_replica=2)
+    reqs = make_requests(cfg, 6, seed=11)
+    admitted = [ev for ev in router.stream(reqs) if ev["event"] == "admitted"]
+    # FIFO: admission follows arrival (= rid) order
+    assert [ev["rid"] for ev in admitted] == sorted(r.rid for r in reqs)
+    # least-occupancy routing: the first wave alternates replicas
+    assert [ev["replica"] for ev in admitted[:4]] == [0, 1, 0, 1]
+    assert all(r.replica is not None for r in reqs)
+
+
+def test_overload_degrades_instead_of_queueing(cfg, eng):
+    """The worked overload example: deterministic round arithmetic."""
+    def overload_requests():
+        reqs = make_requests(cfg, 6, seed=7, bank=BANK)
+        for r in reqs:           # everyone asks for the expensive tier
+            r.policy_index = 0
+            r.tier = BANK[0].label()
+        return reqs
+
+    router = ClusterRouter(eng, replicas=1, slots_per_replica=2,
+                           bank=BANK,
+                           slo=RouterSLO(deadline_steps=6, degrade=True))
+    reqs = overload_requests()
+    m = router.run(reqs, ledger=True)
+    assert m["dropped"] == 0
+    assert sorted(r.finish_round - r.arrival_round for r in reqs) \
+        == [4, 4, 6, 6, 8, 8]
+    assert m["slo"]["met"] == 4
+    assert m["degraded_requests"] == 4
+    assert m["degraded_per_tier"] == {BANK[0].label(): 4}
+    # the two non-degraded requests kept the expensive tier
+    assert sum(r.tier == BANK[0].label() for r in reqs) == 2
+    assert sum(r.tier == BANK[1].label() for r in reqs) == 4
+    # ledger stays clean: banked per-policy image counts match service
+    per_policy = m["energy"]["per_policy"]
+    assert [e["images"] for e in per_policy] == [2, 4]
+    assert m["energy"]["images"] == 6
+
+    # positive control: queueing instead (degrade=False) misses the SLO
+    router_q = ClusterRouter(eng, replicas=1, slots_per_replica=2,
+                             bank=BANK,
+                             slo=RouterSLO(deadline_steps=6,
+                                           degrade=False))
+    reqs_q = overload_requests()
+    m_q = router_q.run(reqs_q, ledger=False)
+    assert m_q["dropped"] == 0
+    assert sorted(r.finish_round - r.arrival_round for r in reqs_q) \
+        == [4, 4, 8, 8, 12, 12]
+    assert m_q["slo"]["met"] == 2
+    assert m_q.get("degraded_requests", 0) == 0
+    # FIFO survives overload in both modes
+    for rr in (reqs, reqs_q):
+        assert [r.rid for r in sorted(rr, key=lambda r: r.admitted_s)] \
+            == [r.rid for r in rr]
+    assert m["slo"]["attainment"] > m_q["slo"]["attainment"]
+
+
+def test_streaming_previews(cfg, eng):
+    router = ClusterRouter(eng, replicas=1, slots_per_replica=2,
+                           preview_every=1)
+    reqs = make_requests(cfg, 2, seed=3)
+    events = list(router.stream(reqs))
+    previews = [ev for ev in events if ev["event"] == "preview"]
+    # steps=3, previews every round: each request previews mid-flight
+    assert previews and sum(r.previews for r in reqs) == len(previews)
+    for r in reqs:
+        assert r.previews >= 1
+        assert r.first_preview_s is not None
+        assert r.first_preview_s <= r.finished_s
+    for ev in previews:
+        assert ev["image"].shape == reqs[0].image.shape
+        assert 0 < ev["step"] < cfg.ddim.num_inference_steps
+    # event stream is complete and ordered per request
+    for r in reqs:
+        kinds = [ev["event"] for ev in events if ev["rid"] == r.rid]
+        assert kinds[0] == "admitted" and kinds[-1] == "finished"
+
+
+def test_merge_ledger_accums_sums_and_guards():
+    from repro.diffusion.stats import LedgerAccum
+
+    a = LedgerAccum.zeros(3, 4)
+    b = dataclasses.replace(a, nnz=a.nnz + 2, rows=a.rows + 1)
+    c = dataclasses.replace(a, nnz=a.nnz + 5)
+    merged = merge_ledger_accums([b, c])
+    assert (merged.nnz == 7).all()
+    assert (merged.rows == 1).all()
+    assert (merged.imp == 0).all()
+    # exact/associative integer addition: merge order cannot matter
+    swapped = merge_ledger_accums([c, b])
+    assert (merged.nnz == swapped.nnz).all()
+    with pytest.raises(ValueError, match="no accumulators"):
+        merge_ledger_accums([])
+    with pytest.raises(ValueError, match="mismatched"):
+        merge_ledger_accums([a, LedgerAccum.zeros(2, 4)])
+
+
+def test_router_guards(cfg, eng):
+    with pytest.raises(ValueError, match="replicas"):
+        ClusterRouter(eng, 0, 2)
+    with pytest.raises(ValueError, match="bank"):
+        ClusterRouter(eng, 1, 2, slo=RouterSLO(deadline_steps=4))
+    with pytest.raises(ValueError, match="engines"):
+        ClusterRouter(eng, 2, 2, engines=[eng])
+    # a bank-less router refuses banked requests, like the scheduler
+    router = ClusterRouter(eng, 1, 2)
+    reqs = make_requests(cfg, 2, seed=5)
+    reqs[1].policy_index = 1
+    with pytest.raises(ValueError, match="policy_index"):
+        list(router.stream(reqs))
